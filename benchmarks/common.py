@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: timing + CSV emission + SSIM."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def ssim(a: np.ndarray, b: np.ndarray, window: int = 8) -> float:
+    """Mean SSIM with a uniform window (Wang et al. 2004 simplified form).
+
+    a, b: (C, H, W) in [0, 1].
+    """
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    c1, c2 = 0.01 ** 2, 0.03 ** 2
+
+    def blocks(x):
+        C, H, W = x.shape
+        Hb, Wb = H // window, W // window
+        return x[:, : Hb * window, : Wb * window].reshape(
+            C, Hb, window, Wb, window
+        ).transpose(0, 1, 3, 2, 4).reshape(C, Hb * Wb, window * window)
+
+    xa, xb = blocks(a), blocks(b)
+    mu_a, mu_b = xa.mean(-1), xb.mean(-1)
+    va, vb = xa.var(-1), xb.var(-1)
+    cov = ((xa - mu_a[..., None]) * (xb - mu_b[..., None])).mean(-1)
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a**2 + mu_b**2 + c1) * (va + vb + c2)
+    )
+    return float(s.mean())
+
+
+def synthetic_photo(rng: np.random.Generator, c: int = 3, m: int = 32) -> np.ndarray:
+    """Structured synthetic 'photo': smooth gradients + shapes (SSIM-friendly,
+    unlike white noise)."""
+    y, x = np.mgrid[0:m, 0:m] / m
+    img = np.stack([
+        0.5 + 0.4 * np.sin(2 * np.pi * (x * (i + 1) + y)) for i in range(c)
+    ])
+    cx, cy, r = rng.uniform(0.3, 0.7, 3) * [1, 1, 0.4]
+    mask = ((x - cx) ** 2 + (y - cy) ** 2) < r ** 2
+    img = img + 0.3 * mask[None]
+    return np.clip(img + 0.02 * rng.standard_normal(img.shape), 0, 1)

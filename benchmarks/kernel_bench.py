@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks.
+
+Wall-clock here times the XLA reference path (the Pallas kernels execute in
+interpret mode on this CPU container — numerically validated, not
+representative of TPU timing); the derived column carries the structural
+numbers that matter for the TPU roofline: FLOPs, bytes, arithmetic intensity,
+and the VMEM footprint implied by the chosen BlockSpecs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from .common import emit, time_call
+import jax
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # morphing (provider): CIFAR-scale and LM-embedding-scale
+    for name, (R, kappa, q) in {
+        "cifar_kappa1": (256, 1, 3072),
+        "cifar_mc": (256, 3, 1024),
+        "vlm_patches": (1024, 8, 960),     # llama-3.2 d_in=7680, kappa=8
+    }.items():
+        x = jnp.asarray(rng.standard_normal((R, kappa * q)).astype(np.float32))
+        core = jnp.asarray((rng.standard_normal((q, q)) / np.sqrt(q)).astype(np.float32))
+        fn = jax.jit(lambda a, c: ref.block_diag_matmul_ref(a, c, kappa))
+        t = time_call(fn, x, core)
+        flops = 2 * R * kappa * q * q
+        bytes_ = 4 * (R * kappa * q * 2 + q * q)
+        bm, bn, bk = min(128, R), min(128, q), min(128, q)
+        vmem = 4 * (bm * bk + bk * bn + 2 * bm * bn)
+        emit(f"kernel/block_diag_{name}", t,
+             f"flops={flops:.3g} ai={flops/bytes_:.1f} vmem_tile={vmem/1024:.0f}KiB")
+
+    # aug-conv GEMM (developer): paper CIFAR geometry
+    B, K, N = 256, 3072, 64 * 1024
+    tmat = jnp.asarray(rng.standard_normal((B, K)).astype(np.float32))
+    cmat = jnp.asarray((rng.standard_normal((K, N)) / np.sqrt(K)).astype(np.float32))
+    fn = jax.jit(ref.aug_gemm_ref)
+    t = time_call(fn, tmat, cmat, iters=5)
+    flops = 2 * B * K * N
+    emit("kernel/aug_gemm_cifar", t,
+         f"flops={flops:.3g} ai={flops/(4*(B*K+K*N+B*N)):.1f} "
+         f"mxu_tiles={B//128}x{N//128}x{K//512}")
+
+    # wkv6 chunked vs naive (rwkv6 long-context path)
+    Bb, H, T, D = 2, 8, 256, 64
+    r, k, v = [jnp.asarray(rng.standard_normal((Bb, H, T, D)).astype(np.float32)) for _ in range(3)]
+    lw = -jnp.exp(jnp.asarray(rng.standard_normal((Bb, H, T, D)).astype(np.float32)))
+    u = jnp.asarray(rng.standard_normal((H, D)).astype(np.float32))
+    s0 = jnp.zeros((Bb, H, D, D), jnp.float32)
+    from repro.models.blocks import _wkv_chunked
+    naive = jax.jit(lambda *a: ref.wkv6_ref(*a))
+    chunk = jax.jit(lambda r, k, v, lw, u, s0: _wkv_chunked(r, k, v, lw, u, s0, 16))
+    tn = time_call(naive, r, k, v, lw, u, s0, iters=5)
+    tc = time_call(chunk, r, k, v, lw, u, s0, iters=5)
+    emit("kernel/wkv6_naive_scan", tn, f"T={T}")
+    emit("kernel/wkv6_chunked", tc, f"T={T} speedup={tn/tc:.2f}x (matmul-form)")

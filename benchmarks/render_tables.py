@@ -1,0 +1,35 @@
+"""Render the §Roofline BASELINE / OPTIMIZED tables into EXPERIMENTS.md from
+the dry-run artifacts (analysis_baseline snapshot vs current analysis).
+
+    PYTHONPATH=src:. python -m benchmarks.render_tables
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from .roofline import markdown_table
+
+EXP = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+
+
+def main() -> None:
+    text = EXP.read_text()
+    base = markdown_table(source="analysis_baseline")
+    opt = markdown_table(source="analysis")
+    text = re.sub(
+        r"<!-- BASELINE_TABLE -->(.|\n)*?(?=\n### OPTIMIZED)",
+        base + "\n",
+        text,
+        count=1,
+    ) if "<!-- BASELINE_TABLE -->" not in text else text.replace(
+        "<!-- BASELINE_TABLE -->", base
+    )
+    text = text.replace("<!-- OPTIMIZED_TABLE -->", opt)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md tables rendered "
+          f"(baseline rows: {base.count(chr(10))-1}, optimized rows: {opt.count(chr(10))-1})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Roofline derivation (deliverable g): three terms per (arch x shape), from
+the dry-run's compiled artifacts.
+
+  t_comp = HLO_FLOPs / (chips * 197e12)        [bf16 peak, TPU v5e]
+  t_mem  = HLO_bytes / (chips * 819e9)
+  t_coll = collective_bytes / (chips * 50e9)
+
+HLO FLOPs/bytes come from the *analysis* pass (unrolled g=1/g=2 extrapolation
+— exact; XLA:CPU cost_analysis counts while bodies once, see dryrun.py), and
+are per-device already under SPMD.  Collective bytes likewise.  MODEL_FLOPS is
+the analytic useful compute (6*N_active*D for training, 2*N_active*D for
+prefill/decode, + exact attention term), giving the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES, get_config, skip_reason
+from repro.models.api import Model
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def analytic_model_flops(arch: str, shape_name: str) -> float:
+    """Useful FLOPs per step, whole cluster (not per device)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult = B * S, 6
+    elif shape.kind == "prefill":
+        tokens, mult = B * S, 2
+    else:
+        tokens, mult = B * 1, 2
+    flops = mult * n_active * tokens
+
+    # attention score/value term (causal halves it; decode reads S_cache)
+    fwd_bwd = 3 if shape.kind == "train" else 1
+    kinds = cfg.layer_kinds()
+    for k in kinds:
+        mix = k.split("_")[0]
+        if mix in ("attn", "global", "bidir", "mla", "dec"):
+            hd = cfg.head_dim
+            H = cfg.n_heads
+            if shape.kind == "decode":
+                flops += 2 * 2 * B * H * hd * S * fwd_bwd
+            else:
+                flops += 2 * 2 * B * H * hd * S * S // 2 * fwd_bwd
+        elif mix == "local":
+            w = cfg.sliding_window or S
+            eff = min(w, S)
+            if shape.kind == "decode":
+                flops += 2 * 2 * B * cfg.n_heads * cfg.head_dim * eff * fwd_bwd
+            else:
+                flops += 2 * 2 * B * cfg.n_heads * cfg.head_dim * S * eff * fwd_bwd
+    return float(flops)
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod1",
+              source: str = "analysis") -> dict | None:
+    f = ART / source / mesh / f"{arch}__{shape}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def roofline_row(arch: str, shape: str, chips: int = 256,
+                 source: str = "analysis") -> dict | None:
+    rec = load_cell(arch, shape, source=source)
+    if rec is None or rec.get("status") != "ok":
+        return None
+    # analysis-pass numbers are per-device; scale to cluster totals
+    hlo_flops = rec["flops"] * chips
+    hlo_bytes = rec["bytes"] * chips
+    coll_bytes = rec["coll_total"] * chips
+    t_comp = hlo_flops / (chips * PEAK_FLOPS)
+    t_mem = hlo_bytes / (chips * HBM_BW)
+    t_coll = coll_bytes / (chips * LINK_BW)
+    terms = {"comp": t_comp, "mem": t_mem, "coll": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = analytic_model_flops(arch, shape)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape,
+        "t_comp_s": t_comp, "t_mem_s": t_mem, "t_coll_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": hlo_flops,
+        "useful_ratio": model_flops / hlo_flops if hlo_flops else 0.0,
+        # fraction of roofline at the dominant bound: useful compute time /
+        # achievable step time (the score: 1.0 = running at the roofline)
+        "roofline_fraction": (model_flops / (chips * PEAK_FLOPS)) / bound if bound else 0.0,
+        "coll_by_kind": rec.get("coll", {}),
+    }
+
+
+def full_table(chips: int = 256, source: str = "analysis") -> list[dict]:
+    rows = []
+    for a in ARCHS:
+        for s in SHAPES:
+            if skip_reason(get_config(a), SHAPES[s]):
+                continue
+            r = roofline_row(a, s, chips, source=source)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def markdown_table(source: str = "analysis", chips: int = 256) -> str:
+    rows = full_table(chips, source=source)
+    out = [
+        "| arch | shape | t_comp | t_mem | t_coll | dominant | useful | roofline-frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_seconds(r['t_comp_s'])} | "
+            f"{fmt_seconds(r['t_mem_s'])} | {fmt_seconds(r['t_coll_s'])} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_seconds(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def run() -> None:
+    from .common import emit
+    rows = full_table()
+    for r in rows:
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"comp={fmt_seconds(r['t_comp_s'])} mem={fmt_seconds(r['t_mem_s'])} "
+            f"coll={fmt_seconds(r['t_coll_s'])} dom={r['dominant']} "
+            f"useful={r['useful_ratio']:.2f} roofline_frac={r['roofline_fraction']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper §4.2 security table: the three attack bounds across settings, plus an
+HONEST empirical attack on the discrete LM mode (frequency analysis against a
+vocabulary permutation) quantifying DESIGN.md §4's stated limitation."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import analyze_security
+from repro.core.lm import TokenMorpher
+from repro.core.security import vocab_perm_log10_p
+from repro.data.pipeline import DataConfig, SyntheticLM
+from .common import emit
+
+
+def run() -> None:
+    # ---- paper's analytical table (CIFAR/VGG-16 + ImageNet-scale) ---------
+    for name, kw in {
+        "cifar_vgg16_kappa1": dict(alpha=3, beta=64, m=32, n=32, p=3, kappa=1),
+        "cifar_vgg16_mc": dict(alpha=3, beta=64, m=32, n=32, p=3, kappa=3),
+        "imagenet_resnet_kappa1": dict(alpha=3, beta=64, m=224, n=112, p=7, kappa=1),
+    }.items():
+        s = analyze_security(sigma=0.5, **kw)
+        emit(
+            f"security/{name}", 0.0,
+            f"log2_Pbf={s.log2_p_m_bf:.3g} log10_Prand={s.log10_p_r_bf:.1f} "
+            f"log2_Par={s.log2_p_m_ar:.3g} kappa_mc={s.kappa_mc} dt_pairs={s.dt_pairs}",
+        )
+
+    # ---- discrete-mode brute-force bound vs frequency-analysis reality ----
+    vocab = 512
+    emit("security/lm_vocab_perm_bruteforce", 0.0,
+         f"log10_P={vocab_perm_log10_p(vocab):.0f} (blind brute force)")
+
+    src = SyntheticLM(DataConfig(vocab=vocab, seq_len=256, global_batch=64, seed=0))
+    tm = TokenMorpher.create(9, vocab)
+    # adversary sees morphed tokens; knows the *public* unigram distribution
+    morphed = np.concatenate(
+        [np.asarray(tm.perm)[src.batch(i)["tokens"]].ravel() for i in range(8)]
+    )
+    raw = np.concatenate([src.batch(i)["tokens"].ravel() for i in range(8)])
+    # frequency matching: sort both alphabets by empirical frequency
+    def rank(tokens):
+        counts = np.bincount(tokens, minlength=vocab)
+        return np.argsort(-counts, kind="stable")
+    guess = np.empty(vocab, np.int64)
+    guess[rank(morphed)] = rank(raw)          # morphed id -> guessed raw id
+    correct = (guess[np.asarray(tm.perm)] == np.arange(vocab)).mean()
+    emit("security/lm_freq_analysis_attack", 0.0,
+         f"recovered={correct:.1%} of vocab (vs ~0% brute force) -> "
+         "discrete mode is a substitution cipher; see DESIGN.md#4")

@@ -1,0 +1,18 @@
+"""Batched serving over the MoLe trust boundary (paper's inference stage):
+provider morphs prompts -> developer prefills + decodes with Aug-fused params
+-> provider unmorphs generations.
+
+    PYTHONPATH=src python examples/serve_mole.py
+"""
+from repro.launch import serve as serve_mod
+
+
+def main():
+    serve_mod.main([
+        "--arch", "gemma2_27b", "--smoke", "--requests", "8",
+        "--prompt-len", "32", "--gen", "16", "--mole", "token",
+    ])
+
+
+if __name__ == "__main__":
+    main()

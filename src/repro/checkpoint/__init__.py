@@ -1,0 +1,4 @@
+"""Atomic, async, reshard-on-restore checkpointing."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,134 @@
+"""Fault-tolerant checkpointing: atomic, async, reshard-on-restore.
+
+Layout (one directory per step):
+    <root>/step_000420.tmp/...      (written first)
+    <root>/step_000420/             (atomic rename on completion)
+        manifest.json               {step, tree structure, leaf dtypes/shapes}
+        leaf_00000.npy ...          (one file per pytree leaf, fp32/raw)
+
+Restore accepts a *different* mesh / sharding tree than the one that saved
+(elastic restart): leaves are loaded on host and ``jax.device_put`` with the
+new shardings.  Atomicity = write-to-tmp + rename; a crash mid-save leaves a
+``.tmp`` dir that is ignored and garbage-collected.
+
+Async mode hands the (host-fetched) arrays to a writer thread so the train
+loop continues; ``wait()`` joins before the next save or exit.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str | Path, keep: int = 3, async_save: bool = True):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._gc_tmp()
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        self.wait()
+        # fetch to host synchronously (cheap relative to serialization)
+        host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
+        paths, _, _ = _flatten_with_paths(tree)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, paths, host_leaves, extra or {})
+            )
+            self._thread.start()
+        else:
+            self._write(step, paths, host_leaves, extra or {})
+
+    def _write(self, step: int, paths, leaves, extra: dict) -> None:
+        final = self.root / f"step_{step:08d}"
+        tmp = self.root / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {
+            "step": step,
+            "extra": extra,
+            "leaves": [
+                {"path": p, "file": f"leaf_{i:05d}.npy",
+                 "dtype": str(l.dtype), "shape": list(l.shape)}
+                for i, (p, l) in enumerate(zip(paths, leaves))
+            ],
+        }
+        for i, leaf in enumerate(leaves):
+            # bfloat16 has no portable npy representation: store raw view
+            if leaf.dtype.name == "bfloat16":
+                np.save(tmp / f"leaf_{i:05d}.npy", leaf.view(np.uint16))
+            else:
+                np.save(tmp / f"leaf_{i:05d}.npy", leaf)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._retain()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.root.glob("step_*")
+            if not p.name.endswith(".tmp") and (p / "manifest.json").exists()
+        )
+        return steps[-1] if steps else None
+
+    def restore(
+        self, step: int, like: Any, shardings: Any | None = None
+    ) -> tuple[Any, dict]:
+        """Load step into the structure of ``like``; optionally device_put
+        each leaf with the matching sharding (reshard-on-restore)."""
+        d = self.root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        paths, like_leaves, treedef = _flatten_with_paths(like)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        sh_leaves = (
+            jax.tree.leaves(shardings) if shardings is not None else [None] * len(paths)
+        )
+        out = []
+        for p, ref, sh in zip(paths, like_leaves, sh_leaves):
+            e = by_path[p]
+            arr = np.load(d / e["file"])
+            if e["dtype"] == "bfloat16":
+                arr = arr.view(jax.numpy.bfloat16.dtype)
+            assert list(arr.shape) == list(ref.shape), (p, arr.shape, ref.shape)
+            out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        return jax.tree.unflatten(jax.tree.structure(like), out), manifest["extra"]
+
+    # ------------------------------------------------------------ plumbing
+    def _retain(self) -> None:
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.root.glob("step_*")
+            if not p.name.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        for p in self.root.glob("step_*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,43 @@
+"""Config registry: the 10 assigned architectures + shape set.
+
+``get_config(name)`` / ``get_smoke_config(name)`` / ``ARCHS`` / ``SHAPES``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.base import ModelConfig
+from .shapes import SHAPES, ShapeConfig, input_specs, skip_reason, supports_cell
+
+ARCHS: tuple[str, ...] = (
+    "command_r_35b",
+    "gemma2_27b",
+    "deepseek_7b",
+    "phi3_mini_3p8b",
+    "deepseek_moe_16b",
+    "deepseek_v2_lite_16b",
+    "recurrentgemma_2b",
+    "llama32_vision_90b",
+    "rwkv6_3b",
+    "whisper_tiny",
+)
+
+
+def _module(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCHS}")
+    return importlib.import_module(f".{name}", __package__)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).FULL
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ShapeConfig", "get_config", "get_smoke_config",
+    "input_specs", "skip_reason", "supports_cell",
+]

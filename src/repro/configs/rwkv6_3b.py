@@ -1,0 +1,39 @@
+"""RWKV-6 (Finch) 3B [arXiv:2404.05892; hf] — attention-free SSM family.
+
+32L d_model=2560 d_ff=8960 vocab=65536; heads of 64 with data-dependent
+per-channel decay; time-mix via chunked linear attention (TPU-native form,
+DESIGN.md §5) + channel-mix.
+"""
+from ..models.base import ModelConfig, RwkvCfg
+
+FULL = ModelConfig(
+    name="rwkv6_3b",
+    family="ssm",
+    vocab=65_536,
+    d_model=2560,
+    n_heads=40,                 # d_model / rwkv.head_dim
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    block_pattern=("rwkv",),
+    n_groups=32,
+    norm="layernorm",
+    act="swiglu",               # unused by rwkv blocks (channel-mix is fixed)
+    # chunk=128/subchunk=0 chosen by measurement (§Perf H3): at matched
+    # chunking the fused decay-tensor einsum beats the GEMM-form intra-chunk
+    # on the XLA cost model (2.5x fewer bytes); the GEMM form (subchunk=16)
+    # and the VMEM-resident Pallas kernel (kernels/wkv6) remain available for
+    # real-TPU evaluation where MXU-vs-VPU placement changes the answer.
+    rwkv=RwkvCfg(head_dim=64, chunk=128, subchunk=0, ddlerp_rank=32, decay_rank=64),
+    source="arXiv:2404.05892 + hf:RWKV/rwkv-6-world-3b",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        FULL, vocab=512, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=224, n_groups=2,
+        rwkv=RwkvCfg(head_dim=16, chunk=4, ddlerp_rank=8, decay_rank=16),
+        param_dtype="float32", dtype="float32",
+    )

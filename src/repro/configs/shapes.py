@@ -1,0 +1,93 @@
+"""Assigned input-shape set (one per assignment row) + input_specs builders.
+
+  train_4k     seq 4096,   global batch 256   -> train_step
+  prefill_32k  seq 32768,  global batch 32    -> prefill_step
+  decode_32k   KV 32768,   global batch 128   -> serve_step (1 new token)
+  long_500k    KV 524288,  global batch 1     -> serve_step, sub-quadratic only
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no allocation —
+for every model input of a (arch, shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# Architectures with sub-quadratic long-context paths (DESIGN.md §5): the
+# long_500k cell runs only for these; pure full-attention archs skip it.
+SUBQUADRATIC = {"rwkv6_3b", "recurrentgemma_2b", "gemma2_27b"}
+
+
+def supports_cell(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return cfg.name in SUBQUADRATIC
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if supports_cell(cfg, shape):
+        return None
+    return (
+        f"{cfg.name} is pure full-attention; long_500k requires a sub-quadratic "
+        "long-context path (run for SSM/hybrid/local-global archs only)"
+    )
+
+
+def _frontend_spec(cfg: ModelConfig, batch: int) -> dict:
+    out = {}
+    if cfg.frontend is None:
+        return out
+    key = "frames" if cfg.frontend.kind == "audio" else "patches"
+    out[key] = jax.ShapeDtypeStruct(
+        (batch, cfg.frontend.n_tokens, cfg.frontend.d_in), jnp.bfloat16
+    )
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for the cell, as ShapeDtypeStructs.
+
+    train:   {tokens, targets, [patches|frames]}
+    prefill: {tokens, [patches|frames]}
+    decode:  {token (B,1), t ()}  — caches are built separately
+             (``Model.abstract_cache``), since they are state, not stream.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        specs.update(_frontend_spec(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        specs.update(_frontend_spec(cfg, B))
+        return specs
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), i32),
+            "t": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,159 @@
+"""d2r — data-to-row-vector unrolling and conv-as-matrix construction.
+
+This is the foundation of MoLe (paper §3.1): the first convolutional layer is
+rewritten as a single matrix ``C`` of shape ``(alpha*m*m, beta*n*n)`` so that
+
+    F^r = D^r @ C
+
+where ``D^r`` is the row-major unrolled input (channels outermost) and ``F^r``
+unrolls the output features the same way.  Paper eq. (1) gives the index map for
+stride-1 SAME convolutions with odd ``p``; we generalize to arbitrary stride and
+padding and validate against ``jax.lax.conv_general_dilated`` in the tests.
+
+Conventions (paper §2.2):
+  * data ``D`` has shape ``(alpha, m, m)`` (channels, rows, cols);
+  * kernels ``K`` have shape ``(alpha, beta, p, p)`` — ``K[i, j]`` maps input
+    channel ``i`` to output channel ``j``;
+  * unrolling is row-major within a channel, channels concatenated in order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ConvGeometry",
+    "unroll",
+    "unroll_batch",
+    "reroll",
+    "reroll_batch",
+    "conv_as_matrix",
+    "conv_reference",
+    "d2r_conv_apply",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """Static geometry of the first convolutional layer."""
+
+    alpha: int  # input channels
+    beta: int   # output channels
+    m: int      # input spatial size (m x m)
+    p: int      # kernel size (p x p)
+    stride: int = 1
+    padding: int | None = None  # None => SAME-style (p-1)//2, the paper's eq. (1)
+
+    @property
+    def pad(self) -> int:
+        return (self.p - 1) // 2 if self.padding is None else self.padding
+
+    @property
+    def n(self) -> int:
+        """Output spatial size."""
+        return (self.m + 2 * self.pad - self.p) // self.stride + 1
+
+    @property
+    def in_features(self) -> int:
+        return self.alpha * self.m * self.m
+
+    @property
+    def out_features(self) -> int:
+        return self.beta * self.n * self.n
+
+
+def unroll(d: jax.Array) -> jax.Array:
+    """``(alpha, m, m) -> (alpha*m*m,)`` row-major, channels outermost."""
+    return d.reshape(-1)
+
+
+def unroll_batch(d: jax.Array) -> jax.Array:
+    """``(B, alpha, m, m) -> (B, alpha*m*m)``."""
+    return d.reshape(d.shape[0], -1)
+
+
+def reroll(fr: jax.Array, channels: int, size: int) -> jax.Array:
+    """Inverse of :func:`unroll` for features: ``(beta*n*n,) -> (beta, n, n)``."""
+    return fr.reshape(channels, size, size)
+
+
+def reroll_batch(fr: jax.Array, channels: int, size: int) -> jax.Array:
+    return fr.reshape(fr.shape[0], channels, size, size)
+
+
+def conv_as_matrix(kernels: np.ndarray, geom: ConvGeometry) -> np.ndarray:
+    """Build the d2r matrix ``C`` (paper eq. (1), generalized).
+
+    ``kernels`` has shape ``(alpha, beta, p, p)``.  Returns ``C`` with shape
+    ``(alpha*m*m, beta*n*n)`` such that ``unroll(D) @ C == unroll(conv(D, K))``.
+
+    The paper's index map (stride 1, SAME, odd ``p``)::
+
+        x = n^2 j + n c + d
+        y = m^2 i + m (c + a - 1) + (d + b - 1)
+
+    generalizes with stride ``s`` and padding ``o`` to::
+
+        y = m^2 i + m (s c + a - o) + (s d + b - o)
+
+    entries falling outside ``[0, m)`` in either spatial coordinate are dropped
+    (they correspond to zero padding).
+    """
+    kernels = np.asarray(kernels)
+    alpha, beta, p, _ = kernels.shape
+    assert (alpha, p) == (geom.alpha, geom.p), (kernels.shape, geom)
+    assert beta == geom.beta
+    m, n, s, o = geom.m, geom.n, geom.stride, geom.pad
+
+    # Broadcast the full index space (i, j, c, d, a, b).
+    i = np.arange(alpha)[:, None, None, None, None, None]
+    j = np.arange(beta)[None, :, None, None, None, None]
+    c = np.arange(n)[None, None, :, None, None, None]
+    d = np.arange(n)[None, None, None, :, None, None]
+    a = np.arange(p)[None, None, None, None, :, None]
+    b = np.arange(p)[None, None, None, None, None, :]
+
+    row_in = s * c + a - o          # input row hit by (output row c, kernel row a)
+    col_in = s * d + b - o
+    valid = (row_in >= 0) & (row_in < m) & (col_in >= 0) & (col_in < m)
+
+    x = n * n * j + n * c + d
+    y = m * m * i + m * row_in + col_in
+
+    full = (alpha, beta, n, n, p, p)
+    vals = np.broadcast_to(kernels[:, :, None, None, :, :], full)
+    valid = np.broadcast_to(valid, full)
+    x = np.broadcast_to(x, full)[valid]
+    y = np.broadcast_to(y, full)[valid]
+    v = vals[valid]
+
+    C = np.zeros((geom.in_features, geom.out_features), dtype=kernels.dtype)
+    C[y, x] = v  # index pairs are unique: (i,a,b) -> y injective for fixed (c,d)
+    return C
+
+
+@partial(jax.jit, static_argnums=(2,))
+def conv_reference(data: jax.Array, kernels: jax.Array, geom: ConvGeometry) -> jax.Array:
+    """Oracle: direct convolution via ``lax.conv_general_dilated``.
+
+    ``data``: (B, alpha, m, m); ``kernels``: (alpha, beta, p, p).
+    Returns (B, beta, n, n).
+    """
+    w = jnp.transpose(kernels, (1, 0, 2, 3))  # OIHW
+    return jax.lax.conv_general_dilated(
+        data,
+        w,
+        window_strides=(geom.stride, geom.stride),
+        padding=[(geom.pad, geom.pad), (geom.pad, geom.pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def d2r_conv_apply(data: jax.Array, C: jax.Array, geom: ConvGeometry) -> jax.Array:
+    """Apply a convolution through its d2r matrix. (B, a, m, m) -> (B, b, n, n)."""
+    fr = unroll_batch(data) @ C
+    return reroll_batch(fr, geom.beta, geom.n)

@@ -1,0 +1,59 @@
+"""MoLe deployment transforms: fuse provider secrets into developer params.
+
+Two moments in the protocol use this:
+
+  * **From-scratch training** (developer never had raw data): the pipeline's
+    ProviderStage morphs the stream; the embedding table the developer learns
+    *is* the Aug-Embedding — no transform needed.  By symmetry of init, the
+    training trajectory on morphed data is the permuted image of the raw one
+    (verified in tests/test_mole_lm.py).
+
+  * **Pre-trained transfer / serving** (the paper's Fig. 1 flow): the
+    developer ships the first layer trained on public data; the provider
+    fuses the secrets and returns the Aug artifact.  ``fuse_lm_params``
+    performs that fusion on a params tree:
+      - token mode: embedding rows through pi^{-1} (AugE[pi(v)] = E[v]); the
+        untied LM head's columns likewise, so logits come out in morphed vocab
+        order (channel randomization played on the output side) and morphed
+        labels give the identical loss;
+      - embedding mode: frontend projection -> M^{-1} @ W (optionally with an
+        output-feature permutation, which requires downstream retraining just
+        as the paper's rand() does).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .lm import EmbeddingMorpher, TokenMorpher, fuse_aug_embedding, fuse_aug_head, fuse_aug_projection
+from ..models.base import ModelConfig
+
+
+def fuse_lm_params(
+    params: Any,
+    cfg: ModelConfig,
+    token_morpher: TokenMorpher | None = None,
+    embed_morpher: EmbeddingMorpher | None = None,
+) -> Any:
+    """Return a params tree whose first layer consumes *morphed* inputs."""
+    out = dict(params)
+    if cfg.family == "audio":
+        inner = dict(out["dec"])
+        if token_morpher is not None:
+            inner["embed"] = fuse_aug_embedding(inner["embed"], token_morpher)
+            if "head" in inner:
+                inner["head"] = fuse_aug_head(inner["head"], token_morpher)
+        out["dec"] = inner
+        if embed_morpher is not None:
+            out["enc_proj"] = fuse_aug_projection(out["enc_proj"], embed_morpher)
+        return out
+
+    if token_morpher is not None:
+        out["embed"] = fuse_aug_embedding(out["embed"], token_morpher)
+        if not cfg.tie_embeddings and "head" in out:
+            out["head"] = fuse_aug_head(out["head"], token_morpher)
+    if embed_morpher is not None and "frontend_proj" in out:
+        out["frontend_proj"] = fuse_aug_projection(out["frontend_proj"], embed_morpher)
+    return out

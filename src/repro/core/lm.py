@@ -1,0 +1,127 @@
+"""MoLe for LM-family architectures (DESIGN.md §4).
+
+Two delivery modes, both first-layer-only so they compose with every backbone
+in the assigned pool:
+
+**Discrete (token) morphing** — the unique norm-preserving invertible linear
+map of one-hot rows that keeps data in token space is a vocabulary permutation
+``pi``.  The provider ships ``pi(tokens)`` (labels permuted identically); the
+developer's Aug-Embedding is the table with ``pi`` pre-composed
+(``E_aug[v] = E[pi^{-1}(v)]`` i.e. ``E_aug[pi(v)] = E[v]``), and the LM head /
+logit order plays the role of the paper's feature-channel randomization.
+Gather stays a gather: zero runtime overhead.
+
+**Continuous (embedding/frontend) morphing** — for architectures whose input
+stream is continuous per-position features (VLM patch embeddings, audio
+frames, or embedding-level delivery), the paper's scheme applies *verbatim*
+with ``m^2 -> 1``, ``alpha -> d_in``: block-diagonal ``M`` over the feature
+dim, ``AugProj = M^{-1} W_in P_out`` fused into the input projection, with
+``P_out`` a secret permutation of the ``d_model`` output features.
+
+Security notes are in ``core.security`` and DESIGN.md §4 (the discrete mode is
+a substitution cipher; quantified by benchmarks/security_table.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .morphing import MorphCore, make_core, morph
+
+__all__ = [
+    "TokenMorpher",
+    "EmbeddingMorpher",
+    "fuse_aug_embedding",
+    "fuse_aug_projection",
+]
+
+
+@dataclasses.dataclass
+class TokenMorpher:
+    """Provider-side secret vocabulary permutation (discrete MoLe)."""
+
+    perm: np.ndarray       # pi: original id -> morphed id
+    inv_perm: np.ndarray   # pi^{-1}
+
+    @classmethod
+    def create(cls, seed: int, vocab: int) -> "TokenMorpher":
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(vocab)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(vocab)
+        return cls(perm=perm, inv_perm=inv)
+
+    @property
+    def vocab(self) -> int:
+        return self.perm.shape[0]
+
+    def morph_tokens(self, tokens: jax.Array) -> jax.Array:
+        """Apply pi elementwise (tokens and labels alike)."""
+        return jnp.asarray(self.perm)[tokens]
+
+    def unmorph_tokens(self, tokens: jax.Array) -> jax.Array:
+        return jnp.asarray(self.inv_perm)[tokens]
+
+
+def fuse_aug_embedding(embedding: jax.Array, morpher: TokenMorpher) -> jax.Array:
+    """Developer-facing Aug-Embedding table: row ``pi(v)`` holds ``E[v]``.
+
+    ``AugE[morph(tokens)] == E[tokens]`` — exact equivalence, the discrete
+    analogue of paper eq. (5).
+    """
+    return jnp.asarray(embedding)[jnp.asarray(morpher.inv_perm)]
+
+
+def fuse_aug_head(head: jax.Array, morpher: TokenMorpher) -> jax.Array:
+    """LM-head fused so logits come out in *morphed* vocab order.
+
+    ``head``: (d_model, V).  Loss against morphed labels is then identical to
+    the original loss — the vocab-order shuffle is the paper's channel
+    randomization played on the output side.
+    """
+    return jnp.asarray(head)[:, jnp.asarray(morpher.inv_perm)]
+
+
+@dataclasses.dataclass
+class EmbeddingMorpher:
+    """Provider-side continuous morphing over a per-position feature dim."""
+
+    core: MorphCore
+    out_perm: np.ndarray | None  # secret permutation of d_model outputs
+
+    @classmethod
+    def create(
+        cls,
+        seed: int,
+        d_in: int,
+        kappa: int,
+        d_out: int | None = None,
+        core_mode: str = "orthogonal",
+    ) -> "EmbeddingMorpher":
+        rng = np.random.default_rng(seed)
+        core = make_core(rng, d_in, kappa, mode=core_mode)
+        perm = rng.permutation(d_out) if d_out is not None else None
+        return cls(core=core, out_perm=perm)
+
+    def morph_features(self, x: jax.Array) -> jax.Array:
+        """(..., d_in) -> morphed (..., d_in); eq. 2 with m^2=1, alpha=d_in."""
+        return morph(x, self.core)
+
+
+def fuse_aug_projection(w_in: jax.Array, morpher: EmbeddingMorpher) -> jax.Array:
+    """``AugProj = M^{-1} @ W_in @ P_out`` — the LM Aug-Conv analogue.
+
+    ``w_in``: (d_in, d_out).  For morphed features ``t``:
+    ``t @ AugProj == (x @ W_in)[..., perm]`` exactly.
+    """
+    q = morpher.core.q
+    d_in, d_out = w_in.shape
+    inv = jnp.asarray(morpher.core.inverse, w_in.dtype)
+    blocks = jnp.reshape(w_in, (morpher.core.kappa, q, d_out))
+    fused = jnp.einsum("ij,kjl->kil", inv, blocks).reshape(d_in, d_out)
+    if morpher.out_perm is not None:
+        fused = fused[:, jnp.asarray(morpher.out_perm)]
+    return fused

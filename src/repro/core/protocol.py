@@ -1,0 +1,127 @@
+"""End-to-end MoLe protocol roles (paper Fig. 1).
+
+Flow:
+  1. Developer trains his network on a *public* dataset and sends the first
+     conv layer's kernels ``K`` to the provider.
+  2. Provider draws the secret ``M'`` (+ channel permutation), builds
+     ``C^{ac} = rand(M^{-1} C)`` and ships it to the developer, then streams
+     morphed batches ``T^r = D^r M``.
+  3. Developer replaces layer 1 with the fixed ``C^{ac}`` and trains/serves on
+     morphed data; the rest of the network is untouched.
+
+The classes below are the trusted simulation of both parties; the artifacts
+that actually cross the trust boundary are only ``K`` (dev→prov) and
+``C^{ac}``/``T^r`` (prov→dev), mirroring the paper's threat model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aug_conv import AugConv, apply_aug_conv, build_aug_conv, random_channel_perm
+from .d2r import ConvGeometry, reroll_batch, unroll_batch
+from .morphing import MorphCore, make_core, morph, unmorph
+from . import overhead as _overhead
+from . import security as _security
+
+__all__ = ["DataProvider", "Developer", "MoLeSession"]
+
+
+class DataProvider:
+    """Entity A: owns private data + the secrets (M', channel perm)."""
+
+    def __init__(
+        self,
+        geom: ConvGeometry,
+        kappa: int,
+        seed: int = 0,
+        core_mode: str = "orthogonal",
+    ):
+        self.geom = geom
+        self.kappa = kappa
+        rng = np.random.default_rng(seed)
+        self._core: MorphCore = make_core(
+            rng, geom.in_features, kappa, mode=core_mode
+        )
+        self._perm = random_channel_perm(rng, geom.beta)
+
+    # -- protocol step 2a: build the developer-facing Aug-Conv artifact ----
+    def build_aug_conv(self, dev_kernels: np.ndarray) -> AugConv:
+        return build_aug_conv(dev_kernels, self.geom, self._core, self._perm)
+
+    # -- protocol step 2b: stream morphed data ------------------------------
+    def morph_batch(self, data: jax.Array) -> jax.Array:
+        """(B, alpha, m, m) -> morphed row vectors (B, alpha*m*m)."""
+        return morph(unroll_batch(data), self._core)
+
+    def morph_rows(self, rows: jax.Array) -> jax.Array:
+        """Morph already-unrolled rows (B, F)."""
+        return morph(rows, self._core)
+
+    # -- provider-side utilities (never cross the trust boundary) -----------
+    def unmorph_rows(self, rows: jax.Array) -> jax.Array:
+        return unmorph(rows, self._core)
+
+    def morphed_image(self, data: jax.Array) -> jax.Array:
+        """Morph and re-roll to image shape — for SSIM / visualization."""
+        t = self.morph_batch(data)
+        return reroll_batch(t, self.geom.alpha, self.geom.m)
+
+    def security(self, sigma: float = 0.5) -> _security.MoLeSecurity:
+        g = self.geom
+        return _security.analyze(
+            sigma=sigma, alpha=g.alpha, beta=g.beta, m=g.m, n=g.n, p=g.p,
+            kappa=self.kappa,
+        )
+
+    def overhead(self, network_macs: int, dataset_images: int) -> _overhead.OverheadReport:
+        g = self.geom
+        return _overhead.analyze(
+            alpha=g.alpha, beta=g.beta, m=g.m, n=g.n, p=g.p, kappa=self.kappa,
+            network_macs=network_macs, dataset_images=dataset_images,
+        )
+
+
+class Developer:
+    """Entity B: receives only ``C^{ac}``; runs the network on morphed rows."""
+
+    def __init__(self, aug_matrix: np.ndarray, geom: ConvGeometry):
+        # NOTE: a real developer receives the ndarray only; AugConv.channel_perm
+        # never reaches this class.
+        self.aug_matrix = jnp.asarray(aug_matrix)
+        self.geom = geom
+
+    def first_layer(self, morphed_rows: jax.Array) -> jax.Array:
+        """(B, F_in) -> (B, beta, n, n) feature maps for the rest of the net."""
+        fr = apply_aug_conv(morphed_rows, self.aug_matrix)
+        return reroll_batch(fr, self.geom.beta, self.geom.n)
+
+
+@dataclasses.dataclass
+class MoLeSession:
+    """Convenience bundle wiring both parties for examples/benchmarks."""
+
+    provider: DataProvider
+    developer: Developer
+    geom: ConvGeometry
+
+    @classmethod
+    def create(
+        cls,
+        dev_kernels: np.ndarray,
+        geom: ConvGeometry,
+        kappa: int = 1,
+        seed: int = 0,
+        core_mode: str = "orthogonal",
+    ) -> "MoLeSession":
+        provider = DataProvider(geom, kappa=kappa, seed=seed, core_mode=core_mode)
+        aug = provider.build_aug_conv(dev_kernels)
+        developer = Developer(aug.matrix, geom)
+        return cls(provider=provider, developer=developer, geom=geom)
+
+    def deliver(self, data: jax.Array) -> jax.Array:
+        """Provider morphs a batch; developer extracts features from it."""
+        return self.developer.first_layer(self.provider.morph_batch(data))

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline + MoLe provider stage."""
+from .pipeline import DataConfig, Pipeline, ProviderStage, SyntheticLM
+
+__all__ = ["DataConfig", "Pipeline", "ProviderStage", "SyntheticLM"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for MoLe's compute hot-spots (validated interpret=True).
+
+  block_diag  — provider-side morphing: repeated-block-diagonal GEMM (eq. 2-4)
+  aug_gemm    — developer-side Aug-Conv forward: T @ C^{ac} (eq. 5)
+  wkv6        — chunked RWKV-6 linear-attention scan (rwkv6_3b long-context)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+public wrappers with reference fallback for non-tileable shapes.
+"""
+from .ops import aug_conv_forward, morph_rows
+from .wkv6 import wkv6_chunked
+from . import ref
+
+__all__ = ["aug_conv_forward", "morph_rows", "wkv6_chunked", "ref"]

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: repeated-block-diagonal GEMM (provider-side morphing).
+
+Computes ``y = reshape(x, (R, kappa, q)) @ M'`` — i.e. ``x @ M`` where ``M`` is
+block-diagonal with the same ``q x q`` core repeated ``kappa`` times (paper
+eq. 2-4) — without ever materializing ``M``.
+
+TPU mapping (DESIGN.md §3): the core ``M'`` tile is revisited across the whole
+row grid, so it stays VMEM-resident while row tiles of ``x`` stream from HBM;
+arithmetic intensity grows with ``R * kappa``.  MXU alignment: tiles are
+(bm, bk) x (bk, bn) with bm/bn/bk multiples of 8/128 where shapes allow.
+
+Grid: (R/bm, kappa, q/bn, q/bk) — the contraction axis ``kk`` innermost,
+accumulated in an fp32 VMEM scratch, written back on the last ``kk`` step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific helpers are import-safe on CPU
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(x_ref, m_ref, o_ref, acc_ref, *, n_kk: int):
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], m_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == n_kk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_diag_matmul(
+    x: jax.Array,        # (R, F) with F = kappa * q
+    core: jax.Array,     # (q, q)
+    kappa: int,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,   # CPU container: interpret=True; False on real TPU
+) -> jax.Array:
+    R, F = x.shape
+    q = core.shape[0]
+    assert F == kappa * q, (F, kappa, q)
+    bm = min(bm, R)
+    bn = min(bn, q)
+    bk = min(bk, q)
+    assert R % bm == 0 and q % bn == 0 and q % bk == 0, (R, bm, q, bn, bk)
+    n_kk = q // bk
+
+    grid = (R // bm, kappa, q // bn, n_kk)
+    # x viewed as (R, kappa*q): block (i, block-col) where block-col counts in
+    # bk units: column offset = k*q + kk*bk  ->  block index k*(q//bk) + kk.
+    x_spec = pl.BlockSpec((bm, bk), lambda i, k, j, kk: (i, k * n_kk + kk))
+    m_spec = pl.BlockSpec((bk, bn), lambda i, k, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, k, j, kk: (i, k * (q // bn) + j))
+
+    kwargs = {}
+    if pltpu is not None:
+        kwargs["scratch_shapes"] = [pltpu.VMEM((bm, bn), jnp.float32)]
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        )
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_kk=n_kk),
+        grid=grid,
+        in_specs=[x_spec, m_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((R, F), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, core)

@@ -1,0 +1,63 @@
+"""jit'd public wrappers for the Pallas kernels, with shape-driven dispatch.
+
+On this CPU container kernels run in ``interpret=True`` mode (the kernel body
+executes in Python for correctness validation); on a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile to Mosaic.
+Shapes that don't satisfy the kernels' tiling constraints fall back to the
+pure-jnp reference (same math, XLA-fused) so the public API is total.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_diag import block_diag_matmul
+from .aug_gemm import aug_gemm
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@partial(jax.jit, static_argnames=("kappa", "use_kernel", "interpret"))
+def morph_rows(
+    x: jax.Array, core: jax.Array, kappa: int,
+    use_kernel: bool = True, interpret: bool | None = None,
+) -> jax.Array:
+    """Provider-side morphing: x (R, kappa*q) @ blockdiag(core)."""
+    R, F = x.shape
+    q = core.shape[0]
+    tiles_ok = (R % min(128, R) == 0) and q % min(128, q) == 0 and (
+        min(128, R) > 0
+    )
+    # kernel wants R and q divisible by the chosen tiles; be conservative
+    kernel_ok = use_kernel and R >= 8 and (R % 8 == 0) and (q % 128 == 0 or q <= 512)
+    if kernel_ok and q % min(128, q) == 0 and R % min(128, R) == 0:
+        bm = min(128, R)
+        bn = bk = min(128, q)
+        return block_diag_matmul(
+            x, core, kappa, bm=bm, bn=bn, bk=bk,
+            interpret=_interpret_default() if interpret is None else interpret,
+        )
+    return ref.block_diag_matmul_ref(x, core, kappa)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def aug_conv_forward(
+    t: jax.Array, c_ac: jax.Array,
+    use_kernel: bool = True, interpret: bool | None = None,
+) -> jax.Array:
+    """Developer-side Aug-Conv layer: t (B, K) @ c_ac (K, N)."""
+    B, K = t.shape
+    N = c_ac.shape[1]
+    bm, bn, bk = min(128, B), min(128, N), min(512, K)
+    if use_kernel and B % bm == 0 and N % bn == 0 and K % bk == 0:
+        return aug_gemm(
+            t, c_ac, bm=bm, bn=bn, bk=bk,
+            interpret=_interpret_default() if interpret is None else interpret,
+        )
+    return ref.aug_gemm_ref(t, c_ac)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_diag_matmul_ref(x: jax.Array, core: jax.Array, kappa: int) -> jax.Array:
+    """y = x @ blockdiag(core x kappa);  x: (R, kappa*q), core: (q, q)."""
+    R, F = x.shape
+    q = core.shape[0]
+    blocks = x.reshape(R, kappa, q)
+    out = jnp.einsum(
+        "rkq,qp->rkp", blocks.astype(jnp.float32), core.astype(jnp.float32)
+    )
+    return out.reshape(R, F).astype(x.dtype)
+
+
+def aug_gemm_ref(t: jax.Array, c_ac: jax.Array) -> jax.Array:
+    return jnp.dot(
+        t.astype(jnp.float32), c_ac.astype(jnp.float32)
+    ).astype(t.dtype)
+
+
+def wkv6_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+    u: jax.Array, s0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Naive token-by-token RWKV-6 recurrence (the semantic oracle).
+
+    r/k/v/logw: (B, H, T, D); u: (H, D); s0: (B, H, D, D).
+      out_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(s, inp):
+        rt, kt, vt, lwt = inp
+        kv = jnp.einsum("bhd,bhv->bhdv", kt, vt)
+        out = jnp.einsum("bhd,bhdv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lwt)[..., None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, logw))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 2), s_fin

@@ -1,0 +1,87 @@
+"""Step builders: train / prefill / decode, with microbatch gradient
+accumulation, remat, and pinned in/out shardings for AOT lowering.
+
+These are the functions the dry-run lowers and the drivers execute; they are
+pure (params/opt/caches in -> out) so checkpointing and restart are trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+from ..optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    optimizer: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    microbatch: int | None = None   # per-DEVICE-GROUP microbatch count: None=1 shot
+    remat: bool = True
+
+
+def _split_micro(batch: dict, n_micro: int) -> dict:
+    def rs(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return {k: rs(v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, hp: TrainHParams):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=hp.remat)
+
+    def train_step(params, opt_state, batch):
+        n_micro = hp.microbatch or 1
+        if n_micro > 1:
+            micro = _split_micro(batch, n_micro)
+
+            def body(acc, mb):
+                gsum, lsum = acc
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        params, opt_state, metrics = adamw.apply(
+            hp.optimizer, params, grads, opt_state
+        )
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    """(params, batch, caches) -> (last-token logits, caches)."""
+
+    def prefill_step(params, batch, caches):
+        return model.prefill_with_cache(params, batch, caches)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    """(params, token (B,1), t scalar, caches) -> (logits (B,1,V), caches)."""
+
+    def decode_step(params, token, t, caches):
+        return model.decode(params, token, t, caches)
+
+    return decode_step

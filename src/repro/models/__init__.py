@@ -1,0 +1,21 @@
+"""Model zoo: 10 assigned LM-family architectures + VGG (paper experiment)."""
+from .base import (
+    FrontendCfg,
+    MLACfg,
+    MoECfg,
+    MoLeCfg,
+    ModelConfig,
+    ParamDef,
+    RnnCfg,
+    RwkvCfg,
+    abstract_params,
+    init_params,
+    param_axes,
+)
+from .api import Model, cross_entropy
+
+__all__ = [
+    "FrontendCfg", "MLACfg", "MoECfg", "MoLeCfg", "ModelConfig", "ParamDef",
+    "RnnCfg", "RwkvCfg", "abstract_params", "init_params", "param_axes",
+    "Model", "cross_entropy",
+]

@@ -1,0 +1,137 @@
+"""Unified model API — what the launcher, dry-run, tests and examples consume.
+
+``Model(cfg)`` exposes:
+  schema() / abstract_params() / init(key) / axes()
+  loss(params, batch, remat)           — next-token CE (mean over tokens)
+  logits(params, batch)                — full-sequence logits
+  prefill(params, batch, max_len)      — (last-position logits, caches)
+  decode(params, token, t, caches)     — one-token step
+  cache_schema(batch, max_len) / abstract_cache / init_cache
+
+Batches are dicts:
+  token LMs:  {"tokens": (B,S) i32, "targets": (B,S) i32}
+  vlm:        + {"patches": (B, n_tokens, d_in) f32-stub}
+  audio:      + {"frames": (B, n_frames, d_in) f32-stub}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    ModelConfig,
+    abstract_params,
+    init_params,
+    param_axes,
+)
+from . import stack as S
+from . import whisper as W
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token CE; logits fp32 (B, S, V), targets (B, S) int."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def schema(self) -> dict:
+        if self.cfg.family == "audio":
+            return W.whisper_schema(self.cfg)
+        return S.model_schema(self.cfg)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.schema(), self.cfg.pdtype)
+
+    def axes(self) -> Any:
+        return param_axes(self.schema())
+
+    def init(self, key: jax.Array) -> Any:
+        return init_params(key, self.schema(), self.cfg.pdtype)
+
+    def param_count(self) -> int:
+        import numpy as np
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(self.abstract_params()))
+
+    # -- caches ------------------------------------------------------------
+    def cache_schema(self, batch: int, max_len: int) -> dict:
+        if self.cfg.family == "audio":
+            return W.whisper_cache_schema(self.cfg, batch, max_len)
+        return S.model_cache_schema(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int) -> Any:
+        return abstract_params(self.cache_schema(batch, max_len), self.cfg.adtype)
+
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        return init_params(
+            jax.random.key(0), self.cache_schema(batch, max_len), self.cfg.adtype
+        )
+
+    # -- compute -----------------------------------------------------------
+    def _ctx(self, batch: dict) -> jax.Array | None:
+        if "patches" in batch:
+            return batch["patches"].astype(self.cfg.adtype)
+        return None
+
+    def logits(self, params, batch: dict, remat: bool = False) -> jax.Array:
+        if self.cfg.family == "audio":
+            lg, _ = W.forward(params, self.cfg, batch["frames"], batch["tokens"], remat=remat)
+            return lg
+        lg, _ = S.forward(
+            params, self.cfg, batch["tokens"], ctx=self._ctx(batch), remat=remat
+        )
+        return lg
+
+    def loss(self, params, batch: dict, remat: bool = False) -> jax.Array:
+        if self.cfg.fused_ce:
+            if self.cfg.family == "audio":
+                enc = W.encode(params, batch["frames"], self.cfg, remat=remat)
+                h = S.hidden_states(params["dec"], self.cfg, batch["tokens"],
+                                    ctx=enc, remat=remat)
+                return S.fused_ce(params["dec"], self.cfg, h, batch["targets"])
+            h = S.hidden_states(params, self.cfg, batch["tokens"],
+                                ctx=self._ctx(batch), remat=remat)
+            return S.fused_ce(params, self.cfg, h, batch["targets"])
+        return cross_entropy(self.logits(params, batch, remat=remat), batch["targets"])
+
+    def prefill(self, params, batch: dict, max_len: int):
+        B = batch["tokens"].shape[0]
+        caches = self.init_cache(B, max_len)
+        if self.cfg.family == "audio":
+            lg, caches = W.forward(
+                params, self.cfg, batch["frames"], batch["tokens"],
+                caches=caches, write_cache=True,
+            )
+            return lg[:, -1:], caches
+        lg, caches = S.forward(
+            params, self.cfg, batch["tokens"], ctx=self._ctx(batch),
+            caches=caches, write_cache=True,
+        )
+        return lg[:, -1:], caches
+
+    def prefill_with_cache(self, params, batch: dict, caches):
+        """Prefill into caller-provided (e.g. sharded-abstract) caches."""
+        if self.cfg.family == "audio":
+            lg, caches = W.forward(
+                params, self.cfg, batch["frames"], batch["tokens"],
+                caches=caches, write_cache=True,
+            )
+        else:
+            lg, caches = S.forward(
+                params, self.cfg, batch["tokens"], ctx=self._ctx(batch),
+                caches=caches, write_cache=True,
+            )
+        return lg[:, -1:], caches
+
+    def decode(self, params, token: jax.Array, t: jax.Array, caches):
+        if self.cfg.family == "audio":
+            return W.decode_step(params, self.cfg, token, t, caches)
+        return S.decode_step(params, self.cfg, token, t, caches)

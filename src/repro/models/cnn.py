@@ -1,0 +1,116 @@
+"""VGG-style CNN for the paper's own experiment (§4.4): CIFAR classification
+with the first conv layer optionally replaced by a fixed Aug-Conv matrix.
+
+Three experiment groups (examples/paper_vgg_cifar.py):
+  1. baseline     — VGG on original data;
+  2. mole         — first layer = fixed C^{ac}, trained on *morphed* data;
+  3. no_augconv   — unmodified VGG trained directly on morphed data (sanity:
+                    accuracy should collapse, paper reports 89.3% -> 60.5%).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.d2r import ConvGeometry, reroll_batch, unroll_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class VGGConfig:
+    in_channels: int = 3
+    image_size: int = 32
+    # channel widths per stage; each stage = len(widths[i]) convs + maxpool
+    stages: tuple[tuple[int, ...], ...] = ((64, 64), (128, 128), (256, 256, 256),
+                                           (512, 512, 512), (512, 512, 512))
+    classes: int = 10
+    kernel: int = 3
+
+    @property
+    def first_geom(self) -> ConvGeometry:
+        return ConvGeometry(
+            alpha=self.in_channels, beta=self.stages[0][0],
+            m=self.image_size, p=self.kernel,
+        )
+
+    def conv_shapes(self):
+        c_in = self.in_channels
+        out = []
+        for stage in self.stages:
+            for c_out in stage:
+                out.append((c_in, c_out))
+                c_in = c_out
+        return out
+
+
+def vgg16() -> VGGConfig:
+    return VGGConfig()
+
+
+def vgg_small() -> VGGConfig:
+    """Reduced config for CPU-scale experiments."""
+    return VGGConfig(stages=((16, 16), (32, 32), (64, 64)), image_size=16)
+
+
+def init(key: jax.Array, cfg: VGGConfig) -> dict:
+    params: dict = {"convs": [], "head": {}}
+    shapes = cfg.conv_shapes()
+    keys = jax.random.split(key, len(shapes) + 2)
+    for k, (ci, co) in zip(keys[: len(shapes)], shapes):
+        fan = ci * cfg.kernel * cfg.kernel
+        params["convs"].append({
+            "w": jax.random.normal(k, (co, ci, cfg.kernel, cfg.kernel)) * (2.0 / fan) ** 0.5,
+            "b": jnp.zeros((co,)),
+        })
+    spatial = cfg.image_size // (2 ** len(cfg.stages))
+    feat = cfg.stages[-1][-1] * max(spatial, 1) ** 2
+    params["head"] = {
+        "w": jax.random.normal(keys[-2], (feat, cfg.classes)) * (1.0 / feat) ** 0.5,
+        "b": jnp.zeros((cfg.classes,)),
+    }
+    return params
+
+
+def first_layer_kernels(params: dict, cfg: VGGConfig):
+    """Developer->provider artifact: (alpha, beta, p, p) for core.d2r."""
+    return jnp.transpose(params["convs"][0]["w"], (1, 0, 2, 3))
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    return y + b[None, :, None, None]
+
+
+def apply(
+    params: dict, x: jax.Array, cfg: VGGConfig,
+    aug_matrix: jax.Array | None = None,
+) -> jax.Array:
+    """Forward.  With ``aug_matrix`` the input must be *morphed rows* (B, F)
+    and the first conv is replaced by the fixed matrix (frozen, as the paper
+    treats C^{ac} as a fixed feature extractor)."""
+    geom = cfg.first_geom
+
+    if aug_matrix is not None:
+        fr = x @ jax.lax.stop_gradient(aug_matrix.astype(x.dtype))
+        h = reroll_batch(fr, geom.beta, geom.n)
+        h = jax.nn.relu(h + params["convs"][0]["b"][None, :, None, None])
+    else:
+        if x.ndim == 2:  # rows (sanity group: plain VGG fed morphed rows)
+            x = reroll_batch(x, geom.alpha, geom.m)
+        h = jax.nn.relu(_conv(x, params["convs"][0]["w"], params["convs"][0]["b"]))
+
+    layer = 1  # conv 0 consumed above
+    for si, stage in enumerate(cfg.stages):
+        remaining = len(stage) - 1 if si == 0 else len(stage)
+        for _ in range(remaining):
+            h = jax.nn.relu(_conv(h, params["convs"][layer]["w"], params["convs"][layer]["b"]))
+            layer += 1
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        )
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["head"]["w"] + params["head"]["b"]

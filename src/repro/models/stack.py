@@ -1,0 +1,371 @@
+"""Generic layer-stack assembly: schema + apply for full models.
+
+A model is: input embedding (token table and/or frontend projection) →
+[prefix blocks] → scan over ``n_groups`` repeated block groups → [suffix
+blocks] → final norm → LM head.  Heterogeneous stacks (gemma-2 local/global,
+recurrentgemma (rec,rec,local), vlm self/cross) are expressed as a
+``block_pattern`` executed inside one scan step, so HLO size is O(pattern),
+not O(n_layers).
+
+Caches thread through the same structure: stacked leaves with a leading
+groups dim are scan xs/ys; prefix/suffix caches are plain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ParamDef, map_stacked
+from ..sharding.hints import hint
+from . import blocks as B
+from . import layers as L
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def block_schema(cfg: ModelConfig, kind: str, d_ff_override: int | None = None) -> dict:
+    mix = B.mixer_of(kind)
+    ffn = B.ffn_of(kind)
+    sch: dict[str, Any] = {"norm1": ParamDef((cfg.d_model,), ("embed",), init="zeros")}
+
+    if mix in ("attn", "global", "local", "bidir"):
+        sch["mix"] = B.schema_attn(cfg)
+    elif mix == "mla":
+        sch["mix"] = B.schema_mla(cfg)
+    elif mix == "cross":
+        # cross-attn context is the frontend stream AFTER frontend_proj
+        # (llama-3.2's multi_modal_projector) -> d_ctx = d_model.  MoLe
+        # embedding-morphing fuses M^{-1} into frontend_proj alone.
+        sch["mix"] = B.schema_cross(
+            cfg, gated=cfg.frontend.cross_gated if cfg.frontend else False,
+            d_ctx=cfg.d_model,
+        )
+    elif mix == "rec":
+        sch["mix"] = B.schema_rec(cfg)
+    elif mix == "rwkv":
+        rw = B.schema_rwkv(cfg)
+        sch["mix"] = rw["tm"]
+        sch["ffn"] = rw["cm"]
+    elif mix == "dec":
+        # whisper decoder layer: cross-attn context is the ENCODER output
+        # (d_model), not the raw frontend stream.
+        sch["mix"] = B.schema_attn(cfg)
+        sch["norm_cross"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+        sch["cross"] = B.schema_cross(cfg, gated=False, d_ctx=cfg.d_model)
+    else:
+        raise ValueError(f"unknown mixer kind {kind!r}")
+
+    if mix != "rwkv":
+        if not cfg.parallel_block:
+            sch["norm2"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+        if ffn == "moe":
+            sch["ffn"] = B.schema_moe(cfg)
+        else:
+            sch["ffn"] = B.schema_ffn(cfg, d_ff=d_ff_override)
+    else:
+        sch["norm2"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+
+    if cfg.post_norm:
+        sch["post_norm1"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+        sch["post_norm2"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+    return sch
+
+
+def block_cache_schema(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int
+) -> dict | None:
+    mix = B.mixer_of(kind)
+    if mix in ("attn", "global", "bidir"):
+        return B.cache_attn(cfg, batch, max_len, None)
+    if mix == "local":
+        return B.cache_attn(cfg, batch, max_len, cfg.sliding_window)
+    if mix == "mla":
+        return B.cache_mla(cfg, batch, max_len)
+    if mix == "cross":
+        return B.cache_cross(cfg, batch)
+    if mix == "rec":
+        return B.cache_rec(cfg, batch)
+    if mix == "rwkv":
+        return B.cache_rwkv(cfg, batch)
+    if mix == "dec":
+        return {
+            "self": B.cache_attn(cfg, batch, max_len, None),
+            "cross": B.cache_cross(cfg, batch),
+        }
+    raise ValueError(kind)
+
+
+def _prefix_ff(cfg: ModelConfig) -> int | None:
+    return cfg.moe.first_dense_ff if (cfg.moe and cfg.moe.first_dense_ff) else None
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    sch: dict[str, Any] = {}
+    sch["embed"] = ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed", scale=0.02)
+    if cfg.frontend is not None and cfg.family != "audio":
+        # audio (whisper) projects via enc_proj in the encoder stack instead
+        sch["frontend_proj"] = ParamDef(
+            (cfg.frontend.d_in, cfg.d_model), (None, "embed"), scale=0.02
+        )
+    sch["final_norm"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings:
+        sch["head"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"), scale=0.02)
+    if cfg.prefix_pattern:
+        sch["prefix"] = [
+            block_schema(cfg, k, d_ff_override=_prefix_ff(cfg)) for k in cfg.prefix_pattern
+        ]
+    if cfg.suffix_pattern:
+        sch["suffix"] = [block_schema(cfg, k) for k in cfg.suffix_pattern]
+    group = {f"b{i}": block_schema(cfg, k) for i, k in enumerate(cfg.block_pattern)}
+    sch["blocks"] = map_stacked(cfg.n_groups, group)
+    return sch
+
+
+def model_cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    sch: dict[str, Any] = {}
+    if cfg.prefix_pattern:
+        sch["prefix"] = [
+            block_cache_schema(cfg, k, batch, max_len) for k in cfg.prefix_pattern
+        ]
+    if cfg.suffix_pattern:
+        sch["suffix"] = [
+            block_cache_schema(cfg, k, batch, max_len) for k in cfg.suffix_pattern
+        ]
+    group = {
+        f"b{i}": block_cache_schema(cfg, k, batch, max_len)
+        for i, k in enumerate(cfg.block_pattern)
+    }
+    sch["blocks"] = map_stacked(cfg.n_groups, group)
+    return sch
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def apply_mixer(p, h, cfg, kind, rs, cache):
+    mix = B.mixer_of(kind)
+    if mix in ("attn", "global"):
+        return B.apply_attn(p, h, cfg, rs, cache, window=None)
+    if mix == "local":
+        return B.apply_attn(p, h, cfg, rs, cache, window=cfg.sliding_window)
+    if mix == "bidir":
+        return B.apply_attn(p, h, cfg, rs, cache, window=None, causal=False)
+    if mix == "mla":
+        return B.apply_mla(p, h, cfg, rs, cache)
+    if mix == "cross":
+        return B.apply_cross(p, h, cfg, rs, cache)
+    if mix == "rec":
+        return B.apply_rec(p, h, cfg, rs, cache)
+    if mix == "rwkv":
+        return B.apply_rwkv_tm(p, h, cfg, rs, cache)
+    raise ValueError(kind)
+
+
+def apply_block(p, h, cfg: ModelConfig, kind: str, rs: B.RunState, cache):
+    mix = B.mixer_of(kind)
+    ffn = B.ffn_of(kind)
+
+    if mix == "dec":  # whisper decoder layer: self -> cross -> ffn
+        c_self = cache["self"] if cache else None
+        c_cross = cache["cross"] if cache else None
+        a, c_self2 = B.apply_attn(p["mix"], L.norm(h, p["norm1"], cfg.norm), cfg, rs, c_self, window=None)
+        h = h + a
+        a, c_cross2 = B.apply_cross(p["cross"], L.norm(h, p["norm_cross"], cfg.norm), cfg, rs, c_cross)
+        h = h + a
+        fo = B.apply_ffn(p["ffn"], L.norm(h, p["norm2"], cfg.norm), cfg)
+        h = h + fo
+        newc = {"self": c_self2, "cross": c_cross2} if cache else None
+        return h, newc
+
+    if mix == "rwkv":
+        a, cache = B.apply_rwkv_tm(p["mix"], L.norm(h, p["norm1"], cfg.norm), cfg, rs, cache)
+        h = h + a
+        fo, cache = B.apply_rwkv_cm(p["ffn"], L.norm(h, p["norm2"], cfg.norm), cfg, rs, cache)
+        return h + fo, cache
+
+    if cfg.parallel_block:  # command-r: shared input norm, attn + ffn in parallel
+        n = L.norm(h, p["norm1"], cfg.norm)
+        a, cache = apply_mixer(p["mix"], n, cfg, kind, rs, cache)
+        fo = B.apply_ffn(p["ffn"], n, cfg)
+        return h + a + fo, cache
+
+    n = L.norm(h, p["norm1"], cfg.norm)
+    a, cache = apply_mixer(p["mix"], n, cfg, kind, rs, cache)
+    if cfg.post_norm:
+        a = L.norm(a, p["post_norm1"], cfg.norm)
+    if mix == "cross" and cfg.frontend and cfg.frontend.cross_gated:
+        a = jnp.tanh(p["mix"]["gate_attn"]).astype(h.dtype) * a
+    h = h + a
+
+    n2 = L.norm(h, p["norm2"], cfg.norm)
+    if ffn == "moe":
+        fo = B.apply_moe(p["ffn"], n2, cfg)
+    else:
+        fo = B.apply_ffn(p["ffn"], n2, cfg)
+    if cfg.post_norm:
+        fo = L.norm(fo, p["post_norm2"], cfg.norm)
+    if mix == "cross" and cfg.frontend and cfg.frontend.cross_gated:
+        fo = jnp.tanh(p["mix"]["gate_ffn"]).astype(h.dtype) * fo
+    return h + fo, cache
+
+
+def apply_stack(
+    params: dict, h: jax.Array, cfg: ModelConfig, rs: B.RunState,
+    caches: dict | None, remat: bool = False,
+):
+    """Run prefix, scanned groups, suffix.  Returns (h, new_caches|None)."""
+    new_caches: dict[str, Any] = {} if caches is not None else None
+
+    if cfg.prefix_pattern:
+        ncs = []
+        for i, kind in enumerate(cfg.prefix_pattern):
+            c = caches["prefix"][i] if caches else None
+            h, nc = apply_block(params["prefix"][i], h, cfg, kind, rs, c)
+            ncs.append(nc)
+        if caches is not None:
+            new_caches["prefix"] = ncs
+
+    def group_body(h, xs):
+        p_g, c_g = xs
+        ncs = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            c = c_g[f"b{i}"] if c_g is not None else None
+            h, nc = apply_block(p_g[f"b{i}"], h, cfg, kind, rs, c)
+            ncs[f"b{i}"] = nc
+        return h, ncs if c_g is not None else None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    cache_xs = caches["blocks"] if caches is not None else None
+    h, cache_ys = jax.lax.scan(
+        body, h, (params["blocks"], cache_xs), unroll=cfg.scan_unroll
+    )
+    if caches is not None:
+        new_caches["blocks"] = cache_ys
+
+    if cfg.suffix_pattern:
+        ncs = []
+        for i, kind in enumerate(cfg.suffix_pattern):
+            c = caches["suffix"][i] if caches else None
+            h, nc = apply_block(params["suffix"][i], h, cfg, kind, rs, c)
+            ncs.append(nc)
+        if caches is not None:
+            new_caches["suffix"] = ncs
+
+    return h, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Full model entry points
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = params["embed"][tokens].astype(cfg.adtype)
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return hint(h, "dp", None, None)
+
+
+def hidden_states(
+    params: dict, cfg: ModelConfig, tokens: jax.Array,
+    ctx: jax.Array | None = None, remat: bool = False,
+) -> jax.Array:
+    """Final-norm'd hidden states (B, S, d) — the input to the LM head."""
+    if ctx is not None and "frontend_proj" in params:
+        ctx = jnp.einsum(
+            "bsd,de->bse", ctx.astype(cfg.adtype), params["frontend_proj"]
+        )
+    rs = B.RunState(mode="full", ctx=ctx)
+    h = embed_tokens(params, tokens, cfg)
+    h, _ = apply_stack(params, h, cfg, rs, None, remat=remat)
+    return L.norm(h, params["final_norm"], cfg.norm)
+
+
+def head_matrix(params: dict, cfg: ModelConfig) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def fused_ce(
+    params: dict, cfg: ModelConfig, h: jax.Array, targets: jax.Array,
+    chunk: int = 512,
+) -> jax.Array:
+    """Chunked softmax cross-entropy: never materializes (B, S, V) logits.
+
+    Scans the sequence in ``chunk``-sized slices; each slice's logits are
+    produced, reduced to (lse, picked-logit) fp32 scalars-per-token, and
+    *recomputed* in the backward pass (jax.checkpoint) — HBM traffic for the
+    CE drops from O(B S V) fp32 tensors to O(B S d) activations + the head
+    matmul, the measured dominant memory term of every train cell
+    (EXPERIMENTS.md §Perf, beyond-paper optimization 4).
+    """
+    w = head_matrix(params, cfg)
+    B_, S, d = h.shape
+    c = min(chunk, S)
+    if S % c:
+        c = S  # fall back to one chunk for odd lengths
+    n = S // c
+
+    @jax.checkpoint
+    def piece(hc, tc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, w.astype(hc.dtype))
+        logits = hint(logits, "dp", None, "model")
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    def body(acc, inp):
+        hc, tc = inp
+        return acc + piece(hc, tc), None
+
+    hs = h.reshape(B_, n, c, d).swapaxes(0, 1)
+    ts = targets.reshape(B_, n, c).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts),
+                            unroll=cfg.scan_unroll)
+    return total / (B_ * S)
+
+
+def lm_head(params: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = L.norm(h, params["final_norm"], cfg.norm)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    # vocab-parallel logits: keep the vocab dim sharded over "model" so the
+    # softmax/CE runs with collectives instead of an all-gathered (B,S,V).
+    logits = hint(logits, "dp", None, "model")
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def forward(
+    params: dict, cfg: ModelConfig, tokens: jax.Array,
+    ctx: jax.Array | None = None, caches: dict | None = None,
+    write_cache: bool = False, remat: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """Full-sequence forward (train / prefill).  Returns (logits, caches)."""
+    if ctx is not None and "frontend_proj" in params:
+        ctx = jnp.einsum(
+            "bsd,de->bse", ctx.astype(cfg.adtype), params["frontend_proj"]
+        )
+    rs = B.RunState(mode="full", ctx=ctx, write_cache=write_cache)
+    h = embed_tokens(params, tokens, cfg)
+    h, new_caches = apply_stack(params, h, cfg, rs, caches, remat=remat)
+    return lm_head(params, h, cfg), new_caches
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, token: jax.Array, t: jax.Array,
+    caches: dict,
+) -> tuple[jax.Array, dict]:
+    """One-token decode: token (B, 1) at position ``t`` against caches."""
+    rs = B.RunState(mode="decode", t=t)
+    h = embed_tokens(params, token, cfg)
+    h, new_caches = apply_stack(params, h, cfg, rs, caches)
+    return lm_head(params, h, cfg), new_caches

@@ -1,0 +1,4 @@
+"""Optimizers: AdamW (fp32 moments, ZeRO-1 sharded) + gradient compression."""
+from . import adamw
+
+__all__ = ["adamw"]

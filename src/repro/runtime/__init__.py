@@ -1,0 +1,4 @@
+"""Fault-tolerance runtime: resilient loop, failure injection, stragglers."""
+from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
+
+__all__ = ["FailureInjector", "ResilientLoop", "SimulatedFailure", "StragglerMonitor"]

@@ -1,0 +1,5 @@
+"""Distribution substrate: logical-axis sharding rules + activation hints."""
+from . import rules
+from .hints import hint
+
+__all__ = ["rules", "hint"]

@@ -1,0 +1,138 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style).
+
+Every parameter / cache / activation dim carries a logical axis name (see
+``repro.models.base``); a rule table maps names to mesh axes.  Spec building
+is *divisibility-checked*: a dim that is not divisible by its mesh axis size
+falls back to replication (recorded, so the dry-run can report e.g. "kv_heads
+8 replicated over model=16" instead of failing).
+
+Mesh axes:
+  "pod"    cross-pod data parallelism (multi-pod mesh only)
+  "data"   in-pod data parallelism / FSDP
+  "model"  tensor/expert parallelism
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = str | tuple[str, ...] | None
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes: ('pod','data') on multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Mapping[str, MeshAxes]
+    mesh: Mesh
+
+    def axis_size(self, axes: MeshAxes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec_for(self, logical: tuple[str | None, ...], shape: tuple[int, ...],
+                 fallbacks: list[str] | None = None) -> P:
+        parts = []
+        used: set[str] = set()
+        for name, dim in zip(logical, shape):
+            m = self.table.get(name) if name else None
+            if m is None:
+                parts.append(None)
+                continue
+            maxes = (m,) if isinstance(m, str) else tuple(m)
+            # drop mesh axes already consumed by an earlier dim of this array
+            maxes = tuple(a for a in maxes if a not in used)
+            if not maxes:
+                parts.append(None)
+                continue
+            if dim % self.axis_size(maxes) != 0:
+                if fallbacks is not None:
+                    fallbacks.append(
+                        f"{name}={dim} not divisible by {maxes} "
+                        f"(size {self.axis_size(maxes)}): replicated"
+                    )
+                parts.append(None)
+                continue
+            used.update(maxes)
+            parts.append(maxes[0] if len(maxes) == 1 else maxes)
+        return P(*parts)
+
+    def sharding_for(self, logical, shape, fallbacks=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical, shape, fallbacks))
+
+
+def param_rules(mesh: Mesh, fsdp: bool = True) -> Rules:
+    """Parameter placement: TP over "model", optional FSDP over "data"."""
+    table: dict[str, MeshAxes] = {
+        "vocab": "model",
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "experts": "model",
+        "rnn": "model",
+        "lora": None,
+        "layers": None,
+        "embed": dp_axes(mesh) if fsdp else None,
+    }
+    return Rules(table, mesh)
+
+
+def opt_state_rules(mesh: Mesh) -> Rules:
+    """ZeRO-1: optimizer moments always FSDP-shard the embed dim."""
+    return param_rules(mesh, fsdp=True)
+
+
+def activation_rules(mesh: Mesh) -> Rules:
+    """Streaming activations: batch over dp axes, heads/ffn over model."""
+    table: dict[str, MeshAxes] = {
+        "batch": dp_axes(mesh),
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "embed": None,
+        "kv_seq": None,
+    }
+    return Rules(table, mesh)
+
+
+def cache_rules(mesh: Mesh, seq_shard: bool = False) -> Rules:
+    """KV-cache placement for serving.
+
+    Default: batch over dp axes, kv_heads over model.  ``seq_shard=True``
+    switches to sequence-sharded caches over "model" (flash-decoding-style
+    split-KV) — used when kv_heads are too few to fill the model axis.
+    """
+    table: dict[str, MeshAxes] = {
+        "batch": dp_axes(mesh),
+        "kv_heads": None if seq_shard else "model",
+        "kv_seq": "model" if seq_shard else None,
+        "heads": None if seq_shard else "model",
+        "rnn": None if seq_shard else "model",
+        "embed": None,
+        "lora": None,
+        "layers": None,
+    }
+    return Rules(table, mesh)
+
+
+def tree_shardings(rules: Rules, axes_tree: Any, abstract_tree: Any,
+                   fallbacks: list[str] | None = None) -> Any:
+    """Build a NamedSharding tree from (logical axes tree, abstract tree)."""
+    return jax.tree.map(
+        lambda ax, ab: rules.sharding_for(ax, ab.shape, fallbacks),
+        axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real single CPU
+device; multi-device behaviour is exercised via subprocesses (test_distributed)
+and the dry-run driver."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,78 @@
+"""Aug-Conv (paper §3.3): the exact-equivalence theorem (eq. 5) and the
+channel-randomization behaviour — the paper's central correctness claims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ConvGeometry, DataProvider, Developer, MoLeSession, conv_reference,
+    build_aug_conv, make_core, permute_channel_groups,
+)
+
+
+@pytest.mark.parametrize("kappa", [1, 2, 4])
+@pytest.mark.parametrize("core_mode", ["orthogonal", "uniform"])
+def test_exact_equivalence_eq5(rng, kappa, core_mode):
+    """T^r C^{ac} == (D^r C) up to the secret output-channel permutation."""
+    geom = ConvGeometry(alpha=2, beta=6, m=8, p=3)
+    K = rng.standard_normal((2, 6, 3, 3)).astype(np.float32)
+    prov = DataProvider(geom, kappa=kappa, seed=3, core_mode=core_mode)
+    aug = prov.build_aug_conv(K)
+    dev = Developer(aug.matrix, geom)
+    D = jnp.asarray(rng.standard_normal((4, 2, 8, 8)).astype(np.float32))
+    feats = dev.first_layer(prov.morph_batch(D))
+    ref = conv_reference(D, jnp.asarray(K), geom)
+    np.testing.assert_allclose(
+        np.asarray(feats), np.asarray(ref)[:, aug.channel_perm], atol=5e-3
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    alpha=st.integers(1, 3), beta=st.integers(2, 6), m=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_equivalence_property(alpha, beta, m, seed):
+    g = np.random.default_rng(seed)
+    geom = ConvGeometry(alpha=alpha, beta=beta, m=m, p=3)
+    K = g.standard_normal((alpha, beta, 3, 3)).astype(np.float32)
+    sess = MoLeSession.create(K, geom, kappa=1, seed=seed & 0xFFFF)
+    D = jnp.asarray(g.standard_normal((2, alpha, m, m)).astype(np.float32))
+    feats = sess.deliver(D)
+    ref = conv_reference(D, jnp.asarray(K), geom)
+    perm = sess.provider.build_aug_conv(K).channel_perm
+    np.testing.assert_allclose(
+        np.asarray(feats), np.asarray(ref)[:, perm], atol=5e-3
+    )
+
+
+def test_channel_perm_is_group_shuffle(rng):
+    n, beta = 3, 4
+    C = rng.standard_normal((5, beta * n * n)).astype(np.float32)
+    perm = np.array([2, 0, 3, 1])
+    out = permute_channel_groups(C, perm, n)
+    grouped = C.reshape(5, beta, n * n)
+    np.testing.assert_array_equal(out.reshape(5, beta, n * n), grouped[:, perm])
+
+
+def test_aug_conv_hides_morphing_matrix(rng):
+    """The shipped artifact is the *fused* matrix: it differs from both M^{-1}
+    and C (blending property claimed in §3.3 requirement 2)."""
+    geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+    K = rng.standard_normal((2, 4, 3, 3)).astype(np.float32)
+    core = make_core(rng, geom.in_features, kappa=1)
+    aug = build_aug_conv(K, geom, core, perm_seed=0)
+    from repro.core import conv_as_matrix
+    C = conv_as_matrix(K, geom)
+    assert not np.allclose(aug.matrix, C, atol=1e-3)
+    # and C^{ac} is dense where C is sparse (blending)
+    assert (np.abs(aug.matrix) > 1e-8).mean() > 2 * (np.abs(C) > 1e-8).mean()
+
+
+def test_mismatched_core_raises(rng):
+    geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+    K = rng.standard_normal((2, 4, 3, 3)).astype(np.float32)
+    core = make_core(rng, 16, kappa=1)
+    with pytest.raises(ValueError):
+        build_aug_conv(K, geom, core)

@@ -1,0 +1,101 @@
+"""Layer-level properties: flash-scan attention vs dense oracle (causal /
+windowed / softcapped / GQA), RoPE invariances, norms, decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(rng, B, Sq, Skv, Hq, Hkv, hd):
+    q = jnp.asarray(rng.standard_normal((B, Sq, Hq, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Skv, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Skv, Hkv, hd)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("cap", [None, 20.0])
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2)])
+def test_flash_matches_dense(rng, window, cap, Hq, Hkv):
+    B, S, hd = 2, 64, 16
+    q, k, v = _qkv(rng, B, S, S, Hq, Hkv, hd)
+    dense = L.dense_attention(q, k, v, causal=True, window=window, logit_cap=cap)
+    flash = L.flash_attention(q, k, v, causal=True, window=window, logit_cap=cap,
+                              block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense), atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4), bq=st.sampled_from([8, 16]),
+    bkv=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_block_shape_invariance(s_blocks, bq, bkv, seed):
+    """Output must not depend on the flash tiling."""
+    g = np.random.default_rng(seed)
+    B, S, H, hd = 1, 32 * s_blocks, 2, 8
+    q, k, v = _qkv(g, B, S, S, H, H, hd)
+    a = L.flash_attention(q, k, v, block_q=bq, block_kv=bkv)
+    b = L.dense_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_decode_attention_matches_dense(rng):
+    B, S, H, hd = 2, 24, 4, 16
+    q, k, v = _qkv(rng, B, 1, S, H, H, hd)
+    # cache: first t+1 entries valid
+    t = 17
+    dec = L.decode_attention(q, k, v, jnp.asarray(t))
+    q_pos = jnp.asarray([t])
+    dense = L.dense_attention(q, k, v, causal=True, q_pos=q_pos,
+                              kv_pos=jnp.arange(S))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(dense), atol=2e-3)
+
+
+def test_rope_preserves_norm_and_relative_positions(rng):
+    B, S, H, hd = 1, 16, 2, 32
+    x = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    r = L.rope(x, jnp.arange(S)[None], 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(r), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5,
+    )
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, hd)).astype(np.float32))
+    def dot(m, n):
+        qm = L.rope(q, jnp.asarray([[m]]), 10_000.0)
+        kn = L.rope(k, jnp.asarray([[n]]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+    assert dot(3, 1) == pytest.approx(dot(10, 8), rel=1e-4)
+    assert dot(5, 5) == pytest.approx(dot(0, 0), rel=1e-4)
+
+
+def test_softcap_bounds():
+    x = jnp.asarray([-1e5, -1.0, 0.0, 1.0, 1e5])
+    y = np.asarray(L.softcap(x, 30.0))
+    assert np.all(np.abs(y) <= 30.0)
+    assert y[2] == 0.0
+    assert L.softcap(x, None) is x
+
+
+def test_norms_identity_at_zero_weight(rng):
+    x = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    w = jnp.zeros((8,))
+    r = np.asarray(L.rms_norm(x, w))
+    n = np.asarray(x) / np.sqrt((np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(r, n, atol=1e-5)
+    ln = np.asarray(L.layer_norm(x, w))
+    assert abs(ln.mean(-1)).max() < 1e-5
+
+
+def test_fully_masked_rows_are_zero(rng):
+    """Flash attention with a window that excludes everything early: the
+    running-lse guard must not NaN."""
+    B, S, H, hd = 1, 32, 2, 8
+    q, k, v = _qkv(rng, B, S, S, H, H, hd)
+    out = L.flash_attention(q, k, v, causal=True, window=1, block_q=8, block_kv=8)
+    assert not bool(jnp.isnan(out).any())

@@ -1,0 +1,117 @@
+"""MoLe-LM adaptation (DESIGN.md §4): exact equivalence of Aug-fused params on
+morphed streams, for token and embedding modes, across model families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.deploy import fuse_lm_params
+from repro.core.lm import (
+    EmbeddingMorpher, TokenMorpher, fuse_aug_embedding, fuse_aug_head,
+    fuse_aug_projection,
+)
+from repro.data.pipeline import DataConfig, Pipeline, ProviderStage
+from repro.models import Model
+from repro.models.base import MoLeCfg
+
+
+def test_aug_embedding_exact(rng):
+    tm = TokenMorpher.create(0, 211)
+    E = jnp.asarray(rng.standard_normal((211, 16)).astype(np.float32))
+    toks = jnp.asarray(rng.integers(0, 211, (4, 9)))
+    augE = fuse_aug_embedding(E, tm)
+    np.testing.assert_array_equal(
+        np.asarray(augE[tm.morph_tokens(toks)]), np.asarray(E[toks])
+    )
+
+
+def test_aug_head_losses_match(rng):
+    tm = TokenMorpher.create(1, 97)
+    head = jnp.asarray(rng.standard_normal((8, 97)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((5, 8)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 97, (5,)))
+    logits = h @ head
+    logits_m = h @ fuse_aug_head(head, tm)
+    ce = lambda lg, y: jnp.mean(
+        jax.nn.logsumexp(lg, -1) - jnp.take_along_axis(lg, y[:, None], 1)[:, 0]
+    )
+    np.testing.assert_allclose(
+        float(ce(logits, labels)),
+        float(ce(logits_m, tm.morph_tokens(labels))), rtol=1e-5,
+    )
+
+
+def test_aug_projection_exact(rng):
+    em = EmbeddingMorpher.create(0, d_in=48, kappa=4, d_out=32)
+    W = jnp.asarray(rng.standard_normal((48, 32)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((6, 48)).astype(np.float32))
+    got = em.morph_features(x) @ fuse_aug_projection(W, em)
+    want = (x @ W)[:, em.out_perm]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "command_r_35b", "rwkv6_3b"])
+def test_token_mole_end_to_end_equivalence(rng, arch):
+    """loss(params, raw batch) == loss(fused params, morphed batch) exactly."""
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    tm = TokenMorpher.create(7, cfg.vocab)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    tgts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    raw = {"tokens": toks, "targets": tgts}
+    morphed = {"tokens": tm.morph_tokens(toks), "targets": tm.morph_tokens(tgts)}
+    fused = fuse_lm_params(params, cfg, token_morpher=tm)
+    np.testing.assert_allclose(
+        float(model.loss(params, raw)), float(model.loss(fused, morphed)),
+        rtol=1e-5,
+    )
+
+
+def test_embedding_mole_vlm_equivalence(rng):
+    """Continuous morphing on the VLM patch stream: identical loss (no out
+    perm — serving mode)."""
+    cfg = get_smoke_config("llama32_vision_90b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    em = EmbeddingMorpher.create(3, d_in=cfg.frontend.d_in, kappa=4, d_out=None)
+    patches = jnp.asarray(
+        rng.standard_normal((2, cfg.frontend.n_tokens, cfg.frontend.d_in)),
+        jnp.float32,
+    )
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    tgts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    raw = {"tokens": toks, "targets": tgts, "patches": patches}
+    morphed = dict(raw, patches=em.morph_features(patches))
+    fused = fuse_lm_params(params, cfg, embed_morpher=em)
+    np.testing.assert_allclose(
+        float(model.loss(params, raw)), float(model.loss(fused, morphed)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_pipeline_provider_stage_morphs_tokens():
+    cfg = dataclasses.replace(
+        get_smoke_config("deepseek_7b"),
+        mole=MoLeCfg(enabled=True, mode="token", seed=5),
+    )
+    d = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    raw = Pipeline(d, model_cfg=dataclasses.replace(cfg, mole=MoLeCfg(enabled=False)))
+    sec = Pipeline(d, model_cfg=cfg)
+    b_raw, b_sec = next(raw), next(sec)
+    tm = TokenMorpher.create(5, cfg.vocab)
+    np.testing.assert_array_equal(b_sec["tokens"], np.asarray(tm.perm)[b_raw["tokens"]])
+    assert not np.array_equal(b_sec["tokens"], b_raw["tokens"])
+
+
+def test_pipeline_determinism_and_seek():
+    cfg = get_smoke_config("deepseek_7b")
+    d = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2, seed=1)
+    p1 = Pipeline(d, model_cfg=cfg)
+    batches = [next(p1) for _ in range(5)]
+    p2 = Pipeline(d, model_cfg=cfg)
+    p2.seek(3)
+    np.testing.assert_array_equal(next(p2)["tokens"], batches[3]["tokens"])

@@ -1,0 +1,66 @@
+"""Data morphing (paper §3.2): invertibility, block structure, kappa law."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_core, materialize_M, morph, unmorph
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    kappa=st.sampled_from([1, 2, 3, 4, 6]),
+    q=st.sampled_from([2, 4, 8, 16]),
+    mode=st.sampled_from(["orthogonal", "uniform"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_morph_roundtrip_property(kappa, q, mode, seed):
+    g = np.random.default_rng(seed)
+    core = make_core(g, kappa * q, kappa, mode=mode)
+    x = jnp.asarray(g.standard_normal((4, kappa * q)).astype(np.float32))
+    rt = unmorph(morph(x, core), core)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(x), atol=1e-3)
+
+
+def test_blockwise_equals_full_matrix(rng):
+    core = make_core(rng, 48, kappa=4)
+    x = jnp.asarray(rng.standard_normal((5, 48)).astype(np.float32))
+    full = x @ jnp.asarray(materialize_M(core))
+    np.testing.assert_allclose(
+        np.asarray(morph(x, core)), np.asarray(full), atol=1e-5
+    )
+
+
+def test_orthogonal_core_preserves_norm(rng):
+    core = make_core(rng, 64, kappa=2, mode="orthogonal")
+    x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    t = morph(x, core)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(t), axis=1),
+        np.linalg.norm(np.asarray(x), axis=1),
+        rtol=1e-5,
+    )
+
+
+def test_kappa_must_divide():
+    with pytest.raises(ValueError):
+        make_core(0, 10, kappa=3)
+
+
+def test_uniform_core_nonzero_and_invertible(rng):
+    core = make_core(rng, 32, kappa=2, mode="uniform")
+    assert np.all(core.matrix != 0.0)  # paper: "all elements random and non-zero"
+    ident = core.matrix.astype(np.float64) @ core.inverse.astype(np.float64)
+    np.testing.assert_allclose(ident, np.eye(16), atol=1e-3)
+
+
+def test_morphing_is_unrecognizable(rng):
+    """Proxy for fig 4(b): morphed data decorrelates from the original as the
+    core grows (kappa shrinks)."""
+    x = rng.standard_normal((1, 64)).astype(np.float32)
+    corrs = []
+    for kappa in (16, 4, 1):
+        core = make_core(np.random.default_rng(1), 64, kappa)
+        t = np.asarray(morph(jnp.asarray(x), core))
+        corrs.append(abs(np.corrcoef(x[0], t[0])[0, 1]))
+    assert corrs[-1] < 0.5  # full-size core: essentially uncorrelated

@@ -1,0 +1,66 @@
+"""Fault-tolerance runtime: failure injection -> restore -> identical final
+state as an uninterrupted run (determinism of the whole train loop)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.launch.steps import TrainHParams, make_train_step
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import FailureInjector, ResilientLoop, StragglerMonitor
+
+
+def _setup(tmp_path, tag):
+    cfg = get_smoke_config("phi3_mini_3p8b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = adamw.init_state(params)
+    hp = TrainHParams(optimizer=adamw.AdamWConfig(lr=1e-3, warmup_steps=2,
+                                                  decay_steps=20))
+    raw_step = jax.jit(make_train_step(model, hp))
+
+    def loop_step(state, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = raw_step(state["params"], state["opt"], b)
+        return {"params": p, "opt": o}, m
+
+    pipe = Pipeline(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=3),
+                    model_cfg=cfg)
+    ckpt = CheckpointManager(tmp_path / tag, keep=3, async_save=False)
+    return loop_step, pipe, ckpt, {"params": params, "opt": opt}
+
+
+def test_failure_recovery_is_exact(tmp_path):
+    step, pipe_a, ckpt_a, state_a = _setup(tmp_path, "clean")
+    clean, _ = ResilientLoop(step, ckpt_a, pipe_a, ckpt_every=4).run(state_a, 12)
+
+    step, pipe_b, ckpt_b, state_b = _setup(tmp_path, "faulty")
+    inj = FailureInjector(at_steps={6, 10})
+    loop = ResilientLoop(step, ckpt_b, pipe_b, ckpt_every=4, injector=inj)
+    faulty, hist = loop.run(state_b, 12)
+
+    assert loop.restarts == 2
+    assert any("restored" in h.get("event", "") for h in hist)
+    for a, b in zip(jax.tree.leaves(clean["params"]), jax.tree.leaves(faulty["params"])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
+        )
+
+
+def test_failure_before_first_checkpoint(tmp_path):
+    step, pipe, ckpt, state = _setup(tmp_path, "early")
+    inj = FailureInjector(at_steps={1})
+    loop = ResilientLoop(step, ckpt, pipe, ckpt_every=100, injector=inj)
+    _, hist = loop.run(state, 4)
+    assert any("restart-clean" in h.get("event", "") for h in hist)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=3.0)
+    assert not mon.record(0, 1.0)
+    assert not mon.record(1, 1.1)
+    assert mon.record(2, 10.0)        # 10x slower than EMA -> flagged
+    assert mon.slow_steps[0][0] == 2

@@ -1,0 +1,67 @@
+"""Security analysis (paper §4.2): every number the paper quotes."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import analyze_security
+from repro.core.security import (
+    dt_pairs_required, kappa_mc, log2_p_augconv_reversing,
+    log2_p_m_bruteforce, log10_p_rand_bruteforce, vocab_perm_log10_p,
+)
+
+# CIFAR + VGG-16 setting used throughout the paper's §4.2
+CIFAR = dict(sigma=0.5, alpha=3, beta=64, m=32, n=32, p=3)
+
+
+def test_brute_force_matches_paper():
+    # P_{M,bf} <= 1/2 sigma^(N-1), N = 3072^2 -> ~2^-9e6  (paper: 2^-9x10^6)
+    s = analyze_security(**CIFAR, kappa=1)
+    assert s.log2_p_m_bf == pytest.approx(-(3072**2), rel=1e-6)
+
+
+def test_rand_brute_force_matches_abstract():
+    # 1/64! ~ 7.9e-90 — the abstract's headline number
+    l10 = log10_p_rand_bruteforce(64)
+    assert 10 ** (l10 + 90) == pytest.approx(7.9, abs=0.2)
+
+
+def test_augconv_reversing_matches_paper():
+    # kappa=1: ~2^-(3072*2048); paper quotes the approximation 2^-6x10^6
+    s = analyze_security(**CIFAR, kappa=1)
+    expected = -1 + ((3072 - 1024) * 3072 + 3 * 64 * 9 - 1) * math.log2(0.5)
+    assert s.log2_p_m_ar == pytest.approx(expected)
+    assert abs(s.log2_p_m_ar) == pytest.approx(3072 * 2048, rel=1e-3)
+
+
+def test_mc_setting_matches_paper():
+    # kappa_mc = alpha m^2 / n^2 = 3;  P_{M,ar} = 2^-1728 exactly
+    assert kappa_mc(3, 32, 32) == 3
+    s = analyze_security(**CIFAR, kappa=3)
+    assert s.log2_p_m_ar == pytest.approx(-1728.0)
+
+
+def test_dt_pair_attack_matches_paper():
+    assert dt_pairs_required(3, 32, 1) == 3072
+
+
+def test_monotonicity_in_kappa():
+    """Larger kappa (smaller core) => weaker security — the paper's trade-off."""
+    probs = [log2_p_m_bruteforce(0.5, 3, 32, k) for k in (1, 2, 4, 8)]
+    assert all(a < b for a, b in zip(probs, probs[1:]))
+
+
+def test_monotonicity_in_sigma():
+    """Stricter privacy reservation (smaller sigma) => lower success prob."""
+    probs = [log2_p_m_bruteforce(s, 3, 32, 4) for s in (0.1, 0.3, 0.5, 0.9)]
+    assert all(a < b for a, b in zip(probs, probs[1:]))
+
+
+def test_sigma_validation():
+    with pytest.raises(ValueError):
+        log2_p_m_bruteforce(1.5, 3, 32, 1)
+
+
+def test_vocab_perm_bound():
+    # 256k vocab: log10(1/V!) is astronomically negative (blind brute force)
+    assert vocab_perm_log10_p(256_000) < -1e6

@@ -1,0 +1,61 @@
+"""VGG (paper experiment model): shapes, Aug-Conv first-layer path, frozen-
+matrix semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DataProvider
+from repro.models import cnn
+
+
+def test_vgg_small_forward_shapes(rng):
+    cfg = cnn.vgg_small()
+    params = cnn.init(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.standard_normal((4, 3, cfg.image_size, cfg.image_size)).astype(np.float32))
+    logits = cnn.apply(params, x, cfg)
+    assert logits.shape == (4, cfg.classes)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_vgg16_full_geometry():
+    cfg = cnn.vgg16()
+    assert cfg.first_geom.in_features == 3 * 32 * 32
+    assert len(cfg.conv_shapes()) == 13  # VGG-16 conv stack
+
+
+def test_aug_path_equals_plain_path(rng):
+    """Forward through the Aug matrix on morphed rows == plain forward."""
+    cfg = cnn.vgg_small()
+    params = cnn.init(jax.random.key(1), cfg)
+    geom = cfg.first_geom
+    prov = DataProvider(geom, kappa=1, seed=0)
+    aug = prov.build_aug_conv(np.asarray(cnn.first_layer_kernels(params, cfg)))
+    x = jnp.asarray(rng.standard_normal((2, 3, cfg.image_size, cfg.image_size)).astype(np.float32))
+
+    plain = cnn.apply(params, x, cfg)
+    # permute conv-0 output channels (and conv-1 input channels) to absorb rand()
+    p2 = jax.tree.map(lambda a: a, params)
+    p2["convs"] = [dict(c) for c in params["convs"]]
+    p2["convs"][0]["b"] = params["convs"][0]["b"][aug.channel_perm]
+    p2["convs"][1] = dict(
+        w=params["convs"][1]["w"][:, aug.channel_perm], b=params["convs"][1]["b"]
+    )
+    morphed = prov.morph_batch(x)
+    via_aug = cnn.apply(p2, morphed, cfg, aug_matrix=jnp.asarray(aug.matrix))
+    np.testing.assert_allclose(np.asarray(via_aug), np.asarray(plain), atol=5e-3)
+
+
+def test_aug_matrix_receives_no_gradient(rng):
+    """The paper treats C^{ac} as a FIXED feature extractor."""
+    cfg = cnn.vgg_small()
+    params = cnn.init(jax.random.key(2), cfg)
+    geom = cfg.first_geom
+    prov = DataProvider(geom, kappa=1, seed=1)
+    aug = jnp.asarray(
+        prov.build_aug_conv(np.asarray(cnn.first_layer_kernels(params, cfg))).matrix
+    )
+    rows = prov.morph_batch(
+        jnp.asarray(rng.standard_normal((2, 3, cfg.image_size, cfg.image_size)).astype(np.float32))
+    )
+    g = jax.grad(lambda a: jnp.sum(cnn.apply(params, rows, cfg, aug_matrix=a)))(aug)
+    assert float(jnp.max(jnp.abs(g))) == 0.0
