@@ -17,6 +17,7 @@ SECTIONS = [
     "security_table",        # paper §4.2
     "augconv_equivalence",   # paper §4.4 experiment (CPU-scaled)
     "kernel_bench",          # Pallas kernel structure/μbench
+    "engine_throughput",     # delivery engine: batched multi-tenant serving
     "roofline",              # deliverable (g), reads dry-run artifacts
 ]
 

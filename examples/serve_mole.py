@@ -1,6 +1,13 @@
-"""Batched serving over the MoLe trust boundary (paper's inference stage):
-provider morphs prompts -> developer prefills + decodes with Aug-fused params
--> provider unmorphs generations.
+"""Serving over the MoLe trust boundary, both stages of the paper's protocol:
+
+1. *Data delivery* through the batched multi-tenant engine
+   (``repro.runtime.engine``): several tenants register provider sessions
+   (each with its own secret core + channel permutation), their requests are
+   coalesced into padded microbatches, and morph + Aug-Conv execute as one
+   jitted batched path.
+2. *LM inference*: provider morphs prompts (secret vocab permutation) ->
+   developer prefills + decodes with Aug-fused params -> provider unmorphs
+   the generations.
 
     PYTHONPATH=src python examples/serve_mole.py
 """
@@ -8,8 +15,14 @@ from repro.launch import serve as serve_mod
 
 
 def main():
+    # Stage 1: multi-tenant delivery engine (morph -> Aug-Conv), batched.
     serve_mod.main([
-        "--arch", "gemma2_27b", "--smoke", "--requests", "8",
+        "--mode", "delivery", "--tenants", "4", "--requests", "32",
+        "--batch", "2", "--kappa", "2",
+    ])
+    # Stage 2: MoLe-secured LM serving (token morphing + Aug-fused params).
+    serve_mod.main([
+        "--mode", "lm", "--arch", "gemma2_27b", "--smoke", "--requests", "8",
         "--prompt-len", "32", "--gen", "16", "--mole", "token",
     ])
 

@@ -29,7 +29,7 @@ from .aug_conv import (
 )
 from .security import MoLeSecurity, analyze as analyze_security
 from .overhead import OverheadReport, analyze as analyze_overhead
-from .protocol import DataProvider, Developer, MoLeSession
+from .protocol import DataProvider, Developer, MoLeSession, SessionRegistry
 from .lm import (
     EmbeddingMorpher,
     TokenMorpher,
@@ -46,7 +46,7 @@ __all__ = [
     "random_channel_perm",
     "MoLeSecurity", "analyze_security",
     "OverheadReport", "analyze_overhead",
-    "DataProvider", "Developer", "MoLeSession",
+    "DataProvider", "Developer", "MoLeSession", "SessionRegistry",
     "EmbeddingMorpher", "TokenMorpher", "fuse_aug_embedding", "fuse_aug_head",
     "fuse_aug_projection",
 ]

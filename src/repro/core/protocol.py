@@ -27,7 +27,7 @@ from .morphing import MorphCore, make_core, morph, unmorph
 from . import overhead as _overhead
 from . import security as _security
 
-__all__ = ["DataProvider", "Developer", "MoLeSession"]
+__all__ = ["DataProvider", "Developer", "MoLeSession", "SessionRegistry"]
 
 
 class DataProvider:
@@ -125,3 +125,79 @@ class MoLeSession:
     def deliver(self, data: jax.Array) -> jax.Array:
         """Provider morphs a batch; developer extracts features from it."""
         return self.developer.first_layer(self.provider.morph_batch(data))
+
+
+class SessionRegistry:
+    """Provider-side registry of per-tenant MoLe sessions (delivery engine hook).
+
+    All tenants share one ``ConvGeometry`` and ``kappa`` — that is what makes
+    their secrets *stackable*: the registry exposes the cores as a dense
+    ``(T, q, q)`` array and the Aug-Conv matrices as ``(T, F_in, F_out)``, so
+    ``repro.runtime.engine`` can execute many tenants' morph + Aug-Conv as one
+    batched GEMM.  Each tenant still has its own independent secret core and
+    channel permutation; nothing is shared across the trust boundary between
+    tenants.
+
+    ``version`` increments on every registration; the engine uses it to know
+    when its device-side stacked arrays are stale.
+    """
+
+    def __init__(self, geom: ConvGeometry, kappa: int = 1,
+                 core_mode: str = "orthogonal"):
+        self.geom = geom
+        self.kappa = kappa
+        self.core_mode = core_mode
+        self._sessions: dict[str, MoLeSession] = {}
+        self._order: list[str] = []
+        self.version = 0
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    def __contains__(self, tenant_id: str) -> bool:
+        return tenant_id in self._sessions
+
+    @property
+    def tenant_ids(self) -> tuple[str, ...]:
+        return tuple(self._order)
+
+    def register(
+        self, tenant_id: str, dev_kernels: np.ndarray, seed: int | None = None
+    ) -> MoLeSession:
+        """Create a tenant session: draw fresh secrets, fuse its Aug-Conv."""
+        if tenant_id in self._sessions:
+            raise ValueError(f"tenant {tenant_id!r} already registered")
+        if seed is None:
+            # Secrets must not be derivable from public identifiers: default
+            # to OS entropy.  Pass an explicit seed only for reproducibility
+            # in trusted test/benchmark setups.
+            import secrets as _secrets
+
+            seed = _secrets.randbits(31)
+        sess = MoLeSession.create(
+            dev_kernels, self.geom, kappa=self.kappa, seed=seed,
+            core_mode=self.core_mode,
+        )
+        self._sessions[tenant_id] = sess
+        self._order.append(tenant_id)
+        self.version += 1
+        return sess
+
+    def session(self, tenant_id: str) -> MoLeSession:
+        return self._sessions[tenant_id]
+
+    def tenant_index(self, tenant_id: str) -> int:
+        return self._order.index(tenant_id)
+
+    # -- stacked secret views consumed by the delivery engine ---------------
+    def stacked_cores(self) -> np.ndarray:
+        """(T, q, q) — tenant t's secret core at index t (registration order)."""
+        return np.stack(
+            [self._sessions[t].provider._core.matrix for t in self._order]
+        )
+
+    def stacked_aug_matrices(self) -> np.ndarray:
+        """(T, F_in, F_out) — tenant t's developer-side Aug-Conv matrix."""
+        return np.stack(
+            [np.asarray(self._sessions[t].developer.aug_matrix) for t in self._order]
+        )

@@ -7,8 +7,23 @@
 Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
 public wrappers with reference fallback for non-tileable shapes.
 """
-from .ops import aug_conv_forward, morph_rows
+from .dispatch import BACKENDS, resolve_backend
+from .ops import (
+    aug_conv_forward,
+    aug_conv_forward_batched,
+    morph_rows,
+    morph_rows_batched,
+)
 from .wkv6 import wkv6_chunked
 from . import ref
 
-__all__ = ["aug_conv_forward", "morph_rows", "wkv6_chunked", "ref"]
+__all__ = [
+    "BACKENDS",
+    "resolve_backend",
+    "aug_conv_forward",
+    "aug_conv_forward_batched",
+    "morph_rows",
+    "morph_rows_batched",
+    "wkv6_chunked",
+    "ref",
+]

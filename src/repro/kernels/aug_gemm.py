@@ -56,10 +56,12 @@ def aug_gemm(
 
     kwargs = {}
     if pltpu is not None:
+        from .dispatch import tpu_compiler_params
+
         kwargs["scratch_shapes"] = [pltpu.VMEM((bm, bn), jnp.float32)]
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        )
+        cp = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
+        if cp is not None:
+            kwargs["compiler_params"] = cp
 
     return pl.pallas_call(
         functools.partial(_kernel, n_kk=n_kk),

@@ -1,63 +1,130 @@
-"""jit'd public wrappers for the Pallas kernels, with shape-driven dispatch.
+"""jit'd public wrappers for the Pallas kernels, with backend dispatch.
 
-On this CPU container kernels run in ``interpret=True`` mode (the kernel body
-executes in Python for correctness validation); on a real TPU set
-``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile to Mosaic.
+Backend selection (see :mod:`repro.kernels.dispatch`) replaces the old
+hard-coded ``interpret=True``:
+
+  * ``pallas``     — compiled Pallas (real TPU),
+  * ``interpret``  — Pallas interpret mode (CPU kernel validation),
+  * ``jnp``        — pure-jnp reference (``ref.py``; the fast CPU path).
+
+``backend=None`` resolves via ``REPRO_KERNEL_BACKEND`` / hardware auto-detect.
 Shapes that don't satisfy the kernels' tiling constraints fall back to the
-pure-jnp reference (same math, XLA-fused) so the public API is total.
+reference on any backend (same math, XLA-fused) so the public API is total.
+
+The ``*_batched`` entry points are the delivery-engine hot path: a leading
+*group* axis carries per-tenant secrets (one morph core / one Aug-Conv matrix
+per group), executed as a single fused batched GEMM.
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .block_diag import block_diag_matmul
 from .aug_gemm import aug_gemm
+from .block_diag import block_diag_matmul
+from .dispatch import pallas_interpret, resolve_backend
+
+__all__ = [
+    "morph_rows",
+    "aug_conv_forward",
+    "morph_rows_batched",
+    "aug_conv_forward_batched",
+]
 
 
-def _interpret_default() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+def _morph_tileable(R: int, q: int) -> bool:
+    """Conservative tiling check for ``block_diag_matmul``.
+
+    ``R % 8`` keeps row tiles MXU-aligned (bm = min(128, R) would otherwise
+    accept any R < 128, handing Mosaic a misaligned tile on real TPU).
+    """
+    bm, bn = min(128, R), min(128, q)
+    return R >= 8 and R % 8 == 0 and R % bm == 0 and q % bn == 0
 
 
-@partial(jax.jit, static_argnames=("kappa", "use_kernel", "interpret"))
 def morph_rows(
-    x: jax.Array, core: jax.Array, kappa: int,
-    use_kernel: bool = True, interpret: bool | None = None,
+    x: jax.Array, core: jax.Array, kappa: int, backend: str | None = None
 ) -> jax.Array:
     """Provider-side morphing: x (R, kappa*q) @ blockdiag(core)."""
-    R, F = x.shape
+    return _morph_rows(x, core, int(kappa), resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("kappa", "backend"))
+def _morph_rows(x, core, kappa, backend):
+    R, _ = x.shape
     q = core.shape[0]
-    tiles_ok = (R % min(128, R) == 0) and q % min(128, q) == 0 and (
-        min(128, R) > 0
-    )
-    # kernel wants R and q divisible by the chosen tiles; be conservative
-    kernel_ok = use_kernel and R >= 8 and (R % 8 == 0) and (q % 128 == 0 or q <= 512)
-    if kernel_ok and q % min(128, q) == 0 and R % min(128, R) == 0:
-        bm = min(128, R)
-        bn = bk = min(128, q)
+    if backend != "jnp" and _morph_tileable(R, q):
         return block_diag_matmul(
-            x, core, kappa, bm=bm, bn=bn, bk=bk,
-            interpret=_interpret_default() if interpret is None else interpret,
+            x, core, kappa, bm=min(128, R), bn=min(128, q), bk=min(128, q),
+            interpret=pallas_interpret(backend),
         )
     return ref.block_diag_matmul_ref(x, core, kappa)
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def aug_conv_forward(
-    t: jax.Array, c_ac: jax.Array,
-    use_kernel: bool = True, interpret: bool | None = None,
+    t: jax.Array, c_ac: jax.Array, backend: str | None = None
 ) -> jax.Array:
     """Developer-side Aug-Conv layer: t (B, K) @ c_ac (K, N)."""
+    return _aug_conv_forward(t, c_ac, resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _aug_conv_forward(t, c_ac, backend):
     B, K = t.shape
     N = c_ac.shape[1]
     bm, bn, bk = min(128, B), min(128, N), min(512, K)
-    if use_kernel and B % bm == 0 and N % bn == 0 and K % bk == 0:
+    if backend != "jnp" and B % bm == 0 and N % bn == 0 and K % bk == 0:
         return aug_gemm(
-            t, c_ac, bm=bm, bn=bn, bk=bk,
-            interpret=_interpret_default() if interpret is None else interpret,
+            t, c_ac, bm=bm, bn=bn, bk=bk, interpret=pallas_interpret(backend)
         )
     return ref.aug_gemm_ref(t, c_ac)
+
+
+def morph_rows_batched(
+    x: jax.Array, cores: jax.Array, kappa: int, backend: str | None = None
+) -> jax.Array:
+    """Per-group morphing: x (G, B, kappa*q) with cores (G, q, q).
+
+    Each group carries one tenant's secret core; Pallas backends vmap the
+    single-core kernel over the group axis so the core tile still stays
+    VMEM-resident per grid instance.
+    """
+    return _morph_rows_batched(x, cores, int(kappa), resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("kappa", "backend"))
+def _morph_rows_batched(x, cores, kappa, backend):
+    G, B, F = x.shape
+    q = cores.shape[-1]
+    if backend != "jnp" and _morph_tileable(B, q):
+        interp = pallas_interpret(backend)
+        return jax.vmap(
+            lambda xg, cg: block_diag_matmul(
+                xg, cg, kappa, bm=min(128, B), bn=min(128, q), bk=min(128, q),
+                interpret=interp,
+            )
+        )(x, cores)
+    return ref.block_diag_matmul_batched_ref(x, cores, kappa)
+
+
+def aug_conv_forward_batched(
+    t: jax.Array, c_acs: jax.Array, backend: str | None = None
+) -> jax.Array:
+    """Per-group Aug-Conv forward: t (G, B, K) @ c_acs (G, K, N) -> (G, B, N)."""
+    return _aug_conv_forward_batched(t, c_acs, resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _aug_conv_forward_batched(t, c_acs, backend):
+    G, B, K = t.shape
+    N = c_acs.shape[-1]
+    bm, bn, bk = min(128, B), min(128, N), min(512, K)
+    if backend != "jnp" and B % bm == 0 and N % bn == 0 and K % bk == 0:
+        interp = pallas_interpret(backend)
+        return jax.vmap(
+            lambda tg, cg: aug_gemm(tg, cg, bm=bm, bn=bn, bk=bk, interpret=interp)
+        )(t, c_acs)
+    return ref.aug_gemm_batched_ref(t, c_acs)

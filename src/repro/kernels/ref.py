@@ -16,6 +16,29 @@ def block_diag_matmul_ref(x: jax.Array, core: jax.Array, kappa: int) -> jax.Arra
     return out.reshape(R, F).astype(x.dtype)
 
 
+def block_diag_matmul_batched_ref(
+    x: jax.Array, cores: jax.Array, kappa: int
+) -> jax.Array:
+    """Per-group morphing: each leading-axis group has its own core.
+
+    x: (G, B, kappa*q), cores: (G, q, q)  ->  (G, B, kappa*q).
+    """
+    G, B, F = x.shape
+    q = cores.shape[-1]
+    blocks = x.reshape(G, B, kappa, q)
+    out = jnp.einsum(
+        "gbkq,gqp->gbkp", blocks.astype(jnp.float32), cores.astype(jnp.float32)
+    )
+    return out.reshape(G, B, F).astype(x.dtype)
+
+
+def aug_gemm_batched_ref(t: jax.Array, c_acs: jax.Array) -> jax.Array:
+    """Per-group Aug-Conv forward: t (G, B, K) @ c_acs (G, K, N) -> (G, B, N)."""
+    return jnp.einsum(
+        "gbk,gkn->gbn", t.astype(jnp.float32), c_acs.astype(jnp.float32)
+    ).astype(t.dtype)
+
+
 def aug_gemm_ref(t: jax.Array, c_ac: jax.Array) -> jax.Array:
     return jnp.dot(
         t.astype(jnp.float32), c_ac.astype(jnp.float32)

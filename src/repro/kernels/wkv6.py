@@ -87,9 +87,11 @@ def wkv6_chunked(
 
     kwargs = {}
     if pltpu is not None:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        )
+        from .dispatch import tpu_compiler_params
+
+        cp = tpu_compiler_params(("parallel", "arbitrary"))
+        if cp is not None:
+            kwargs["compiler_params"] = cp
         kwargs["scratch_shapes"] = [pltpu.VMEM((D, D), jnp.float32)]
     else:  # pragma: no cover
         raise RuntimeError("pallas tpu backend unavailable")

@@ -1,4 +1,21 @@
-"""Fault-tolerance runtime: resilient loop, failure injection, stragglers."""
+"""Serving/fault-tolerance runtime.
+
+  engine      batched multi-tenant MoLe delivery engine (morph + Aug-Conv)
+  queue       request queue + padded-microbatch coalescing
+  resilience  resilient loop, failure injection, stragglers
+"""
+from .engine import EngineStats, MoLeDeliveryEngine
+from .queue import DeliveryRequest, Microbatch, RequestQueue
 from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
 
-__all__ = ["FailureInjector", "ResilientLoop", "SimulatedFailure", "StragglerMonitor"]
+__all__ = [
+    "EngineStats",
+    "MoLeDeliveryEngine",
+    "DeliveryRequest",
+    "Microbatch",
+    "RequestQueue",
+    "FailureInjector",
+    "ResilientLoop",
+    "SimulatedFailure",
+    "StragglerMonitor",
+]

@@ -1,0 +1,187 @@
+"""Request queue + padded-microbatch coalescing for the delivery engine.
+
+Requests arrive as (tenant, rows) in FIFO order; tenants are many, batches
+are small.  The coalescer packs pending rows into a *padded microbatch*:
+
+  * rows are grouped by tenant (a tenant's pending rows are concatenated in
+    arrival order, then chopped into chunks of at most ``max_rows``);
+  * every chunk becomes one *group* of the microbatch tensor ``(G, B, F)``;
+  * ``B`` is the smallest bucket that fits the largest chunk and ``G`` is
+    bucket-rounded too, so the jitted engine path compiles once per
+    ``(G, B)`` bucket pair instead of once per traffic pattern;
+  * padding rows are zeros assigned to tenant index 0 — they flow through
+    the batched GEMMs and are sliced away on reassembly.
+
+The queue is deliberately synchronous (``submit`` / ``coalesce`` /
+``complete``); async I/O rides on top in a later PR (see ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Mapping
+
+import numpy as np
+
+__all__ = ["DeliveryRequest", "GroupSlice", "Microbatch", "RequestQueue"]
+
+
+def bucketize(n: int, buckets: Iterable[int]) -> int:
+    """Smallest bucket >= n (buckets assumed sorted ascending)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{n} exceeds largest bucket in {tuple(buckets)}")
+
+
+@dataclasses.dataclass
+class DeliveryRequest:
+    """One tenant's ask: morph-and-deliver ``rows`` (b, F) of private data."""
+
+    request_id: int
+    tenant_id: str
+    rows: np.ndarray            # (b, F) unrolled private data
+    delivered: int = 0          # rows already scheduled into microbatches
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSlice:
+    """Where a contiguous run of one request's rows landed in a microbatch."""
+
+    request_id: int
+    req_offset: int             # first row of the run within the request
+    group: int                  # group index in the microbatch
+    group_offset: int           # first row of the run within the group
+    n_rows: int
+
+
+@dataclasses.dataclass
+class Microbatch:
+    """A padded (G, B, F) tensor plus the bookkeeping to scatter results back."""
+
+    x: np.ndarray               # (G, B, F) zero-padded rows
+    group_tenant: np.ndarray    # (G,) int32 tenant index per group (0 on padding)
+    slices: list[GroupSlice]
+    n_real_groups: int
+    n_real_rows: int
+
+    @property
+    def n_padded_rows(self) -> int:
+        return self.x.shape[0] * self.x.shape[1] - self.n_real_rows
+
+
+class RequestQueue:
+    """FIFO delivery queue with tenant-grouped, bucket-padded coalescing."""
+
+    def __init__(
+        self,
+        feature_dim: int,
+        *,
+        max_rows: int = 64,
+        row_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
+        group_buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
+        dtype=np.float32,
+    ):
+        assert max_rows in row_buckets, (max_rows, row_buckets)
+        self.feature_dim = feature_dim
+        self.max_rows = max_rows
+        self.row_buckets = tuple(sorted(row_buckets))
+        self.group_buckets = tuple(sorted(group_buckets))
+        self.dtype = np.dtype(dtype)
+        self._pending: list[DeliveryRequest] = []
+        self._next_id = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(r.rows.shape[0] - r.delivered for r in self._pending)
+
+    def ensure_group_bucket(self, n: int) -> None:
+        """Add ``n`` to the group buckets (steady-state "all tenants active"
+        microbatches then land exactly on G == n).  Counts above the largest
+        bucket are ignored: max_groups stays the configured ceiling and such
+        traffic simply spans several microbatches."""
+        if 0 < n <= self.group_buckets[-1]:
+            self.group_buckets = tuple(sorted({*self.group_buckets, n}))
+
+    def submit(self, tenant_id: str, rows: np.ndarray) -> int:
+        rows = np.asarray(rows, self.dtype)
+        if rows.ndim != 2 or rows.shape[1] != self.feature_dim:
+            raise ValueError(
+                f"expected rows of shape (b, {self.feature_dim}), got {rows.shape}"
+            )
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(DeliveryRequest(rid, tenant_id, rows))
+        return rid
+
+    def coalesce(
+        self, tenant_index: Mapping[str, int] | Callable[[str], int]
+    ) -> Microbatch | None:
+        """Pack as many pending rows as fit into one padded microbatch.
+
+        ``tenant_index`` maps tenant id -> row index into the registry's
+        stacked secret arrays.  Returns None when the queue is empty.
+        """
+        if not self._pending:
+            return None
+        lookup = tenant_index if callable(tenant_index) else tenant_index.__getitem__
+
+        max_groups = self.group_buckets[-1]
+        # Gather per-tenant runs in FIFO order: (tenant, [(request, offset, n)]).
+        chunks: list[tuple[str, list[tuple[DeliveryRequest, int, int]]]] = []
+        open_chunk: dict[str, int] = {}  # tenant -> index into `chunks` of a
+        # chunk that still has spare row capacity
+        for req in self._pending:
+            remaining = req.rows.shape[0] - req.delivered
+            offset = req.delivered
+            while remaining > 0:
+                idx = open_chunk.get(req.tenant_id)
+                if idx is None:
+                    if len(chunks) >= max_groups:
+                        break
+                    chunks.append((req.tenant_id, []))
+                    idx = len(chunks) - 1
+                    open_chunk[req.tenant_id] = idx
+                used = sum(n for _, _, n in chunks[idx][1])
+                take = min(remaining, self.max_rows - used)
+                if take == 0:
+                    del open_chunk[req.tenant_id]
+                    continue
+                chunks[idx][1].append((req, offset, take))
+                offset += take
+                remaining -= take
+                if used + take == self.max_rows:
+                    del open_chunk[req.tenant_id]
+            if remaining > 0 and len(chunks) >= max_groups and not open_chunk:
+                break
+
+        if not chunks:
+            return None
+
+        largest = max(sum(n for _, _, n in runs) for _, runs in chunks)
+        B = bucketize(largest, self.row_buckets)
+        G = bucketize(len(chunks), self.group_buckets)
+
+        x = np.zeros((G, B, self.feature_dim), self.dtype)
+        gidx = np.zeros((G,), np.int32)
+        slices: list[GroupSlice] = []
+        n_real_rows = 0
+        for g, (tenant, runs) in enumerate(chunks):
+            gidx[g] = lookup(tenant)
+            cursor = 0
+            for req, off, n in runs:
+                x[g, cursor : cursor + n] = req.rows[off : off + n]
+                slices.append(GroupSlice(req.request_id, off, g, cursor, n))
+                req.delivered = off + n
+                cursor += n
+                n_real_rows += n
+
+        self._pending = [
+            r for r in self._pending if r.delivered < r.rows.shape[0]
+        ]
+        return Microbatch(
+            x=x, group_tenant=gidx, slices=slices,
+            n_real_groups=len(chunks), n_real_rows=n_real_rows,
+        )

@@ -1,5 +1,6 @@
 """Distribution substrate: logical-axis sharding rules + activation hints."""
 from . import rules
 from .hints import hint
+from .rules import delivery_rules
 
-__all__ = ["rules", "hint"]
+__all__ = ["rules", "hint", "delivery_rules"]

@@ -126,6 +126,29 @@ def cache_rules(mesh: Mesh, seq_shard: bool = False) -> Rules:
     return Rules(table, mesh)
 
 
+def delivery_rules(mesh: Mesh) -> Rules:
+    """Delivery-engine microbatch placement (repro.runtime.engine).
+
+    The microbatch is (group, rows, features) with one tenant per group; the
+    group axis is embarrassingly parallel (each group carries its own secret
+    core / Aug-Conv matrix) and shards over the data-parallel axes.  Rows and
+    feature dims stay local so each device runs whole per-tenant GEMMs —
+    morphing never needs cross-device contraction.  The stacked secret arrays
+    (T, q, q) / (T, F_in, F_out) are replicated: every shard may serve any
+    tenant.
+    """
+    table: dict[str, MeshAxes] = {
+        "group": dp_axes(mesh),
+        "rows": None,
+        "features": None,
+        "out_features": None,
+        "tenant": None,       # stacked secrets: replicated
+        "core_in": None,
+        "core_out": None,
+    }
+    return Rules(table, mesh)
+
+
 def tree_shardings(rules: Rules, axes_tree: Any, abstract_tree: Any,
                    fallbacks: list[str] | None = None) -> Any:
     """Build a NamedSharding tree from (logical axes tree, abstract tree)."""

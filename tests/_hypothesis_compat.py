@@ -1,0 +1,54 @@
+"""Optional-``hypothesis`` shim.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  When hypothesis is installed (the ``test`` extra,
+see pyproject.toml) the real decorators are re-exported and the property
+sweeps run as usual.  When it is absent — the tier-1 CPU gate runs without
+it — the property-based tests collect cleanly and skip at runtime, while
+every plain/parametrized test in the same module still runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised by the tier-1 gate
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy factory
+        returns another inert placeholder, so module-level ``@given(...)``
+        decorations evaluate without hypothesis present."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _Strategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Zero-arg replacement: the strategy-driven parameters no longer
+            # exist, so pytest must not try to resolve them as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed; property sweep skipped")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

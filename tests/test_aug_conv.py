@@ -3,7 +3,7 @@ channel-randomization behaviour — the paper's central correctness claims."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     ConvGeometry, DataProvider, Developer, MoLeSession, conv_reference,

@@ -3,7 +3,7 @@ sweep over geometries via hypothesis."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     ConvGeometry, conv_as_matrix, conv_reference, d2r_conv_apply,

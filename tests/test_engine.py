@@ -1,0 +1,277 @@
+"""Delivery engine (repro.runtime.engine): multi-tenant isolation, padded
+microbatch equivalence to per-request delivery, and kernel backend dispatch."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvGeometry, SessionRegistry, morph
+from repro.core.morphing import unmorph
+from repro.kernels import morph_rows_batched, aug_conv_forward_batched, ref
+from repro.kernels.dispatch import resolve_backend
+from repro.runtime import MoLeDeliveryEngine, RequestQueue
+
+
+GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+
+
+def _registry(rng, tenants=3, kappa=2):
+    reg = SessionRegistry(GEOM, kappa=kappa)
+    fan_in = GEOM.alpha * GEOM.p * GEOM.p
+    for i in range(tenants):
+        k = rng.standard_normal(
+            (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        reg.register(f"t{i}", k)
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# padded-microbatch equivalence to per-request MoLeSession.deliver
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_per_request_deliver(rng):
+    reg = _registry(rng)
+    eng = MoLeDeliveryEngine(reg, max_rows=8,
+                             row_buckets=(1, 2, 4, 8), group_buckets=(1, 2, 4))
+    reqs = []
+    for i in range(9):  # ragged sizes -> padding in every microbatch
+        t = f"t{i % 3}"
+        d = rng.standard_normal((1 + i % 4, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        reqs.append((eng.submit(t, d), t, d))
+    done = eng.flush()
+    assert sorted(done) == sorted(r for r, _, _ in reqs)
+    for rid, t, d in reqs:
+        want = np.asarray(reg.session(t).deliver(jnp.asarray(d)))
+        got = eng.take(rid)
+        assert got.shape == (d.shape[0], GEOM.beta, GEOM.n, GEOM.n)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_large_request_spans_microbatches(rng):
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg, max_rows=4,
+                             row_buckets=(1, 2, 4), group_buckets=(1, 2))
+    d = rng.standard_normal((19, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    feats = eng.deliver("t0", d)
+    want = np.asarray(reg.session("t0").deliver(jnp.asarray(d)))
+    np.testing.assert_allclose(feats, want, atol=1e-5)
+    assert eng.stats.microbatches >= 3  # 19 rows / (2 groups x 4 rows)
+
+
+def test_engine_delivers_prerolled_rows(rng):
+    reg = _registry(rng)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    rows = d.reshape(3, -1)
+    np.testing.assert_allclose(
+        eng.deliver("t1", rows), eng.deliver("t1", d), atol=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant isolation
+# ---------------------------------------------------------------------------
+
+def test_tenant_rows_use_only_their_own_secrets(rng):
+    """Each tenant's engine output equals the plain convolution under *their*
+    channel permutation — i.e. morph/unmorph round-tripped through their own
+    core, untouched by any co-batched tenant."""
+    reg = _registry(rng, tenants=3)
+    eng = MoLeDeliveryEngine(reg)
+    datas = {
+        t: rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        for t in reg.tenant_ids
+    }
+    rids = {t: eng.submit(t, d) for t, d in datas.items()}  # one microbatch
+    eng.flush()
+    for t, d in datas.items():
+        feats = eng.take(rids[t])
+        want = np.asarray(reg.session(t).deliver(jnp.asarray(d)))
+        np.testing.assert_allclose(feats, want, atol=1e-5)
+
+
+def test_cross_tenant_unmorph_fails(rng):
+    """Tenant B's core cannot unmorph tenant A's morphed rows (distinct
+    secrets), while A's own core recovers them exactly."""
+    reg = _registry(rng, tenants=2)
+    a, b = (reg.session(t) for t in reg.tenant_ids)
+    x = jnp.asarray(
+        rng.standard_normal((4, GEOM.in_features)).astype(np.float32)
+    )
+    ta = a.provider.morph_rows(x)
+    back_a = np.asarray(unmorph(ta, a.provider._core))
+    back_b = np.asarray(unmorph(ta, b.provider._core))
+    np.testing.assert_allclose(back_a, np.asarray(x), atol=1e-4)
+    assert np.max(np.abs(back_b - np.asarray(x))) > 0.1
+
+
+def test_registry_secrets_are_distinct(rng):
+    reg = _registry(rng, tenants=4)
+    cores = reg.stacked_cores()
+    augs = reg.stacked_aug_matrices()
+    assert cores.shape[0] == augs.shape[0] == 4
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert np.max(np.abs(cores[i] - cores[j])) > 1e-3
+
+
+def test_flush_on_empty_registry_is_a_noop(rng):
+    eng = MoLeDeliveryEngine(SessionRegistry(GEOM, kappa=2))
+    assert eng.flush() == {}
+
+
+def test_default_seeds_are_not_derivable_from_tenant_id(rng):
+    """Two registries registering the same tenant id must draw different
+    secrets — the default seed comes from OS entropy, not the public id."""
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    core_a = SessionRegistry(GEOM, kappa=2).register("t0", k).provider._core
+    core_b = SessionRegistry(GEOM, kappa=2).register("t0", k).provider._core
+    assert np.max(np.abs(core_a.matrix - core_b.matrix)) > 1e-3
+
+
+def test_registry_rejects_duplicates_and_unknown_tenants(rng):
+    reg = _registry(rng, tenants=1)
+    with pytest.raises(ValueError):
+        reg.register("t0", np.zeros((2, 4, 3, 3), np.float32))
+    eng = MoLeDeliveryEngine(reg)
+    with pytest.raises(KeyError):
+        eng.submit("nobody", np.zeros((1, GEOM.alpha, GEOM.m, GEOM.m)))
+
+
+def test_late_registration_refreshes_plan(rng):
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    eng.deliver("t0", d)
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    reg.register("late", k)
+    got = eng.deliver("late", d)
+    want = np.asarray(reg.session("late").deliver(jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched kernel dispatch (CPU path) vs protocol-level morphing
+# ---------------------------------------------------------------------------
+
+def test_batched_dispatch_matches_protocol_morph(rng):
+    """morph_rows_batched (jnp backend) == per-group morphing.morph."""
+    from repro.core.morphing import make_core
+
+    kappa, q, G, B = 2, 16, 3, 5
+    cores = [make_core(rng, kappa * q, kappa) for _ in range(G)]
+    x = rng.standard_normal((G, B, kappa * q)).astype(np.float32)
+    got = morph_rows_batched(
+        jnp.asarray(x), jnp.asarray(np.stack([c.matrix for c in cores])),
+        kappa, backend="jnp",
+    )
+    for g in range(G):
+        want = np.asarray(morph(jnp.asarray(x[g]), cores[g]))
+        np.testing.assert_allclose(np.asarray(got[g]), want, atol=1e-5)
+
+
+def test_batched_dispatch_backends_agree(rng):
+    """jnp reference vs Pallas interpret on a tileable batched shape."""
+    G, B, kappa, q = 2, 8, 2, 128
+    x = jnp.asarray(rng.standard_normal((G, B, kappa * q)).astype(np.float32))
+    cores = jnp.asarray(
+        (rng.standard_normal((G, q, q)) / np.sqrt(q)).astype(np.float32)
+    )
+    got_jnp = morph_rows_batched(x, cores, kappa, backend="jnp")
+    got_int = morph_rows_batched(x, cores, kappa, backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(got_int), np.asarray(got_jnp), atol=1e-4
+    )
+
+    t = jnp.asarray(rng.standard_normal((G, 8, 256)).astype(np.float32))
+    c = jnp.asarray(
+        (rng.standard_normal((G, 256, 128)) / 16).astype(np.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(aug_conv_forward_batched(t, c, backend="interpret")),
+        np.asarray(aug_conv_forward_batched(t, c, backend="jnp")),
+        atol=1e-4,
+    )
+
+
+def test_batched_ref_fallback_for_nontileable(rng):
+    """Non-tileable shapes route every backend to the reference math."""
+    G, B, kappa, q = 2, 3, 3, 10
+    x = jnp.asarray(rng.standard_normal((G, B, kappa * q)).astype(np.float32))
+    cores = jnp.asarray(rng.standard_normal((G, q, q)).astype(np.float32))
+    want = ref.block_diag_matmul_batched_ref(x, cores, kappa)
+    for be in ("jnp", "interpret"):
+        np.testing.assert_allclose(
+            np.asarray(morph_rows_batched(x, cores, kappa, backend=be)),
+            np.asarray(want), atol=1e-5,
+        )
+
+
+def test_resolve_backend_validates():
+    assert resolve_backend("jnp") == "jnp"
+    assert resolve_backend("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        resolve_backend("mosaic")
+
+
+# ---------------------------------------------------------------------------
+# queue coalescing
+# ---------------------------------------------------------------------------
+
+def test_queue_buckets_and_padding():
+    q = RequestQueue(4, max_rows=8, row_buckets=(1, 2, 4, 8),
+                     group_buckets=(1, 2, 4))
+    q.submit("a", np.ones((3, 4), np.float32))
+    q.submit("b", np.ones((5, 4), np.float32))
+    mb = q.coalesce({"a": 0, "b": 1})
+    assert mb.x.shape == (2, 8, 4)          # G bucket 2, B bucket 8 (5 -> 8)
+    assert mb.n_real_rows == 8
+    assert mb.n_padded_rows == 8
+    assert list(mb.group_tenant) == [0, 1]
+    assert len(q) == 0 and q.coalesce({"a": 0, "b": 1}) is None
+
+
+def test_queue_same_tenant_requests_share_a_group():
+    q = RequestQueue(4, max_rows=8, row_buckets=(1, 2, 4, 8),
+                     group_buckets=(1, 2, 4))
+    r0 = q.submit("a", np.full((2, 4), 1.0, np.float32))
+    r1 = q.submit("a", np.full((3, 4), 2.0, np.float32))
+    mb = q.coalesce({"a": 0})
+    assert mb.x.shape[0] == 1 and mb.n_real_rows == 5
+    # FIFO within the group: request r0's rows precede r1's
+    assert np.all(mb.x[0, :2] == 1.0) and np.all(mb.x[0, 2:5] == 2.0)
+    by_req = {s.request_id: s for s in mb.slices}
+    assert by_req[r0].group_offset == 0 and by_req[r1].group_offset == 2
+
+
+def test_queue_rejects_bad_shapes():
+    q = RequestQueue(4)
+    with pytest.raises(ValueError):
+        q.submit("a", np.ones((2, 5), np.float32))
+    with pytest.raises(ValueError):
+        q.submit("a", np.ones((5,), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules for the engine microbatch
+# ---------------------------------------------------------------------------
+
+def test_delivery_rules_shard_group_axis_only():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import single_device_mesh
+    from repro.sharding import delivery_rules
+
+    rules = delivery_rules(single_device_mesh())
+    spec = rules.spec_for(("group", "rows", "features"), (4, 16, 72))
+    assert spec == P("data", None, None)
+    # stacked secrets replicate
+    assert rules.spec_for(("tenant", "core_in", "core_out"), (4, 36, 36)) == P(
+        None, None, None
+    )

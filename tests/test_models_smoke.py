@@ -11,6 +11,15 @@ from repro.launch.steps import TrainHParams, make_train_step
 from repro.models import Model
 from repro.optim import adamw
 
+# Tier-1 keeps two fast dense archs; the remaining (larger / recurrent / MoE
+# / frontend) smoke cases run in the `-m slow` nightly lane — all ten together
+# exceed the 120 s tier-1 budget on CPU.
+FAST_ARCHS = ("deepseek_7b", "phi3_mini_3p8b")
+ARCH_PARAMS = [
+    pytest.param(a, marks=() if a in FAST_ARCHS else pytest.mark.slow)
+    for a in ARCHS
+]
+
 
 def _batch(cfg, rng, B=2, S=16, with_targets=True):
     out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
@@ -25,7 +34,7 @@ def _batch(cfg, rng, B=2, S=16, with_targets=True):
     return out
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_shapes_no_nans(rng, arch):
     cfg = get_smoke_config(arch)
     model = Model(cfg)
@@ -36,7 +45,7 @@ def test_forward_shapes_no_nans(rng, arch):
     assert not bool(jnp.isnan(logits).any())
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_one_train_step(rng, arch):
     cfg = get_smoke_config(arch)
     model = Model(cfg)
@@ -56,7 +65,7 @@ def test_one_train_step(rng, arch):
     assert moved
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_forward(rng, arch):
     cfg = get_smoke_config(arch)
     model = Model(cfg)
