@@ -4,7 +4,9 @@
    (``repro.runtime.engine``): several tenants register provider sessions
    (each with its own secret core + channel permutation), their requests are
    coalesced into padded microbatches, and morph + Aug-Conv execute as one
-   jitted batched path.
+   jitted batched path — first synchronously, then through the async front
+   door (``repro.runtime.async_engine``: background deadline flusher with a
+   latency SLO + per-tenant admission control, reporting p50/p95).
 2. *LM inference*: provider morphs prompts (secret vocab permutation) ->
    developer prefills + decodes with Aug-fused params -> provider unmorphs
    the generations.
@@ -15,10 +17,16 @@ from repro.launch import serve as serve_mod
 
 
 def main():
-    # Stage 1: multi-tenant delivery engine (morph -> Aug-Conv), batched.
+    # Stage 1a: multi-tenant delivery engine (morph -> Aug-Conv), batched.
     serve_mod.main([
         "--mode", "delivery", "--tenants", "4", "--requests", "32",
         "--batch", "2", "--kappa", "2",
+    ])
+    # Stage 1b: the same traffic through the async front door — deadline
+    # flusher (5 ms SLO) + per-tenant admission control, p50/p95 reported.
+    serve_mod.main([
+        "--mode", "delivery", "--async", "--tenants", "4", "--requests", "32",
+        "--batch", "2", "--kappa", "2", "--max-delay-ms", "5",
     ])
     # Stage 2: MoLe-secured LM serving (token morphing + Aug-fused params).
     serve_mod.main([

@@ -132,24 +132,49 @@ class SessionRegistry:
 
     All tenants share one ``ConvGeometry`` and ``kappa`` — that is what makes
     their secrets *stackable*: the registry exposes the cores as a dense
-    ``(T, q, q)`` array and the Aug-Conv matrices as ``(T, F_in, F_out)``, so
+    ``(S, q, q)`` array and the Aug-Conv matrices as ``(S, F_in, F_out)``, so
     ``repro.runtime.engine`` can execute many tenants' morph + Aug-Conv as one
     batched GEMM.  Each tenant still has its own independent secret core and
     channel permutation; nothing is shared across the trust boundary between
     tenants.
 
-    ``version`` increments on every registration; the engine uses it to know
-    when its device-side stacked arrays are stale.
+    **Shape-stable slots.**  The stacked arrays have a fixed leading dim
+    ``S == capacity`` of pre-allocated *slots*; tenants are assigned to slots
+    on registration and evicted LRU (their secrets stay in the host-side
+    session store — "host offload") when the slots run out.  Because the
+    stacked shapes never change while capacity holds, tenant churn updates
+    the engine's device buffers in place instead of retracing its jitted
+    delivery step.  With ``capacity=None`` (the default) the slot table grows
+    by doubling instead of evicting, so shapes change at most ``O(log T)``
+    times over a registry's lifetime.
+
+    ``version`` increments on every slot-content change; ``updates_since``
+    gives the engine the changed slots so it can patch its device-side
+    stacked arrays incrementally (falling back to a full rebuild only when
+    the changelog has been trimmed or capacity grew).
     """
 
+    # Changelog entries retained per slot of capacity before updates_since
+    # gives up and requests a full rebuild.
+    _LOG_FACTOR = 4
+
     def __init__(self, geom: ConvGeometry, kappa: int = 1,
-                 core_mode: str = "orthogonal"):
+                 core_mode: str = "orthogonal", capacity: int | None = None):
         self.geom = geom
         self.kappa = kappa
         self.core_mode = core_mode
-        self._sessions: dict[str, MoLeSession] = {}
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._auto_capacity = capacity is None
+        self._slot_tenant: list[str | None] = [None] * (capacity or 1)
+        self._slot_of: dict[str, int] = {}
+        self._sessions: dict[str, MoLeSession] = {}   # host store: ALL tenants
         self._order: list[str] = []
+        self._clock = 0
+        self._last_used: dict[str, int] = {}
         self.version = 0
+        self.evictions = 0
+        self._slot_log: list[tuple[int, int]] = []    # (version, slot)
 
     def __len__(self) -> int:
         return len(self._order)
@@ -160,6 +185,93 @@ class SessionRegistry:
     @property
     def tenant_ids(self) -> tuple[str, ...]:
         return tuple(self._order)
+
+    @property
+    def capacity(self) -> int:
+        return len(self._slot_tenant)
+
+    @property
+    def resident_tenants(self) -> tuple[str, ...]:
+        return tuple(t for t in self._slot_tenant if t is not None)
+
+    def is_resident(self, tenant_id: str) -> bool:
+        return tenant_id in self._slot_of
+
+    # -- slot bookkeeping ----------------------------------------------------
+    def _log_slot(self, slot: int) -> None:
+        self.version += 1
+        self._slot_log.append((self.version, slot))
+        if len(self._slot_log) > self._LOG_FACTOR * self.capacity:
+            del self._slot_log[: len(self._slot_log) // 2]
+
+    def _touch(self, tenant_id: str) -> None:
+        self._clock += 1
+        self._last_used[tenant_id] = self._clock
+
+    def _assign_slot(self, tenant_id: str) -> int:
+        try:
+            slot = self._slot_tenant.index(None)
+        except ValueError:
+            if self._auto_capacity:
+                # Grow by doubling: the engine notices the stacked-shape
+                # change and rebuilds; only O(log T) such retraces ever occur.
+                slot = self.capacity
+                self._slot_tenant.extend([None] * self.capacity)
+            else:
+                victim = min(self._slot_of, key=self._last_used.__getitem__)
+                slot = self.evict(victim)
+        self._slot_tenant[slot] = tenant_id
+        self._slot_of[tenant_id] = slot
+        self._log_slot(slot)
+        self._touch(tenant_id)
+        return slot
+
+    def evict(self, tenant_id: str) -> int:
+        """Offload a tenant's secrets back to the host store, freeing its slot.
+
+        The session (and its secrets) survive in host memory; the device-side
+        stacked arrays zero the slot on the engine's next plan refresh.
+        Returns the freed slot index.
+        """
+        slot = self._slot_of.pop(tenant_id)
+        self._slot_tenant[slot] = None
+        self._last_used.pop(tenant_id, None)
+        self.evictions += 1
+        self._log_slot(slot)
+        return slot
+
+    def ensure_resident(self, tenant_id: str) -> int:
+        """Give a registered tenant a slot (LRU-evicting if needed)."""
+        slot = self._slot_of.get(tenant_id)
+        if slot is None:
+            if tenant_id not in self._sessions:
+                raise KeyError(f"unknown tenant {tenant_id!r}")
+            slot = self._assign_slot(tenant_id)
+        return slot
+
+    def slot_for(self, tenant_id: str) -> int:
+        """Resident slot index for a tenant (activates + LRU-touches it)."""
+        slot = self.ensure_resident(tenant_id)
+        self._touch(tenant_id)
+        return slot
+
+    # Back-compat name from the pre-slot registry.
+    tenant_index = slot_for
+
+    def updates_since(self, version: int) -> list[int] | None:
+        """Slots whose contents changed after ``version`` (deduplicated).
+
+        Returns None when the changelog no longer reaches back that far (or
+        the caller's version is from the future) — full rebuild required.
+        """
+        if version == self.version:
+            return []
+        if version > self.version:
+            return None
+        covered_from = self._slot_log[0][0] - 1 if self._slot_log else self.version
+        if version < covered_from:
+            return None
+        return sorted({s for v, s in self._slot_log if v > version})
 
     def register(
         self, tenant_id: str, dev_kernels: np.ndarray, seed: int | None = None
@@ -180,24 +292,36 @@ class SessionRegistry:
         )
         self._sessions[tenant_id] = sess
         self._order.append(tenant_id)
-        self.version += 1
+        self._assign_slot(tenant_id)
         return sess
 
     def session(self, tenant_id: str) -> MoLeSession:
         return self._sessions[tenant_id]
 
-    def tenant_index(self, tenant_id: str) -> int:
-        return self._order.index(tenant_id)
-
     # -- stacked secret views consumed by the delivery engine ---------------
+    @property
+    def _core_q(self) -> int:
+        return self.geom.in_features // self.kappa
+
+    def slot_core(self, slot: int) -> np.ndarray:
+        """(q, q) core occupying ``slot`` (zeros when the slot is free)."""
+        t = self._slot_tenant[slot]
+        if t is None:
+            return np.zeros((self._core_q, self._core_q), np.float32)
+        return np.asarray(self._sessions[t].provider._core.matrix)
+
+    def slot_aug(self, slot: int) -> np.ndarray:
+        """(F_in, F_out) Aug-Conv matrix occupying ``slot`` (zeros if free)."""
+        t = self._slot_tenant[slot]
+        g = self.geom
+        if t is None:
+            return np.zeros((g.in_features, g.out_features), np.float32)
+        return np.asarray(self._sessions[t].developer.aug_matrix)
+
     def stacked_cores(self) -> np.ndarray:
-        """(T, q, q) — tenant t's secret core at index t (registration order)."""
-        return np.stack(
-            [self._sessions[t].provider._core.matrix for t in self._order]
-        )
+        """(S, q, q) — the core of the tenant resident in each slot."""
+        return np.stack([self.slot_core(s) for s in range(self.capacity)])
 
     def stacked_aug_matrices(self) -> np.ndarray:
-        """(T, F_in, F_out) — tenant t's developer-side Aug-Conv matrix."""
-        return np.stack(
-            [np.asarray(self._sessions[t].developer.aug_matrix) for t in self._order]
-        )
+        """(S, F_in, F_out) — each slot's developer-side Aug-Conv matrix."""
+        return np.stack([self.slot_aug(s) for s in range(self.capacity)])

@@ -12,6 +12,15 @@ path (``repro.runtime.engine``).  Reports throughput vs the per-request
     PYTHONPATH=src python -m repro.launch.serve --mode delivery \
         --tenants 4 --requests 64 --batch 1 --kappa 4
 
+``--mode delivery --async`` — the same traffic through the async front door
+(``repro.runtime.async_engine``): a background flusher with a
+``--max-delay-ms`` latency SLO and per-tenant admission control
+(``--max-inflight-rows``, ``--admission block|reject``); additionally
+reports p50/p95 completion latency.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode delivery --async \
+        --tenants 4 --requests 64 --max-delay-ms 5
+
 ``--mode lm`` — batched prefill + decode over a MoLe-secured token stream:
 provider morphs request tokens (secret vocab permutation) -> developer
 serves with Aug-fused params -> provider unmorphs the sampled tokens.
@@ -41,12 +50,16 @@ from repro.models.base import MoLeCfg
 def run_delivery(args) -> dict:
     """Serve image-delivery traffic for many tenants through the engine."""
     from repro.core import ConvGeometry, SessionRegistry
-    from repro.runtime import MoLeDeliveryEngine
+    from repro.runtime import AsyncDeliveryEngine, MoLeDeliveryEngine
 
     rng = np.random.default_rng(args.seed)
     geom = ConvGeometry(alpha=args.channels, beta=args.out_channels,
                         m=args.image_size, p=3)
-    registry = SessionRegistry(geom, kappa=args.kappa)
+    # Default the slot capacity to the tenant count: an exactly-sized slot
+    # table keeps the steady-state "all tenants active" microbatch on the
+    # identity-gather fast path (gidx == arange(capacity)).
+    capacity = args.capacity if args.capacity is not None else args.tenants
+    registry = SessionRegistry(geom, kappa=args.kappa, capacity=capacity)
     fan_in = geom.alpha * geom.p * geom.p
     for i in range(args.tenants):
         kernels = rng.standard_normal(
@@ -71,11 +84,23 @@ def run_delivery(args) -> dict:
     for t, d in requests:
         jax.block_until_ready(registry.session(t).deliver(jnp.asarray(d)))
 
-    t0 = time.time()
-    rids = [engine.submit(t, d) for t, d in requests]
-    engine.flush()
-    feats = {r: engine.take(r) for r in rids}
-    dt_engine = time.time() - t0
+    if args.use_async:
+        front = AsyncDeliveryEngine(
+            engine, max_delay_ms=args.max_delay_ms,
+            max_inflight_rows=args.max_inflight_rows, admission=args.admission,
+        )
+        t0 = time.time()
+        futures = [(r, front.submit(t, d)) for r, (t, d) in enumerate(requests)]
+        feats = {r: f.result(timeout=120) for r, f in futures}
+        dt_engine = time.time() - t0
+        rids = [r for r, _ in futures]
+        front.close()
+    else:
+        t0 = time.time()
+        rids = [engine.submit(t, d) for t, d in requests]
+        engine.flush()
+        feats = {r: engine.take(r) for r in rids}
+        dt_engine = time.time() - t0
 
     t0 = time.time()
     base = [
@@ -89,22 +114,33 @@ def run_delivery(args) -> dict:
         float(np.max(np.abs(feats[r] - base[i]))) for i, r in enumerate(rids)
     )
     stats = engine.stats
+    latency = (
+        f"  latency:     p50={stats.p50_ms:7.2f}ms p95={stats.p95_ms:7.2f}ms "
+        f"(SLO max_delay={args.max_delay_ms}ms, {stats.flushes} flushes)\n"
+        if args.use_async else ""
+    )
     print(
         f"delivery tenants={args.tenants} requests={args.requests} "
-        f"batch={args.batch} kappa={args.kappa} backend={engine.backend}\n"
+        f"batch={args.batch} kappa={args.kappa} backend={engine.backend} "
+        f"async={args.use_async}\n"
         f"  engine:      {n_images / dt_engine:9.1f} images/s "
         f"({stats.microbatches} microbatches, "
         f"padding {stats.padding_fraction:.0%})\n"
+        f"{latency}"
         f"  per-request: {n_images / dt_per_request:9.1f} images/s\n"
         f"  speedup:     {dt_per_request / dt_engine:9.2f}x   "
         f"max |engine - per-request| = {err:.2e}"
     )
-    return {
+    out = {
         "images_per_s_engine": n_images / dt_engine,
         "images_per_s_per_request": n_images / dt_per_request,
         "speedup": dt_per_request / dt_engine,
         "max_err": err,
     }
+    if args.use_async:
+        out["p50_ms"] = stats.p50_ms
+        out["p95_ms"] = stats.p95_ms
+    return out
 
 
 def main(argv=None):
@@ -122,6 +158,20 @@ def main(argv=None):
     ap.add_argument("--image-size", type=int, default=16)
     ap.add_argument("--backend", default=None,
                     help="kernel backend: pallas | interpret | jnp (default auto)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the async front door (deadline "
+                         "flusher + admission control)")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="async latency SLO: max wait before a flush fires")
+    ap.add_argument("--max-inflight-rows", type=int, default=4096,
+                    help="async per-tenant admission quota (rows in flight)")
+    ap.add_argument("--admission", default="block", choices=["block", "reject"],
+                    help="over-quota behavior: backpressure or AdmissionError")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="registry slot capacity (default: one slot per "
+                         "--tenants, which keeps steady-state microbatches "
+                         "on the identity-gather fast path; tenants beyond "
+                         "capacity LRU-evict to host)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -1,16 +1,21 @@
 """Serving/fault-tolerance runtime.
 
-  engine      batched multi-tenant MoLe delivery engine (morph + Aug-Conv)
-  queue       request queue + padded-microbatch coalescing
-  resilience  resilient loop, failure injection, stragglers
+  engine        batched multi-tenant MoLe delivery engine (morph + Aug-Conv)
+  async_engine  async front door: deadline flusher, latency SLOs, admission
+  queue         request queue + padded-microbatch coalescing
+  resilience    resilient loop, failure injection, stragglers
 """
-from .engine import EngineStats, MoLeDeliveryEngine
+from .async_engine import AdmissionError, AsyncDeliveryEngine
+from .engine import EngineStats, MoLeDeliveryEngine, delivery_trace_count
 from .queue import DeliveryRequest, Microbatch, RequestQueue
 from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
 
 __all__ = [
+    "AdmissionError",
+    "AsyncDeliveryEngine",
     "EngineStats",
     "MoLeDeliveryEngine",
+    "delivery_trace_count",
     "DeliveryRequest",
     "Microbatch",
     "RequestQueue",

@@ -1,0 +1,289 @@
+"""Async front door for the MoLe delivery engine.
+
+``MoLeDeliveryEngine`` is deliberately synchronous: ``submit`` then ``flush``
+drains everything, so one slow tenant (or a caller that simply hasn't called
+``flush`` yet) stalls the microbatch clock for everyone.  This module puts a
+latency-SLO'd, admission-controlled front door over it:
+
+  * **Background flusher** — a daemon thread owns all engine access; callers
+    get a ``concurrent.futures.Future`` per request and never touch jax.
+  * **Deadline-driven flushing** — a flush fires when the *oldest* pending
+    request has waited ``max_delay_ms`` (the latency SLO knob), or earlier
+    when enough rows have accumulated to fill a microbatch
+    (``flush_rows``) — throughput batching with a bounded wait.
+  * **Per-tenant admission control** — at most ``max_inflight_rows`` rows per
+    tenant may be in flight (submitted, not yet completed).  Beyond quota,
+    ``admission="block"`` applies backpressure (the submitting thread waits),
+    ``admission="reject"`` raises :class:`AdmissionError` immediately — a
+    misbehaving tenant is throttled without stalling anyone else's clock.
+  * **Latency accounting** — submit→result completion latency lands in
+    ``EngineStats`` (``p50_ms`` / ``p95_ms`` over a sliding window).
+
+Thread-safety contract: the wrapped engine/queue/registry are only ever
+touched while ``self._cv`` is held (by submitters for ``engine.submit``, by
+the flusher for ``flush``/``take``).  Future callbacks fire outside the lock.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+from repro.core.protocol import SessionRegistry
+
+from .engine import MoLeDeliveryEngine
+
+__all__ = ["AdmissionError", "AsyncDeliveryEngine"]
+
+
+class AdmissionError(RuntimeError):
+    """A tenant exceeded its in-flight row quota under ``admission="reject"``."""
+
+
+class AsyncDeliveryEngine:
+    """Deadline-flushing, admission-controlled wrapper over the sync engine.
+
+    Parameters
+    ----------
+    engine:
+        A :class:`MoLeDeliveryEngine` or a :class:`SessionRegistry` (a
+        default engine is built around it; extra ``engine_kwargs`` pass
+        through).
+    max_delay_ms:
+        Latency SLO: the flusher guarantees a flush starts within this long
+        of any request's submission, so completion latency is bounded by
+        ``max_delay_ms`` + one flush's compute time.
+    flush_rows:
+        Flush early once this many rows are pending (default: one full
+        microbatch, ``max_rows * largest group bucket``).
+    max_inflight_rows:
+        Per-tenant admission quota, counted submit→completion.
+    admission:
+        ``"block"`` (backpressure) or ``"reject"`` (:class:`AdmissionError`).
+    """
+
+    def __init__(
+        self,
+        engine: MoLeDeliveryEngine | SessionRegistry,
+        *,
+        max_delay_ms: float = 5.0,
+        flush_rows: int | None = None,
+        max_inflight_rows: int = 4096,
+        admission: str = "block",
+        **engine_kwargs,
+    ):
+        if isinstance(engine, SessionRegistry):
+            engine = MoLeDeliveryEngine(engine, **engine_kwargs)
+        elif engine_kwargs:
+            raise TypeError(
+                f"engine_kwargs {sorted(engine_kwargs)} only apply when "
+                f"constructing the engine from a registry"
+            )
+        if admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', got {admission!r}")
+        self.engine = engine
+        self.max_delay_ms = float(max_delay_ms)
+        self.flush_rows = (
+            engine.queue.max_rows * engine.queue.group_buckets[-1]
+            if flush_rows is None else int(flush_rows)
+        )
+        self.max_inflight_rows = int(max_inflight_rows)
+        self.admission = admission
+
+        self._cv = threading.Condition()
+        self._resolving = 0  # futures popped by the flusher, not yet resolved
+        self._futures: dict[int, Future] = {}
+        self._submitted_at: dict[int, float] = {}
+        self._rid_tenant: dict[int, tuple[str, int]] = {}  # rid -> (tenant, rows)
+        self._inflight_rows: dict[str, int] = {}
+        self._force_flush = False
+        self._closed = False
+        self._flusher = threading.Thread(
+            target=self._run, name="mole-delivery-flusher", daemon=True
+        )
+        self._flusher.start()
+
+    # -- public API ----------------------------------------------------------
+    @property
+    def stats(self):
+        return self.engine.stats
+
+    @property
+    def registry(self):
+        return self.engine.registry
+
+    def pending(self) -> int:
+        """Requests submitted but not yet completed."""
+        with self._cv:
+            return len(self._futures)
+
+    def submit(self, tenant_id: str, data) -> Future:
+        """Enqueue one tenant request; the Future resolves to features
+        ``(b, beta, n, n)`` once a deadline/bucket flush completes it."""
+        # Payload validation/unrolling is pure per-request work — do it
+        # before taking the lock so data prep never serializes submitters.
+        rows = self.engine.prepare_rows(tenant_id, data)
+        n_rows = rows.shape[0]
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncDeliveryEngine is closed")
+            if n_rows > self.max_inflight_rows:
+                # Larger than the quota itself: no amount of flushing can
+                # ever admit it — blocking would deadlock, so always reject.
+                self.engine.stats.rejected += 1
+                raise AdmissionError(
+                    f"request of {n_rows} rows exceeds the per-tenant quota "
+                    f"of {self.max_inflight_rows} outright; split it"
+                )
+            while (
+                self._inflight_rows.get(tenant_id, 0) + n_rows
+                > self.max_inflight_rows
+            ):
+                if self.admission == "reject":
+                    self.engine.stats.rejected += 1
+                    raise AdmissionError(
+                        f"tenant {tenant_id!r} over quota: "
+                        f"{self._inflight_rows.get(tenant_id, 0)} rows in "
+                        f"flight + {n_rows} submitted > "
+                        f"{self.max_inflight_rows} allowed"
+                    )
+                self._cv.wait()
+                if self._closed:
+                    raise RuntimeError("AsyncDeliveryEngine is closed")
+            rid = self.engine.submit(tenant_id, rows)
+            fut: Future = Future()
+            fut.request_id = rid  # engine request id, for tracing/tests
+            self._futures[rid] = fut
+            self._submitted_at[rid] = time.monotonic()
+            self._rid_tenant[rid] = (tenant_id, n_rows)
+            self._inflight_rows[tenant_id] = (
+                self._inflight_rows.get(tenant_id, 0) + n_rows
+            )
+            self._cv.notify_all()  # wake the flusher: new deadline / bucket
+            return fut
+
+    def deliver(self, tenant_id: str, data, timeout: float | None = None):
+        """Synchronous convenience: submit and wait for the features."""
+        return self.submit(tenant_id, data).result(timeout=timeout)
+
+    def flush_now(self) -> None:
+        """Ask the flusher to flush immediately (does not wait for results)."""
+        with self._cv:
+            # Only arm the flag when there is work: a force left dangling on
+            # an idle engine would make the next lone request skip its
+            # deadline-batching window.
+            if self._futures:
+                self._force_flush = True
+                self._cv.notify_all()
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every in-flight request has completed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            if self._futures:
+                self._force_flush = True
+                self._cv.notify_all()
+            # _resolving covers the window where the flusher has popped
+            # futures but not yet set their results — without it a
+            # concurrent close()'s notify could wake us on an empty table
+            # with results still pending.
+            while self._futures or self._resolving:
+                left = None if deadline is None else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    raise TimeoutError(
+                        f"{len(self._futures) + self._resolving} requests "
+                        f"still in flight"
+                    )
+                self._cv.wait(timeout=left)
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Drain pending work and stop the flusher (idempotent)."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._flusher.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- the flusher thread ---------------------------------------------------
+    def _oldest_deadline(self) -> float | None:
+        if not self._submitted_at:
+            return None
+        return min(self._submitted_at.values()) + self.max_delay_ms / 1e3
+
+    def _should_flush(self, now: float) -> bool:
+        if not self._futures:
+            return False
+        if self._force_flush or self._closed:
+            return True
+        if self.engine.queue.pending_rows >= self.flush_rows:
+            return True
+        deadline = self._oldest_deadline()
+        return deadline is not None and now >= deadline
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._should_flush(time.monotonic()):
+                    if self._closed and not self._futures:
+                        return
+                    deadline = self._oldest_deadline()
+                    timeout = (
+                        None if deadline is None
+                        else max(0.0, deadline - time.monotonic())
+                    )
+                    self._cv.wait(timeout=timeout)
+                self._force_flush = False
+                resolved: list[tuple[Future, object]] = []
+                failed: list[tuple[Future, BaseException]] = []
+                try:
+                    done = self.engine.flush()
+                except Exception as e:  # pragma: no cover - defensive
+                    # A failed flush must not strand waiters: fail everything
+                    # in flight and reset the accounting — including the
+                    # wrapped engine's queued rows and result buffers, which
+                    # would otherwise be coalesced by a later flush into
+                    # results nobody can take().
+                    failed = [(f, e) for f in self._futures.values()]
+                    self._futures.clear()
+                    self._submitted_at.clear()
+                    self._rid_tenant.clear()
+                    self._inflight_rows.clear()
+                    self.engine.reset_pending()
+                else:
+                    now = time.monotonic()
+                    for rid in done:
+                        # A rid submitted to the sync engine directly (mixed
+                        # API use) completes here too but is not ours to
+                        # resolve — leave its result for engine.take().
+                        fut = self._futures.pop(rid, None)
+                        if fut is None:
+                            continue
+                        t0 = self._submitted_at.pop(rid)
+                        tenant, n_rows = self._rid_tenant.pop(rid)
+                        self._inflight_rows[tenant] -= n_rows
+                        if not self._inflight_rows[tenant]:
+                            del self._inflight_rows[tenant]
+                        self.engine.stats.record_latency_ms((now - t0) * 1e3)
+                        resolved.append((fut, self.engine.take(rid)))
+                self._resolving += len(resolved) + len(failed)
+            # Resolve outside the lock: user callbacks must not deadlock us.
+            # set_running_or_notify_cancel() guards against futures the
+            # caller cancelled (e.g. after a result() timeout) — resolving
+            # those would raise InvalidStateError and kill this thread.
+            for fut, feats in resolved:
+                if fut.set_running_or_notify_cancel():
+                    fut.set_result(feats)
+            for fut, err in failed:
+                if fut.set_running_or_notify_cancel():
+                    fut.set_exception(err)
+            # Notify only after the futures are resolved, so a drain()er
+            # waking on an empty in-flight table can rely on .result()
+            # being immediate.
+            with self._cv:
+                self._resolving -= len(resolved) + len(failed)
+                self._cv.notify_all()  # quota freed / drain() progress

@@ -20,9 +20,20 @@ Kernel backend selection follows ``repro.kernels.dispatch``: the Pallas
 Under an active mesh the group axis is sharded over the data-parallel axes
 (``repro.sharding.rules.delivery_rules`` / ``hints.hint``); on a single
 device the hints are no-ops.
+
+**Shape-stable plans.**  The registry's stacked secrets have a fixed leading
+slot dim (``SessionRegistry`` capacity); registration/eviction churn reaches
+the device through per-slot ``.at[slot].set`` patches on the cached plan, so
+``_delivery_step`` is traced at most once per ``(bucket, kappa, backend)``
+shape regardless of tenant churn (``delivery_trace_count`` exposes the trace
+counter the regression test asserts on).
+
+This class is **not** thread-safe; ``repro.runtime.async_engine`` layers a
+lock, a background deadline flusher, and admission control on top.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 
@@ -36,7 +47,7 @@ from repro.kernels.dispatch import resolve_backend
 from repro.kernels.ops import aug_conv_forward_batched, morph_rows_batched
 from repro.sharding.hints import hint
 
-__all__ = ["EngineStats", "MoLeDeliveryEngine"]
+__all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
 
 
 @dataclasses.dataclass
@@ -45,21 +56,64 @@ class EngineStats:
     rows_in: int = 0            # real data rows submitted
     rows_padded: int = 0        # zero rows added by bucketing
     microbatches: int = 0
+    flushes: int = 0
+    rejected: int = 0           # requests refused by admission control
     bucket_shapes: set = dataclasses.field(default_factory=set)
+    # Completion latencies (ms), submit -> result, recorded by the async
+    # front door.  Bounded reservoir: keeps the most recent window so p50/p95
+    # reflect current traffic, not the whole process lifetime.
+    latency_window: int = 4096
+    _latencies_ms: collections.deque = dataclasses.field(default=None)
+
+    def __post_init__(self):
+        if self._latencies_ms is None:
+            self._latencies_ms = collections.deque(maxlen=self.latency_window)
 
     @property
     def padding_fraction(self) -> float:
         total = self.rows_in + self.rows_padded
         return self.rows_padded / total if total else 0.0
 
+    def record_latency_ms(self, ms: float) -> None:
+        self._latencies_ms.append(float(ms))
 
-@dataclasses.dataclass(frozen=True)
+    def latency_quantile_ms(self, q: float) -> float:
+        """Empirical latency quantile in ms over the recent window (nan if
+        nothing has been recorded)."""
+        if not self._latencies_ms:
+            return float("nan")
+        xs = sorted(self._latencies_ms)
+        idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+        return xs[idx]
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency_quantile_ms(0.50)
+
+    @property
+    def p95_ms(self) -> float:
+        return self.latency_quantile_ms(0.95)
+
+
+@dataclasses.dataclass
 class _Plan:
-    """Device-side stacked secrets, refreshed when the registry version bumps."""
+    """Device-side stacked secrets, patched in place as the registry churns."""
 
     version: int
-    cores: jax.Array        # (T, q, q)
-    augs: jax.Array         # (T, F_in, F_out)
+    cores: jax.Array        # (S, q, q)
+    augs: jax.Array         # (S, F_in, F_out)
+
+
+# (x_shape, gidx_shape, stacked_shapes, kappa, backend, identity) tuples seen
+# by actual traces of _delivery_step.  Python side effects inside a jitted
+# function run only while tracing, so this counts compilations, not calls —
+# the retrace-regression test asserts registration churn adds nothing here.
+_TRACES: collections.Counter = collections.Counter()
+
+
+def delivery_trace_count() -> int:
+    """Total number of times ``_delivery_step`` has been traced (process-wide)."""
+    return sum(_TRACES.values())
 
 
 class MoLeDeliveryEngine:
@@ -86,27 +140,60 @@ class MoLeDeliveryEngine:
         self._plan: _Plan | None = None
         self._results: dict[int, np.ndarray] = {}
         self._request_shape: dict[int, tuple[int, ...]] = {}
+        self._done: set[int] = set()
 
     # -- secrets ------------------------------------------------------------
     def _refresh_plan(self) -> _Plan:
-        if self._plan is None or self._plan.version != self.registry.version:
-            self._plan = _Plan(
-                version=self.registry.version,
-                cores=jnp.asarray(self.registry.stacked_cores()),
-                augs=jnp.asarray(self.registry.stacked_aug_matrices()),
+        reg = self.registry
+        plan = self._plan
+        if plan is not None and plan.version != reg.version:
+            slots = (
+                reg.updates_since(plan.version)
+                if plan.cores.shape[0] == reg.capacity else None
             )
-            # Make the tenant count itself a group bucket: the steady-state
-            # "every tenant active" microbatch then lands on G == T with
-            # gidx == arange, which the identity-gather fast path needs.
-            self.queue.ensure_group_bucket(len(self.registry))
-        return self._plan
+            if slots is None:
+                plan = None         # capacity grew / changelog trimmed: rebuild
+            elif not slots:  # pragma: no cover - version bump w/o slot churn
+                plan = dataclasses.replace(plan, version=reg.version)
+            else:
+                # Patch the changed slots in one scatter per stack: shapes
+                # are stable, so neither the scatter nor _delivery_step
+                # retraces on tenant churn — and the (S, ...) stacks are
+                # copied once, not once per slot.
+                idx = jnp.asarray(slots, jnp.int32)
+                plan = _Plan(
+                    version=reg.version,
+                    cores=plan.cores.at[idx].set(
+                        np.stack([reg.slot_core(s) for s in slots])
+                    ),
+                    augs=plan.augs.at[idx].set(
+                        np.stack([reg.slot_aug(s) for s in slots])
+                    ),
+                )
+        if plan is None:
+            plan = _Plan(
+                version=reg.version,
+                cores=jnp.asarray(reg.stacked_cores()),
+                augs=jnp.asarray(reg.stacked_aug_matrices()),
+            )
+        if plan is not self._plan:
+            self._plan = plan
+            # Make the tenant count and the slot capacity group buckets: the
+            # steady-state "every tenant active" microbatch of a capacity-
+            # sized registry then lands on G == S with gidx == arange (slot-
+            # order padding groups included), which the identity-gather fast
+            # path needs.
+            self.queue.ensure_group_bucket(len(reg))
+            self.queue.ensure_group_bucket(reg.capacity)
+        return plan
 
     # -- request intake ------------------------------------------------------
-    def submit(self, tenant_id: str, data) -> int:
-        """Enqueue one tenant request.
+    def prepare_rows(self, tenant_id: str, data) -> np.ndarray:
+        """Validate a request payload and unroll it to ``(b, F_in)`` rows.
 
-        ``data`` is either images ``(b, alpha, m, m)`` or pre-unrolled rows
-        ``(b, F_in)``; returns a request id redeemable after :meth:`flush`.
+        Pure per-request data prep with no engine-state mutation — the async
+        front door runs it outside its lock so payload conversion never
+        serializes submitters.
         """
         if tenant_id not in self.registry:
             raise KeyError(f"unknown tenant {tenant_id!r}")
@@ -117,12 +204,20 @@ class MoLeDeliveryEngine:
                 raise ValueError(
                     f"expected images (b, {g.alpha}, {g.m}, {g.m}), got {data.shape}"
                 )
-            rows = np.asarray(unroll_batch(data))
-        elif data.ndim == 2:
-            rows = data
-        else:
-            raise ValueError(f"expected rank-2 rows or rank-4 images, got {data.shape}")
+            return np.asarray(unroll_batch(data))
+        if data.ndim == 2:
+            return data
+        raise ValueError(f"expected rank-2 rows or rank-4 images, got {data.shape}")
+
+    def submit(self, tenant_id: str, data) -> int:
+        """Enqueue one tenant request.
+
+        ``data`` is either images ``(b, alpha, m, m)`` or pre-unrolled rows
+        ``(b, F_in)``; returns a request id redeemable after :meth:`flush`.
+        """
+        rows = self.prepare_rows(tenant_id, data)
         rid = self.queue.submit(tenant_id, rows)
+        g = self.registry.geom
         self._request_shape[rid] = (rows.shape[0], g.beta, g.n, g.n)
         self.stats.requests += 1
         self.stats.rows_in += rows.shape[0]
@@ -131,11 +226,14 @@ class MoLeDeliveryEngine:
     # -- the jitted hot path -------------------------------------------------
     def _execute(self, x: np.ndarray, gidx: np.ndarray) -> jax.Array:
         plan = self._refresh_plan()
-        # When groups line up with registry order (the common steady-state
-        # pattern: every tenant active once), the per-group secret gather is
-        # the identity — skipping it avoids copying the (T, F_in, F_out)
-        # stack per microbatch, which dominates at high tenant counts.
-        identity = len(gidx) == len(self.registry) and bool(
+        # When every slot is active once, in slot order (the common
+        # steady-state pattern), the per-group secret gather is the identity —
+        # skipping it avoids copying the (S, F_in, F_out) stack per
+        # microbatch, which dominates at high tenant counts.  The condition
+        # compares against the *capacity* (shape-stable), never the tenant
+        # count, so the static flag cannot flip — and thus cannot retrace —
+        # on registration churn at a fixed (G, B) bucket.
+        identity = len(gidx) == plan.cores.shape[0] and bool(
             np.array_equal(gidx, np.arange(len(gidx)))
         )
         return _delivery_step(
@@ -154,10 +252,16 @@ class MoLeDeliveryEngine:
         if not len(self.registry):
             return {}  # nothing registered yet -> nothing can be pending
         self._refresh_plan()  # also syncs group buckets to the tenant count
-        tenant_index = {t: i for i, t in enumerate(self.registry.tenant_ids)}
+        self.stats.flushes += 1
         done: dict[int, np.ndarray] = {}
         while True:
-            mb = self.queue.coalesce(tenant_index)
+            # slot_for activates (and LRU-touches) each tenant on lookup, so
+            # evicted tenants transparently regain a slot; max_groups caps a
+            # microbatch at `capacity` distinct tenants so activations within
+            # one coalesce round can never evict each other.
+            mb = self.queue.coalesce(
+                self.registry.slot_for, max_groups=self.registry.capacity
+            )
             if mb is None:
                 break
             out = np.asarray(self._execute(mb.x, mb.group_tenant))
@@ -178,12 +282,30 @@ class MoLeDeliveryEngine:
                         reroll_batch(buf, shape[1], shape[2])
                     )
                     self._results[s.request_id] = done[s.request_id]
+                    self._done.add(s.request_id)
         return done
 
     def take(self, request_id: int) -> np.ndarray:
         """Redeem a completed request's features (pops the result)."""
+        if request_id not in self._done:
+            if request_id in self._request_shape:
+                n_rows = self._request_shape[request_id][0]
+                state = (
+                    "partially delivered" if request_id in self._results
+                    else "queued"
+                )
+                raise KeyError(
+                    f"request {request_id} is still pending ({n_rows} rows, "
+                    f"{state}; not yet completed by a flush) — call flush() "
+                    f"before take()"
+                )
+            raise KeyError(
+                f"unknown request id {request_id}: never submitted or already "
+                f"taken ({len(self._done)} completed requests await take())"
+            )
         out = self._results.pop(request_id)
         self._request_shape.pop(request_id, None)
+        self._done.discard(request_id)
         return out
 
     def deliver(self, tenant_id: str, data) -> np.ndarray:
@@ -192,18 +314,42 @@ class MoLeDeliveryEngine:
         self.flush()
         return self.take(rid)
 
+    def reset_pending(self) -> None:
+        """Drop every queued request and unredeemed result (failure reset).
+
+        The async front door calls this after a failed flush: whatever is
+        left in the queue / result buffers belongs to requests whose waiters
+        have already been failed, and coalescing it later would only produce
+        results nobody can take().
+        """
+        from .queue import RequestQueue
+
+        q = self.queue
+        self.queue = RequestQueue(
+            q.feature_dim, max_rows=q.max_rows, row_buckets=q.row_buckets,
+            group_buckets=q.group_buckets, dtype=q.dtype,
+        )
+        self.queue._next_id = q._next_id  # request ids stay process-unique
+        self._results.clear()
+        self._request_shape.clear()
+        self._done.clear()
+
 
 @partial(jax.jit, static_argnames=("kappa", "backend", "identity_gather"))
 def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str,
                    identity_gather: bool = False):
     """morph + Aug-Conv for one padded microbatch, single compiled graph.
 
-    x: (G, B, F_in); gidx: (G,); cores: (T, q, q); augs: (T, F_in, F_out).
+    x: (G, B, F_in); gidx: (G,); cores: (S, q, q); augs: (S, F_in, F_out).
     The group axis is the natural data-parallel shard axis (delivery_rules).
     """
+    _TRACES[
+        (x.shape, gidx.shape, cores.shape, kappa, backend, identity_gather)
+    ] += 1
+    G = x.shape[0]
     x = hint(x, "dp")
     if identity_gather:
-        cores_g, augs_g = cores, augs          # gidx == arange(T): no copy
+        cores_g, augs_g = cores[:G], augs[:G]  # gidx == arange(G): static slice
     else:
         cores_g = cores[gidx]                  # (G, q, q)   per-group secrets
         augs_g = augs[gidx]                    # (G, Fi, Fo)

@@ -9,11 +9,16 @@ are small.  The coalescer packs pending rows into a *padded microbatch*:
   * ``B`` is the smallest bucket that fits the largest chunk and ``G`` is
     bucket-rounded too, so the jitted engine path compiles once per
     ``(G, B)`` bucket pair instead of once per traffic pattern;
-  * padding rows are zeros assigned to tenant index 0 — they flow through
-    the batched GEMMs and are sliced away on reassembly.
+  * padding rows are zeros and each padding *group* carries its own group
+    index as tenant index — they flow through the batched GEMMs and are
+    sliced away on reassembly, and a full-capacity microbatch in slot order
+    keeps ``gidx == arange`` (the engine's identity-gather fast path) even
+    when trailing slots are padding.
 
-The queue is deliberately synchronous (``submit`` / ``coalesce`` /
-``complete``); async I/O rides on top in a later PR (see ROADMAP).
+The queue is deliberately synchronous and **not thread-safe** (``submit`` /
+``coalesce``); the async front door (``repro.runtime.async_engine``)
+serializes access behind its lock and layers deadline-driven flushing and
+admission control on top.
 """
 from __future__ import annotations
 
@@ -59,7 +64,8 @@ class Microbatch:
     """A padded (G, B, F) tensor plus the bookkeeping to scatter results back."""
 
     x: np.ndarray               # (G, B, F) zero-padded rows
-    group_tenant: np.ndarray    # (G,) int32 tenant index per group (0 on padding)
+    group_tenant: np.ndarray    # (G,) int32 slot index per group (padding
+    # groups carry their own group index; identify them via n_real_groups)
     slices: list[GroupSlice]
     n_real_groups: int
     n_real_rows: int
@@ -97,6 +103,15 @@ class RequestQueue:
     def pending_rows(self) -> int:
         return sum(r.rows.shape[0] - r.delivered for r in self._pending)
 
+    def pending_rows_by_tenant(self) -> dict[str, int]:
+        """Unscheduled row counts keyed by tenant (observability/debugging)."""
+        out: dict[str, int] = {}
+        for r in self._pending:
+            left = r.rows.shape[0] - r.delivered
+            if left:
+                out[r.tenant_id] = out.get(r.tenant_id, 0) + left
+        return out
+
     def ensure_group_bucket(self, n: int) -> None:
         """Add ``n`` to the group buckets (steady-state "all tenants active"
         microbatches then land exactly on G == n).  Counts above the largest
@@ -117,18 +132,28 @@ class RequestQueue:
         return rid
 
     def coalesce(
-        self, tenant_index: Mapping[str, int] | Callable[[str], int]
+        self,
+        tenant_index: Mapping[str, int] | Callable[[str], int],
+        max_groups: int | None = None,
     ) -> Microbatch | None:
         """Pack as many pending rows as fit into one padded microbatch.
 
-        ``tenant_index`` maps tenant id -> row index into the registry's
-        stacked secret arrays.  Returns None when the queue is empty.
+        ``tenant_index`` maps tenant id -> slot index into the registry's
+        stacked secret arrays (a callable lookup may activate the tenant as a
+        side effect — see ``SessionRegistry.slot_for``).  ``max_groups`` caps
+        the number of *distinct-tenant* groups below the largest group bucket
+        — the engine passes its registry capacity so one microbatch never
+        asks for more resident tenants than there are slots.  Returns None
+        when the queue is empty.
         """
         if not self._pending:
             return None
         lookup = tenant_index if callable(tenant_index) else tenant_index.__getitem__
 
-        max_groups = self.group_buckets[-1]
+        max_groups = min(
+            self.group_buckets[-1],
+            max_groups if max_groups is not None else self.group_buckets[-1],
+        )
         # Gather per-tenant runs in FIFO order: (tenant, [(request, offset, n)]).
         chunks: list[tuple[str, list[tuple[DeliveryRequest, int, int]]]] = []
         open_chunk: dict[str, int] = {}  # tenant -> index into `chunks` of a
@@ -165,7 +190,10 @@ class RequestQueue:
         G = bucketize(len(chunks), self.group_buckets)
 
         x = np.zeros((G, B, self.feature_dim), self.dtype)
-        gidx = np.zeros((G,), np.int32)
+        # Padding groups carry their own index: all-zero rows make their
+        # output zeros regardless of whose secrets they hit, and slot-order
+        # microbatches keep gidx == arange for the identity-gather fast path.
+        gidx = np.arange(G, dtype=np.int32)
         slices: list[GroupSlice] = []
         n_real_rows = 0
         for g, (tenant, runs) in enumerate(chunks):

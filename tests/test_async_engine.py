@@ -1,0 +1,295 @@
+"""Async delivery front door (repro.runtime.async_engine): concurrent
+multi-tenant submission equals the sync path, the deadline flusher honours
+``max_delay_ms``, and per-tenant admission control (block/reject) holds."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvGeometry, SessionRegistry
+from repro.runtime import AdmissionError, AsyncDeliveryEngine, MoLeDeliveryEngine
+
+GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+
+# Generous CI slack on top of the SLO: a deadline flush's completion latency
+# is max_delay_ms + one flush's compute, and shared CI boxes stall threads.
+SLACK_MS = 750.0
+
+
+def _registry(rng, tenants=3, kappa=2, capacity=None):
+    reg = SessionRegistry(GEOM, kappa=kappa, capacity=capacity)
+    fan_in = GEOM.alpha * GEOM.p * GEOM.p
+    for i in range(tenants):
+        k = rng.standard_normal(
+            (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        reg.register(f"t{i}", k)
+    return reg
+
+
+def test_async_matches_sync_under_concurrent_load(rng):
+    """N threads x M tenants: no lost/duplicated request ids, every result
+    bit-matches the per-request sync path."""
+    tenants = 3
+    reg = _registry(rng, tenants=tenants)
+    datas = {
+        t: rng.standard_normal((1 + i % 3, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        for i, t in enumerate(reg.tenant_ids)
+    }
+    want = {
+        t: np.asarray(reg.session(t).deliver(jnp.asarray(d)))
+        for t, d in datas.items()
+    }
+
+    n_threads, per_thread = 6, 8
+    futures: list[list] = [[] for _ in range(n_threads)]
+    errors: list[BaseException] = []
+
+    with AsyncDeliveryEngine(reg, max_delay_ms=5.0, backend=None) as front:
+        def worker(wid: int) -> None:
+            try:
+                for j in range(per_thread):
+                    t = f"t{(wid + j) % tenants}"
+                    futures[wid].append((t, front.submit(t, datas[t])))
+            except BaseException as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(i,)) for i in range(n_threads)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors
+
+        flat = [tf for per in futures for tf in per]
+        assert len(flat) == n_threads * per_thread
+        # every submission got a distinct engine request id — none lost,
+        # none duplicated
+        rids = [f.request_id for _, f in flat]
+        assert len(set(rids)) == len(rids)
+
+        for t, f in flat:
+            got = f.result(timeout=60)
+            np.testing.assert_allclose(got, want[t], atol=1e-5)
+
+    assert front.pending() == 0
+    assert front.stats.requests >= n_threads * per_thread
+
+
+def test_deadline_flusher_meets_max_delay(rng):
+    """Nobody calls flush(): the background flusher alone must complete
+    requests within max_delay_ms plus slack."""
+    reg = _registry(rng, tenants=2)
+    max_delay_ms = 25.0
+    with AsyncDeliveryEngine(reg, max_delay_ms=max_delay_ms) as front:
+        d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        # Warm the (G, B) buckets so the timed requests measure the flusher,
+        # not XLA compilation.
+        for t in reg.tenant_ids:
+            front.deliver(t, d, timeout=60)
+
+        t0 = time.monotonic()
+        futs = [front.submit(t, d) for t in reg.tenant_ids]
+        for f in futs:
+            f.result(timeout=60)
+        wall_ms = (time.monotonic() - t0) * 1e3
+        assert wall_ms < max_delay_ms + SLACK_MS
+
+        stats = front.stats
+        assert stats.p50_ms == stats.p50_ms  # not NaN: latencies recorded
+        assert stats.p95_ms < max_delay_ms + SLACK_MS
+        assert stats.flushes >= 2  # warm + timed, all flusher-initiated
+
+
+def test_bucket_full_flushes_before_deadline(rng):
+    """Enough pending rows to fill a microbatch triggers an early flush even
+    though the deadline is far away."""
+    reg = _registry(rng, tenants=1)
+    front = AsyncDeliveryEngine(
+        reg, max_delay_ms=60_000.0, flush_rows=4, max_rows=8,
+        row_buckets=(1, 2, 4, 8), group_buckets=(1, 2),
+    )
+    try:
+        d = rng.standard_normal((4, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        fut = front.submit("t0", d)  # 4 rows >= flush_rows
+        feats = fut.result(timeout=60)
+        want = np.asarray(reg.session("t0").deliver(jnp.asarray(d)))
+        np.testing.assert_allclose(feats, want, atol=1e-5)
+    finally:
+        front.close()
+
+
+def test_admission_reject_over_quota(rng):
+    reg = _registry(rng, tenants=2)
+    front = AsyncDeliveryEngine(
+        reg, max_delay_ms=60_000.0, max_inflight_rows=3, admission="reject"
+    )
+    try:
+        d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        f0 = front.submit("t0", d)  # 2 rows in flight
+        with pytest.raises(AdmissionError, match="t0.*over quota"):
+            front.submit("t0", d)   # 2 + 2 > 3
+        assert front.stats.rejected == 1
+        # an under-quota tenant is unaffected by its neighbour's throttling
+        f1 = front.submit("t1", d)
+        front.flush_now()
+        assert f0.result(timeout=60).shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+        assert f1.result(timeout=60).shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+    finally:
+        front.close()
+
+
+def test_oversized_request_rejected_even_when_blocking(rng):
+    """A request bigger than the quota itself can never be admitted —
+    blocking on it would deadlock, so it must reject in either mode."""
+    reg = _registry(rng, tenants=1)
+    with AsyncDeliveryEngine(
+        reg, max_delay_ms=5.0, max_inflight_rows=2, admission="block"
+    ) as front:
+        d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        with pytest.raises(AdmissionError, match="exceeds the per-tenant quota"):
+            front.submit("t0", d)
+        assert front.stats.rejected == 1
+
+
+def test_drain_leaves_futures_resolved(rng):
+    """After drain() returns, every future's result is immediately ready."""
+    reg = _registry(rng, tenants=2)
+    with AsyncDeliveryEngine(reg, max_delay_ms=10_000.0) as front:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        futs = [front.submit(t, d) for t in reg.tenant_ids for _ in range(3)]
+        front.drain(timeout=60)
+        assert all(f.done() for f in futs)
+        for f in futs:
+            assert f.result(timeout=0).shape == (1, GEOM.beta, GEOM.n, GEOM.n)
+
+
+def test_mixed_sync_submissions_are_left_for_take(rng):
+    """A rid submitted straight to the wrapped engine completes during the
+    flusher's flush but stays redeemable via engine.take()."""
+    reg = _registry(rng, tenants=1)
+    with AsyncDeliveryEngine(reg, max_delay_ms=10_000.0) as front:
+        d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        rid = front.engine.submit("t0", d)   # bypasses the front door
+        fut = front.submit("t0", d)
+        front.flush_now()
+        np.testing.assert_allclose(
+            fut.result(timeout=60),
+            np.asarray(reg.session("t0").deliver(jnp.asarray(d))), atol=1e-5,
+        )
+        front.drain(timeout=60)
+        assert front.engine.take(rid).shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+
+
+def test_admission_block_applies_backpressure(rng):
+    """Over-quota submit blocks until a flush frees the quota, then succeeds."""
+    reg = _registry(rng, tenants=1)
+    front = AsyncDeliveryEngine(
+        reg, max_delay_ms=20.0, max_inflight_rows=3, admission="block"
+    )
+    try:
+        d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        front.submit("t0", d)
+        blocked_for: list[float] = []
+
+        def blocked_submit():
+            t0 = time.monotonic()
+            fut = front.submit("t0", d)
+            blocked_for.append(time.monotonic() - t0)
+            fut.result(timeout=60)
+
+        th = threading.Thread(target=blocked_submit)
+        th.start()
+        th.join(timeout=60)
+        assert not th.is_alive()
+        assert len(blocked_for) == 1  # the blocked submit completed
+    finally:
+        front.close()
+
+
+def test_closed_engine_rejects_submissions(rng):
+    reg = _registry(rng, tenants=1)
+    front = AsyncDeliveryEngine(reg, max_delay_ms=5.0)
+    d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    fut = front.submit("t0", d)
+    front.close()
+    assert fut.done()  # close() drains in-flight work first
+    with pytest.raises(RuntimeError, match="closed"):
+        front.submit("t0", d)
+    front.close()  # idempotent
+
+
+def test_async_rejects_unknown_tenant(rng):
+    reg = _registry(rng, tenants=1)
+    with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
+        with pytest.raises(KeyError):
+            front.submit("nobody", np.zeros((1, GEOM.alpha, GEOM.m, GEOM.m)))
+
+
+def test_wrapping_an_existing_engine(rng):
+    """The front door can wrap a pre-built engine; engine kwargs are only
+    legal when constructing from a registry."""
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg, max_rows=8, row_buckets=(1, 2, 4, 8),
+                             group_buckets=(1, 2))
+    with AsyncDeliveryEngine(eng, max_delay_ms=5.0) as front:
+        assert front.engine is eng
+        d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        want = np.asarray(reg.session("t0").deliver(jnp.asarray(d)))
+        np.testing.assert_allclose(front.deliver("t0", d, timeout=60), want,
+                                   atol=1e-5)
+    with pytest.raises(TypeError):
+        AsyncDeliveryEngine(eng, max_rows=8)
+    with pytest.raises(ValueError):
+        AsyncDeliveryEngine(reg, admission="drop")
+
+
+def test_cancelled_future_does_not_kill_the_flusher(rng):
+    """A caller cancelling a pending future must not crash the flusher
+    thread; later requests still complete."""
+    reg = _registry(rng, tenants=1)
+    with AsyncDeliveryEngine(reg, max_delay_ms=10_000.0) as front:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        doomed = front.submit("t0", d)
+        assert doomed.cancel()  # deterministic: the 10s deadline is far away
+        front.flush_now()
+        front.drain(timeout=60)
+        # the flusher survived: a fresh request completes normally
+        fresh = front.submit("t0", d)
+        front.flush_now()
+        np.testing.assert_allclose(
+            fresh.result(timeout=60),
+            np.asarray(reg.session("t0").deliver(jnp.asarray(d))), atol=1e-5,
+        )
+        assert doomed.cancelled()
+
+
+def test_engine_reset_pending_drops_queued_state(rng):
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    rid = eng.submit("t0", d)
+    eng.reset_pending()
+    assert len(eng.queue) == 0
+    with pytest.raises(KeyError, match="unknown request id"):
+        eng.take(rid)
+    rid2 = eng.deliver("t0", d)  # engine still serves, ids stay unique
+    assert rid2.shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+
+
+def test_drain_waits_for_inflight(rng):
+    reg = _registry(rng, tenants=1)
+    front = AsyncDeliveryEngine(reg, max_delay_ms=10_000.0)
+    try:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+        fut = front.submit("t0", d)
+        front.drain(timeout=60)
+        assert fut.done() and front.pending() == 0
+    finally:
+        front.close()

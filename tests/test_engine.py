@@ -8,14 +8,14 @@ from repro.core import ConvGeometry, SessionRegistry, morph
 from repro.core.morphing import unmorph
 from repro.kernels import morph_rows_batched, aug_conv_forward_batched, ref
 from repro.kernels.dispatch import resolve_backend
-from repro.runtime import MoLeDeliveryEngine, RequestQueue
+from repro.runtime import MoLeDeliveryEngine, RequestQueue, delivery_trace_count
 
 
 GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
 
 
-def _registry(rng, tenants=3, kappa=2):
-    reg = SessionRegistry(GEOM, kappa=kappa)
+def _registry(rng, tenants=3, kappa=2, capacity=None):
+    reg = SessionRegistry(GEOM, kappa=kappa, capacity=capacity)
     fan_in = GEOM.alpha * GEOM.p * GEOM.p
     for i in range(tenants):
         k = rng.standard_normal(
@@ -157,6 +157,142 @@ def test_late_registration_refreshes_plan(rng):
 
 
 # ---------------------------------------------------------------------------
+# shape-stable session slots: LRU eviction, host offload, zero-retrace churn
+# ---------------------------------------------------------------------------
+
+def test_slotted_registry_lru_eviction_and_offload(rng):
+    reg = _registry(rng, tenants=2, capacity=2)
+    assert reg.capacity == 2 and reg.resident_tenants == ("t0", "t1")
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    reg.register("t2", k)           # full: evicts LRU (t0)
+    assert reg.evictions == 1
+    assert not reg.is_resident("t0") and reg.is_resident("t2")
+    assert "t0" in reg and reg.session("t0") is not None  # host store survives
+    # re-activation brings t0 back into a slot (evicting the now-LRU t1)
+    slot = reg.slot_for("t0")
+    assert reg.is_resident("t0") and 0 <= slot < reg.capacity
+    assert not reg.is_resident("t1") and reg.evictions == 2
+    # the stacked views stay shape-stable through all of that churn
+    assert reg.stacked_cores().shape[0] == 2
+    assert reg.stacked_aug_matrices().shape[0] == 2
+
+
+def test_slotted_registry_auto_capacity_doubles(rng):
+    reg = _registry(rng, tenants=5)  # capacity=None: grow, never evict
+    assert reg.capacity == 8 and reg.evictions == 0
+    assert len(reg.resident_tenants) == 5
+
+
+def test_slotted_registry_updates_since(rng):
+    reg = _registry(rng, tenants=2, capacity=4)
+    v0 = reg.version
+    assert reg.updates_since(v0) == []
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    reg.register("t2", k)
+    assert reg.updates_since(v0) == [2]
+    reg.evict("t0")
+    assert sorted(reg.updates_since(v0)) == [0, 2]
+    assert reg.updates_since(reg.version) == []
+    assert reg.updates_since(reg.version + 5) is None  # future: rebuild
+    # a free slot reads back as zeros (the secret left the device view)
+    assert np.all(reg.slot_core(0) == 0) and np.all(reg.slot_aug(0) == 0)
+
+
+def test_registration_into_free_slot_does_not_retrace(rng):
+    """The regression the slot refactor exists for: tenant churn at a fixed
+    (bucket, kappa) shape must not retrace _delivery_step."""
+    reg = _registry(rng, tenants=1, kappa=2, capacity=4)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    eng.deliver("t0", d)            # compiles the (G=1, B=4) bucket
+    n0 = delivery_trace_count()
+    eng.deliver("t0", d)            # warm bucket: cache hit
+    assert delivery_trace_count() == n0
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    reg.register("late", k)         # free slot: in-place plan patch
+    got = eng.deliver("late", d)
+    want = np.asarray(reg.session("late").deliver(jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    assert delivery_trace_count() == n0
+
+
+def test_eviction_churn_traces_at_most_once_per_bucket(rng):
+    """Register/evict/re-activate through a full registry: _delivery_step is
+    traced at most once per (bucket, kappa) shape over the whole churn."""
+    reg = _registry(rng, tenants=4, kappa=2, capacity=4)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    eng.deliver("t0", d)            # one trace for the (G=1, B=4) bucket
+    n0 = delivery_trace_count()
+    k = lambda: rng.standard_normal(
+        (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
+    ).astype(np.float32)
+    for i in range(4, 10):          # every registration now evicts someone
+        reg.register(f"t{i}", k())
+        got = eng.deliver(f"t{i}", d)
+        want = np.asarray(reg.session(f"t{i}").deliver(jnp.asarray(d)))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+    eng.deliver("t0", d)            # re-activate an evicted tenant
+    assert reg.evictions >= 6
+    assert delivery_trace_count() == n0  # same bucket throughout: zero traces
+
+
+def test_capacity_growth_rebuilds_plan(rng):
+    """Auto-capacity growth is the one churn event allowed to rebuild (and
+    so retrace): shapes change, but only O(log T) times."""
+    reg = _registry(rng, tenants=1, kappa=2)       # capacity starts at 1
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    eng.deliver("t0", d)
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    reg.register("t1", k)                          # grows 1 -> 2
+    assert reg.capacity == 2
+    got = eng.deliver("t1", d)
+    want = np.asarray(reg.session("t1").deliver(jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_registry_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        SessionRegistry(GEOM, kappa=2, capacity=0)
+    reg = SessionRegistry(GEOM, kappa=2, capacity=2)
+    with pytest.raises(KeyError):
+        reg.ensure_resident("nobody")
+
+
+# ---------------------------------------------------------------------------
+# take(): unknown / pending request ids fail with actionable context
+# ---------------------------------------------------------------------------
+
+def test_take_unknown_request_id_raises_clear_keyerror(rng):
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg)
+    with pytest.raises(KeyError, match="unknown request id 123"):
+        eng.take(123)
+
+
+def test_take_unflushed_request_id_raises_pending_context(rng):
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    rid = eng.submit("t0", d)
+    with pytest.raises(KeyError, match=r"still pending \(3 rows.*flush"):
+        eng.take(rid)
+    eng.flush()
+    assert eng.take(rid).shape == (3, GEOM.beta, GEOM.n, GEOM.n)
+    with pytest.raises(KeyError, match="already taken"):
+        eng.take(rid)
+
+
+# ---------------------------------------------------------------------------
 # batched kernel dispatch (CPU path) vs protocol-level morphing
 # ---------------------------------------------------------------------------
 
@@ -248,6 +384,17 @@ def test_queue_same_tenant_requests_share_a_group():
     assert np.all(mb.x[0, :2] == 1.0) and np.all(mb.x[0, 2:5] == 2.0)
     by_req = {s.request_id: s for s in mb.slices}
     assert by_req[r0].group_offset == 0 and by_req[r1].group_offset == 2
+
+
+def test_queue_pending_rows_by_tenant():
+    q = RequestQueue(4, max_rows=8, row_buckets=(1, 2, 4, 8),
+                     group_buckets=(1, 2, 4))
+    q.submit("a", np.ones((3, 4), np.float32))
+    q.submit("b", np.ones((5, 4), np.float32))
+    q.submit("a", np.ones((2, 4), np.float32))
+    assert q.pending_rows_by_tenant() == {"a": 5, "b": 5}
+    q.coalesce({"a": 0, "b": 1})
+    assert q.pending_rows_by_tenant() == {}
 
 
 def test_queue_rejects_bad_shapes():

@@ -1,0 +1,127 @@
+"""Property-based round-trips over random geometry/kappa/backend:
+
+  * delivery equivalence — ``aug_conv(morph(x))`` equals the plain
+    convolution (paper eq. 5) under the session's channel permutation, for
+    random shapes and both CPU-capable kernel backends;
+  * engine equivalence — the batched multi-tenant engine path equals
+    per-request ``MoLeSession.deliver`` for random traffic patterns.
+
+Runs as hypothesis sweeps when hypothesis is installed (the nightly lane);
+the parametrized cases below keep a deterministic slice of the same
+properties in the tier-1 gate (``tests/_hypothesis_compat.py``)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import ConvGeometry, MoLeSession, SessionRegistry, conv_reference
+from repro.runtime import MoLeDeliveryEngine
+
+BACKENDS = ("jnp", "interpret")
+
+
+def _divisors(n: int, cap: int = 8) -> list[int]:
+    return [k for k in range(1, cap + 1) if n % k == 0]
+
+
+def _check_roundtrip(alpha, beta, m, p, kappa, seed, batch):
+    """aug_conv(morph(x)) == conv(x) up to the secret channel permutation."""
+    geom = ConvGeometry(alpha=alpha, beta=beta, m=m, p=p)
+    g = np.random.default_rng(seed)
+    K = g.standard_normal((alpha, beta, p, p)).astype(np.float32)
+    sess = MoLeSession.create(K, geom, kappa=kappa, seed=seed & 0xFFFF)
+    D = jnp.asarray(g.standard_normal((batch, alpha, m, m)).astype(np.float32))
+    feats = sess.deliver(D)
+    ref = conv_reference(D, jnp.asarray(K), geom)
+    perm = sess.provider._perm
+    np.testing.assert_allclose(
+        np.asarray(feats), np.asarray(ref)[:, perm], atol=5e-3
+    )
+
+
+def _check_engine_matches_per_request(
+    tenants, kappa, batches, seed, backend, capacity=None
+):
+    """Engine batched output == per-request deliver, any backend/traffic."""
+    geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+    g = np.random.default_rng(seed)
+    reg = SessionRegistry(geom, kappa=kappa, capacity=capacity)
+    fan_in = geom.alpha * geom.p * geom.p
+    for i in range(tenants):
+        k = g.standard_normal(
+            (geom.alpha, geom.beta, geom.p, geom.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        reg.register(f"t{i}", k)
+    eng = MoLeDeliveryEngine(reg, backend=backend)
+    reqs = []
+    for i, b in enumerate(batches):
+        t = f"t{i % tenants}"
+        d = g.standard_normal((b, geom.alpha, geom.m, geom.m)).astype(np.float32)
+        reqs.append((eng.submit(t, d), t, d))
+    eng.flush()
+    for rid, t, d in reqs:
+        want = np.asarray(reg.session(t).deliver(jnp.asarray(d)))
+        np.testing.assert_allclose(eng.take(rid), want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps (nightly lane; skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    alpha=st.integers(1, 3), beta=st.integers(1, 5),
+    m=st.sampled_from([4, 5, 6, 8]), p=st.sampled_from([1, 3]),
+    kappa_pick=st.integers(0, 7), seed=st.integers(0, 2**31 - 1),
+    batch=st.integers(1, 4),
+)
+def test_roundtrip_property(alpha, beta, m, p, kappa_pick, seed, batch):
+    divs = _divisors(alpha * m * m)
+    kappa = divs[kappa_pick % len(divs)]
+    _check_roundtrip(alpha, beta, m, p, kappa, seed, batch)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tenants=st.integers(1, 5), kappa=st.sampled_from([1, 2, 4]),
+    batches=st.lists(st.integers(1, 6), min_size=1, max_size=8),
+    seed=st.integers(0, 2**31 - 1), backend=st.sampled_from(BACKENDS),
+    capacity=st.sampled_from([None, 2, 4]),
+)
+def test_engine_property(tenants, kappa, batches, seed, backend, capacity):
+    _check_engine_matches_per_request(
+        tenants, kappa, batches, seed, backend, capacity=capacity
+    )
+
+
+# ---------------------------------------------------------------------------
+# deterministic tier-1 slice of the same properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha,beta,m,p,kappa", [
+    (1, 2, 4, 1, 2),
+    (2, 3, 5, 3, 5),
+    (3, 4, 8, 3, 8),
+    (2, 1, 6, 3, 1),
+])
+def test_roundtrip_cases(alpha, beta, m, p, kappa):
+    _check_roundtrip(alpha, beta, m, p, kappa, seed=7, batch=3)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("tenants,kappa,batches", [
+    (1, 1, (3,)),
+    (3, 2, (1, 4, 2, 5)),
+    (5, 4, (2, 2, 6, 1, 3, 2)),
+])
+def test_engine_cases(backend, tenants, kappa, batches):
+    _check_engine_matches_per_request(tenants, kappa, batches, 11, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_cases_with_eviction(backend):
+    """Same equivalence with a capacity smaller than the tenant count, so the
+    traffic forces LRU eviction + re-activation mid-stream."""
+    _check_engine_matches_per_request(
+        5, 2, (2, 3, 1, 4, 2, 1, 3), 13, backend, capacity=2
+    )
