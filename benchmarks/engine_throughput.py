@@ -13,11 +13,20 @@ early arrivals wait for the stragglers, so p95 grows with the burst size —
 and (b) the async front door (``repro.runtime.async_engine``), whose deadline
 flusher bounds p95 near ``max_delay_ms`` regardless of burst size.
 
+A third sweep covers the **LM token lane**: batch x sequence-bucket x tenant
+count, per-request token morphing (one jitted vocab-permutation gather per
+request — the pre-unification ``--mode lm`` path) vs the engine coalescing
+all tenants' prompts into length-bucketed token microbatches and morphing
+them as one batched multi-tenant gather.  Results are integers, so the
+equivalence check is exact.
+
 CSV rows:
   engine/b{B}_k{kappa}_t{T}/per_request,<us>,<images/s>
   engine/b{B}_k{kappa}_t{T}/engine,<us>,<images/s> speedup=<x>
   engine_latency/n{N}/sync_flush,<p95 us>,p50=<ms> p95=<ms>
   engine_latency/n{N}/async_deadline,<p95 us>,p50=<ms> p95=<ms> SLO=<ms>
+  engine_lm/b{B}_s{L}_t{T}/per_request,<us>,<prompts/s>
+  engine_lm/b{B}_s{L}_t{T}/engine,<us>,<prompts/s> speedup=<x>
 """
 from __future__ import annotations
 
@@ -92,6 +101,77 @@ def _sweep_point(batch: int, kappa: int, tenants: int) -> None:
         f"{tag}/engine", dt_eng * 1e6,
         f"{batch / dt_eng:.1f} images/s speedup={dt_req / dt_eng:.2f}x "
         f"err={err:.1e}",
+    )
+
+
+LM_VOCAB, LM_DMODEL = 1024, 64
+
+
+def _build_lm(tenants: int, seed: int = 0):
+    from repro.core.lm import LMSessionRegistry
+    from repro.runtime import MoLeDeliveryEngine
+
+    rng = np.random.default_rng(seed)
+    # Capacity == tenant count keeps steady-state token microbatches on the
+    # identity-gather fast path, mirroring the vision sweep.
+    registry = LMSessionRegistry(LM_VOCAB, LM_DMODEL, capacity=tenants)
+    for i in range(tenants):
+        registry.register(
+            f"tenant-{i}",
+            rng.standard_normal((LM_VOCAB, LM_DMODEL)).astype(np.float32),
+            seed=i,
+        )
+    engine = MoLeDeliveryEngine(lm_registry=registry)
+    return registry, engine, rng
+
+
+def _token_sweep_point(batch: int, seq: int, tenants: int) -> None:
+    """Batched multi-tenant token morphing vs one gather per request."""
+    registry, engine, rng = _build_lm(tenants)
+    requests = [
+        (f"tenant-{i % tenants}",
+         rng.integers(0, LM_VOCAB, (1, seq)).astype(np.int32))
+        for i in range(batch)
+    ]
+
+    # Per-request baseline: the pre-unification --mode lm path — one
+    # ``TokenMorpher.morph_tokens`` call per request (mirrors the vision
+    # sweep's per-request ``MoLeSession.deliver`` baseline).
+    # Warmup replays the full pattern so the timed passes hit compiled
+    # buckets on both paths.
+    for t, d in requests:
+        engine.submit_tokens(t, d)
+    engine.flush()
+    for t, d in requests:
+        jax.block_until_ready(
+            registry.session(t).morph_tokens(jnp.asarray(d))
+        )
+
+    iters = 5
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        base = [
+            np.asarray(registry.session(t).morph_tokens(jnp.asarray(d)))
+            for t, d in requests
+        ]
+    dt_req = (time.perf_counter() - t0) / iters
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        rids = [engine.submit_tokens(t, d) for t, d in requests]
+        engine.flush()
+        morphed = [engine.take(r) for r in rids]
+    dt_eng = (time.perf_counter() - t0) / iters
+
+    for m, b in zip(morphed, base):
+        assert np.array_equal(m, b), "engine/per-request token morph mismatch"
+
+    tag = f"engine_lm/b{batch}_s{seq}_t{tenants}"
+    emit(f"{tag}/per_request", dt_req * 1e6, f"{batch / dt_req:.1f} prompts/s")
+    emit(
+        f"{tag}/engine", dt_eng * 1e6,
+        f"{batch / dt_eng:.1f} prompts/s speedup={dt_req / dt_eng:.2f}x "
+        f"err=0.0e+00",
     )
 
 
@@ -183,6 +263,10 @@ def run() -> None:
         for kappa in (1, 4):
             for tenants in (1, 4, 16):
                 _sweep_point(batch, kappa, tenants)
+    for batch in (8, 64):
+        for seq in (16, 128):
+            for tenants in (1, 4, 16):
+                _token_sweep_point(batch, seq, tenants)
     for n in (16, 64, 256):
         _latency_point(n)
 

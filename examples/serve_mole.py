@@ -1,4 +1,5 @@
-"""Serving over the MoLe trust boundary, both stages of the paper's protocol:
+"""Serving over the MoLe trust boundary, both stages of the paper's protocol
+through **one delivery plane** (vision and LM tenants share the engine):
 
 1. *Data delivery* through the batched multi-tenant engine
    (``repro.runtime.engine``): several tenants register provider sessions
@@ -7,9 +8,12 @@
    jitted batched path — first synchronously, then through the async front
    door (``repro.runtime.async_engine``: background deadline flusher with a
    latency SLO + per-tenant admission control, reporting p50/p95).
-2. *LM inference*: provider morphs prompts (secret vocab permutation) ->
-   developer prefills + decodes with Aug-fused params -> provider unmorphs
-   the generations.
+2. *LM inference*, engine-backed: LM tenants register secret vocab
+   permutations in an ``LMSessionRegistry``; prompts coalesce into
+   length-bucketed token microbatches and morph as one jitted multi-tenant
+   gather -> each tenant's developer prefills + decodes with that tenant's
+   Aug-fused params -> the provider unmorphs the generations.  Stage 2b runs
+   the same LM traffic through the async front door.
 
     PYTHONPATH=src python examples/serve_mole.py
 """
@@ -28,10 +32,19 @@ def main():
         "--mode", "delivery", "--async", "--tenants", "4", "--requests", "32",
         "--batch", "2", "--kappa", "2", "--max-delay-ms", "5",
     ])
-    # Stage 2: MoLe-secured LM serving (token morphing + Aug-fused params).
+    # Stage 2a: MoLe-secured LM serving — the engine's token lane morphs all
+    # tenants' prompts in one batched gather; per-tenant Aug-fused serving.
     serve_mod.main([
         "--mode", "lm", "--arch", "gemma2_27b", "--smoke", "--requests", "8",
-        "--prompt-len", "32", "--gen", "16", "--mole", "token",
+        "--tenants", "2", "--prompt-len", "32", "--gen", "16",
+        "--mole", "token",
+    ])
+    # Stage 2b: LM prompts through the async front door (same SLO knobs as
+    # the vision lane — one front door for the whole fleet).
+    serve_mod.main([
+        "--mode", "lm", "--arch", "gemma2_27b", "--smoke", "--requests", "8",
+        "--tenants", "2", "--prompt-len", "32", "--gen", "16",
+        "--mole", "token", "--async", "--max-delay-ms", "5",
     ])
 
 

@@ -29,9 +29,17 @@ from .aug_conv import (
 )
 from .security import MoLeSecurity, analyze as analyze_security
 from .overhead import OverheadReport, analyze as analyze_overhead
-from .protocol import DataProvider, Developer, MoLeSession, SessionRegistry
+from .protocol import (
+    DataProvider,
+    Developer,
+    MoLeSession,
+    SessionRegistry,
+    SlotRegistry,
+)
 from .lm import (
     EmbeddingMorpher,
+    LMSession,
+    LMSessionRegistry,
     TokenMorpher,
     fuse_aug_embedding,
     fuse_aug_head,
@@ -47,6 +55,7 @@ __all__ = [
     "MoLeSecurity", "analyze_security",
     "OverheadReport", "analyze_overhead",
     "DataProvider", "Developer", "MoLeSession", "SessionRegistry",
-    "EmbeddingMorpher", "TokenMorpher", "fuse_aug_embedding", "fuse_aug_head",
-    "fuse_aug_projection",
+    "SlotRegistry",
+    "EmbeddingMorpher", "LMSession", "LMSessionRegistry", "TokenMorpher",
+    "fuse_aug_embedding", "fuse_aug_head", "fuse_aug_projection",
 ]

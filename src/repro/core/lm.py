@@ -30,10 +30,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .morphing import MorphCore, make_core, morph
+from .protocol import SlotRegistry
 
 __all__ = [
     "TokenMorpher",
     "EmbeddingMorpher",
+    "LMSession",
+    "LMSessionRegistry",
     "fuse_aug_embedding",
     "fuse_aug_projection",
 ]
@@ -125,3 +128,222 @@ def fuse_aug_projection(w_in: jax.Array, morpher: EmbeddingMorpher) -> jax.Array
     if morpher.out_perm is not None:
         fused = fused[:, jnp.asarray(morpher.out_perm)]
     return fused
+
+
+@dataclasses.dataclass
+class LMSession:
+    """One LM tenant's provider/developer pair for the delivery engine.
+
+    The provider holds the secrets (``morpher`` and, when the registry has a
+    continuous lane, ``embed_morpher``); the developer-facing artifacts are
+    the fused ``aug_embedding`` (``AugE[pi(v)] == E[v]``) and, continuously,
+    the fused ``aug_projection`` (``morph(x) @ AugProj == x @ W_in``) — the
+    LM analogues of the vision session's Aug-Conv matrix.
+
+    ``aug_embedding`` is fused **lazily** (cached on first access): token
+    morphing alone never touches the (V, d_model) table, and at production
+    vocab sizes the fused copy per tenant is the dominant host cost — the
+    engine stages the stacked device tables lazily for the same reason.
+    """
+
+    morpher: TokenMorpher
+    embedding: np.ndarray                          # (V, d_model) dev table
+    embed_morpher: EmbeddingMorpher | None = None
+    aug_projection: np.ndarray | None = None       # (d_in, d_out)
+    _aug_embedding: np.ndarray | None = dataclasses.field(
+        default=None, repr=False
+    )
+
+    @property
+    def aug_embedding(self) -> np.ndarray:
+        """(V, d_model) fused AugE table (``AugE[pi(v)] == E[v]``)."""
+        if self._aug_embedding is None:
+            self._aug_embedding = np.asarray(
+                fuse_aug_embedding(self.embedding, self.morpher)
+            )
+        return self._aug_embedding
+
+    def morph_tokens(self, tokens: jax.Array) -> jax.Array:
+        return self.morpher.morph_tokens(tokens)
+
+    def unmorph_tokens(self, tokens: jax.Array) -> jax.Array:
+        return self.morpher.unmorph_tokens(tokens)
+
+    def deliver_tokens(self, tokens: jax.Array) -> jax.Array:
+        """Per-request reference path: morph then Aug-embed (== E[tokens])."""
+        return jnp.asarray(self.aug_embedding)[self.morph_tokens(tokens)]
+
+    def deliver_features(self, x: jax.Array) -> jax.Array:
+        """Per-request continuous path: morph features then fused projection."""
+        if self.embed_morpher is None:
+            raise ValueError("session has no continuous (embedding) lane")
+        return self.embed_morpher.morph_features(x) @ jnp.asarray(
+            self.aug_projection
+        )
+
+
+class LMSessionRegistry(SlotRegistry):
+    """Provider-side registry of per-tenant LM-MoLe sessions.
+
+    The LM counterpart of :class:`repro.core.protocol.SessionRegistry`: all
+    tenants share one ``vocab`` / ``d_model`` (and, when the continuous lane
+    is enabled, one ``d_in``/``d_out``/``kappa``), which makes their secrets
+    stackable into dense slot-indexed arrays the delivery engine can gather
+    per microbatch group:
+
+      * ``stacked_perms``            (S, V) int32    per-slot token morphs
+      * ``stacked_aug_embeddings``   (S, V, d_model) per-slot AugE tables
+      * ``stacked_embed_cores``      (S, q, q)       continuous morph cores
+      * ``stacked_aug_projections``  (S, d_in, d_out) fused input projections
+
+    Slot churn semantics (LRU eviction, host offload, ``updates_since``
+    in-place device patches) are inherited from :class:`SlotRegistry` — the
+    engine's jitted LM delivery step never retraces on tenant churn, exactly
+    like the vision lane.
+    """
+
+    def __init__(
+        self,
+        vocab: int,
+        d_model: int,
+        *,
+        d_in: int | None = None,
+        d_out: int | None = None,
+        kappa: int = 1,
+        core_mode: str = "orthogonal",
+        capacity: int | None = None,
+    ):
+        super().__init__(capacity)
+        if (d_in is None) != (d_out is None):
+            raise ValueError("d_in and d_out must be given together")
+        if d_in is not None and d_in % kappa:
+            raise ValueError(f"kappa={kappa} must divide d_in={d_in}")
+        self.vocab = int(vocab)
+        self.d_model = int(d_model)
+        self.d_in = d_in
+        self.d_out = d_out
+        self.kappa = kappa
+        self.core_mode = core_mode
+
+    @property
+    def has_embed_lane(self) -> bool:
+        """Whether tenants also carry continuous (embedding-MoLe) secrets."""
+        return self.d_in is not None
+
+    def register(
+        self,
+        tenant_id: str,
+        embedding: np.ndarray,
+        w_in: np.ndarray | None = None,
+        seed: int | None = None,
+    ) -> LMSession:
+        """Create an LM tenant: draw a fresh vocab permutation (and, with a
+        continuous lane, a fresh morph core), fuse the developer artifacts.
+
+        ``embedding`` is the developer's (V, d_model) table — the LM "first
+        layer" shipped across the trust boundary, like the vision protocol's
+        ``dev_kernels``; ``w_in`` (d_in, d_out) is its continuous-lane analogue.
+        """
+        embedding = np.asarray(embedding, np.float32)
+        if embedding.shape != (self.vocab, self.d_model):
+            raise ValueError(
+                f"expected embedding ({self.vocab}, {self.d_model}), "
+                f"got {embedding.shape}"
+            )
+        seed = self._resolve_seed(seed)
+        morpher = TokenMorpher.create(seed, self.vocab)
+        embed_morpher = aug_projection = None
+        if self.has_embed_lane:
+            if w_in is None:
+                raise ValueError(
+                    "registry has a continuous lane; pass w_in (d_in, d_out)"
+                )
+            w_in = np.asarray(w_in, np.float32)
+            if w_in.shape != (self.d_in, self.d_out):
+                raise ValueError(
+                    f"expected w_in ({self.d_in}, {self.d_out}), got {w_in.shape}"
+                )
+            # Serving mode (no output permutation): the engine's delivered
+            # features must equal the plain forward exactly; an out_perm
+            # would require downstream retraining, as the paper's rand() does.
+            # Domain-separated seed: recovering the vocab permutation (a
+            # substitution cipher — see core.security) must not let an
+            # attacker regenerate the continuous lane's core from the same
+            # rng stream.
+            embed_seed = int(
+                np.random.SeedSequence([seed, 1]).generate_state(1)[0]
+            )
+            embed_morpher = EmbeddingMorpher.create(
+                embed_seed, self.d_in, self.kappa, d_out=None,
+                core_mode=self.core_mode,
+            )
+            aug_projection = np.asarray(
+                fuse_aug_projection(jnp.asarray(w_in), embed_morpher)
+            )
+        elif w_in is not None:
+            raise ValueError("w_in given but the registry has no continuous lane")
+        sess = LMSession(
+            morpher=morpher, embedding=embedding,
+            embed_morpher=embed_morpher, aug_projection=aug_projection,
+        )
+        self._adopt(tenant_id, sess)
+        return sess
+
+    def session(self, tenant_id: str) -> LMSession:
+        return self._sessions[tenant_id]
+
+    # -- stacked secret views consumed by the delivery engine ---------------
+    @property
+    def _core_q(self) -> int:
+        return self.d_in // self.kappa
+
+    def slot_perm(self, slot: int) -> np.ndarray:
+        """(V,) int32 token morph in ``slot``.
+
+        A free slot reads back as the identity permutation: still valid
+        gather indices (padding groups' output is sliced away anyway), and
+        it keeps the stacked array a permutation per row.
+        """
+        t = self._slot_tenant[slot]
+        if t is None:
+            return np.arange(self.vocab, dtype=np.int32)
+        return self._sessions[t].morpher.perm.astype(np.int32)
+
+    def slot_aug_embedding(self, slot: int) -> np.ndarray:
+        """(V, d_model) AugE table in ``slot`` (zeros when free)."""
+        t = self._slot_tenant[slot]
+        if t is None:
+            return np.zeros((self.vocab, self.d_model), np.float32)
+        return self._sessions[t].aug_embedding
+
+    def slot_embed_core(self, slot: int) -> np.ndarray:
+        """(q, q) continuous morph core in ``slot`` (zeros when free)."""
+        t = self._slot_tenant[slot]
+        if t is None:
+            return np.zeros((self._core_q, self._core_q), np.float32)
+        return np.asarray(self._sessions[t].embed_morpher.core.matrix)
+
+    def slot_aug_projection(self, slot: int) -> np.ndarray:
+        """(d_in, d_out) fused projection in ``slot`` (zeros when free)."""
+        t = self._slot_tenant[slot]
+        if t is None:
+            return np.zeros((self.d_in, self.d_out), np.float32)
+        return self._sessions[t].aug_projection
+
+    def stacked_perms(self) -> np.ndarray:
+        return np.stack([self.slot_perm(s) for s in range(self.capacity)])
+
+    def stacked_aug_embeddings(self) -> np.ndarray:
+        return np.stack(
+            [self.slot_aug_embedding(s) for s in range(self.capacity)]
+        )
+
+    def stacked_embed_cores(self) -> np.ndarray:
+        return np.stack(
+            [self.slot_embed_core(s) for s in range(self.capacity)]
+        )
+
+    def stacked_aug_projections(self) -> np.ndarray:
+        return np.stack(
+            [self.slot_aug_projection(s) for s in range(self.capacity)]
+        )

@@ -27,7 +27,13 @@ from .morphing import MorphCore, make_core, morph, unmorph
 from . import overhead as _overhead
 from . import security as _security
 
-__all__ = ["DataProvider", "Developer", "MoLeSession", "SessionRegistry"]
+__all__ = [
+    "DataProvider",
+    "Developer",
+    "MoLeSession",
+    "SessionRegistry",
+    "SlotRegistry",
+]
 
 
 class DataProvider:
@@ -127,48 +133,35 @@ class MoLeSession:
         return self.developer.first_layer(self.provider.morph_batch(data))
 
 
-class SessionRegistry:
-    """Provider-side registry of per-tenant MoLe sessions (delivery engine hook).
+class SlotRegistry:
+    """Shape-stable slot bookkeeping shared by every tenant-session registry.
 
-    All tenants share one ``ConvGeometry`` and ``kappa`` — that is what makes
-    their secrets *stackable*: the registry exposes the cores as a dense
-    ``(S, q, q)`` array and the Aug-Conv matrices as ``(S, F_in, F_out)``, so
-    ``repro.runtime.engine`` can execute many tenants' morph + Aug-Conv as one
-    batched GEMM.  Each tenant still has its own independent secret core and
-    channel permutation; nothing is shared across the trust boundary between
-    tenants.
+    A registry maps tenant ids to host-side session objects (the "host
+    store") and assigns each *active* tenant a slot in a fixed-capacity slot
+    table.  Subclasses decide what a session is (vision ``MoLeSession``, LM
+    ``LMSession``, ...) and how a slot's secrets materialize into stacked
+    device arrays; this base owns everything churn-related:
 
-    **Shape-stable slots.**  The stacked arrays have a fixed leading dim
-    ``S == capacity`` of pre-allocated *slots*; tenants are assigned to slots
-    on registration and evicted LRU (their secrets stay in the host-side
-    session store — "host offload") when the slots run out.  Because the
-    stacked shapes never change while capacity holds, tenant churn updates
-    the engine's device buffers in place instead of retracing its jitted
-    delivery step.  With ``capacity=None`` (the default) the slot table grows
-    by doubling instead of evicting, so shapes change at most ``O(log T)``
-    times over a registry's lifetime.
-
-    ``version`` increments on every slot-content change; ``updates_since``
-    gives the engine the changed slots so it can patch its device-side
-    stacked arrays incrementally (falling back to a full rebuild only when
-    the changelog has been trimmed or capacity grew).
+      * slot assignment + LRU eviction with host offload (evicted tenants
+        keep their secrets in the host store and transparently regain a slot
+        on their next ``slot_for`` lookup);
+      * auto-capacity growth by doubling when ``capacity=None``;
+      * the ``version`` counter + slot changelog consumed by the delivery
+        engine's ``updates_since`` incremental device patches, which is what
+        keeps tenant churn from ever retracing the jitted delivery step.
     """
 
     # Changelog entries retained per slot of capacity before updates_since
     # gives up and requests a full rebuild.
     _LOG_FACTOR = 4
 
-    def __init__(self, geom: ConvGeometry, kappa: int = 1,
-                 core_mode: str = "orthogonal", capacity: int | None = None):
-        self.geom = geom
-        self.kappa = kappa
-        self.core_mode = core_mode
+    def __init__(self, capacity: int | None = None):
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self._auto_capacity = capacity is None
         self._slot_tenant: list[str | None] = [None] * (capacity or 1)
         self._slot_of: dict[str, int] = {}
-        self._sessions: dict[str, MoLeSession] = {}   # host store: ALL tenants
+        self._sessions: dict = {}                     # host store: ALL tenants
         self._order: list[str] = []
         self._clock = 0
         self._last_used: dict[str, int] = {}
@@ -273,12 +266,8 @@ class SessionRegistry:
             return None
         return sorted({s for v, s in self._slot_log if v > version})
 
-    def register(
-        self, tenant_id: str, dev_kernels: np.ndarray, seed: int | None = None
-    ) -> MoLeSession:
-        """Create a tenant session: draw fresh secrets, fuse its Aug-Conv."""
-        if tenant_id in self._sessions:
-            raise ValueError(f"tenant {tenant_id!r} already registered")
+    @staticmethod
+    def _resolve_seed(seed: int | None) -> int:
         if seed is None:
             # Secrets must not be derivable from public identifiers: default
             # to OS entropy.  Pass an explicit seed only for reproducibility
@@ -286,13 +275,65 @@ class SessionRegistry:
             import secrets as _secrets
 
             seed = _secrets.randbits(31)
-        sess = MoLeSession.create(
-            dev_kernels, self.geom, kappa=self.kappa, seed=seed,
-            core_mode=self.core_mode,
-        )
+        return seed
+
+    def _adopt(self, tenant_id: str, sess) -> None:
+        """Enter a freshly-built session into the host store + a slot."""
+        if tenant_id in self._sessions:
+            raise ValueError(f"tenant {tenant_id!r} already registered")
         self._sessions[tenant_id] = sess
         self._order.append(tenant_id)
         self._assign_slot(tenant_id)
+
+    def session(self, tenant_id: str):
+        return self._sessions[tenant_id]
+
+
+class SessionRegistry(SlotRegistry):
+    """Provider-side registry of per-tenant MoLe sessions (delivery engine hook).
+
+    All tenants share one ``ConvGeometry`` and ``kappa`` — that is what makes
+    their secrets *stackable*: the registry exposes the cores as a dense
+    ``(S, q, q)`` array and the Aug-Conv matrices as ``(S, F_in, F_out)``, so
+    ``repro.runtime.engine`` can execute many tenants' morph + Aug-Conv as one
+    batched GEMM.  Each tenant still has its own independent secret core and
+    channel permutation; nothing is shared across the trust boundary between
+    tenants.
+
+    **Shape-stable slots** (see :class:`SlotRegistry`).  The stacked arrays
+    have a fixed leading dim ``S == capacity`` of pre-allocated slots;
+    tenants are assigned to slots on registration and evicted LRU (their
+    secrets stay in the host-side session store — "host offload") when the
+    slots run out.  Because the stacked shapes never change while capacity
+    holds, tenant churn updates the engine's device buffers in place instead
+    of retracing its jitted delivery step.  With ``capacity=None`` (the
+    default) the slot table grows by doubling instead of evicting, so shapes
+    change at most ``O(log T)`` times over a registry's lifetime.
+
+    ``version`` increments on every slot-content change; ``updates_since``
+    gives the engine the changed slots so it can patch its device-side
+    stacked arrays incrementally (falling back to a full rebuild only when
+    the changelog has been trimmed or capacity grew).
+    """
+
+    def __init__(self, geom: ConvGeometry, kappa: int = 1,
+                 core_mode: str = "orthogonal", capacity: int | None = None):
+        super().__init__(capacity)
+        self.geom = geom
+        self.kappa = kappa
+        self.core_mode = core_mode
+
+    def register(
+        self, tenant_id: str, dev_kernels: np.ndarray, seed: int | None = None
+    ) -> MoLeSession:
+        """Create a tenant session: draw fresh secrets, fuse its Aug-Conv."""
+        if tenant_id in self._sessions:
+            raise ValueError(f"tenant {tenant_id!r} already registered")
+        sess = MoLeSession.create(
+            dev_kernels, self.geom, kappa=self.kappa,
+            seed=self._resolve_seed(seed), core_mode=self.core_mode,
+        )
+        self._adopt(tenant_id, sess)
         return sess
 
     def session(self, tenant_id: str) -> MoLeSession:

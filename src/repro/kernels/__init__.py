@@ -11,8 +11,10 @@ from .dispatch import BACKENDS, resolve_backend
 from .ops import (
     aug_conv_forward,
     aug_conv_forward_batched,
+    aug_embed_batched,
     morph_rows,
     morph_rows_batched,
+    token_morph_batched,
 )
 from .wkv6 import wkv6_chunked
 from . import ref
@@ -22,8 +24,10 @@ __all__ = [
     "resolve_backend",
     "aug_conv_forward",
     "aug_conv_forward_batched",
+    "aug_embed_batched",
     "morph_rows",
     "morph_rows_batched",
+    "token_morph_batched",
     "wkv6_chunked",
     "ref",
 ]

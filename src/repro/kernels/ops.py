@@ -32,6 +32,8 @@ __all__ = [
     "aug_conv_forward",
     "morph_rows_batched",
     "aug_conv_forward_batched",
+    "token_morph_batched",
+    "aug_embed_batched",
 ]
 
 
@@ -128,3 +130,32 @@ def _aug_conv_forward_batched(t, c_acs, backend):
             lambda tg, cg: aug_gemm(tg, cg, bm=bm, bn=bn, bk=bk, interpret=interp)
         )(t, c_acs)
     return ref.aug_gemm_batched_ref(t, c_acs)
+
+
+def token_morph_batched(
+    tokens: jax.Array, perms: jax.Array, backend: str | None = None
+) -> jax.Array:
+    """Per-group token morphing: tokens (G, B, L) with perms (G, V).
+
+    The LM delivery-engine hot path.  Discrete morphing is a dynamic gather
+    — memory-bound, no MACs — so every backend routes to XLA's native gather
+    (the Pallas kernels in this package exist for the GEMM-shaped paths;
+    hand-rolling a TPU gather here would only re-derive what Mosaic emits).
+    The ``backend`` flag is still resolved/validated so call sites stay
+    uniform with the GEMM entry points.
+    """
+    resolve_backend(backend)
+    return ref.token_morph_batched_ref(tokens, perms)
+
+
+def aug_embed_batched(
+    tokens: jax.Array, tables: jax.Array, backend: str | None = None
+) -> jax.Array:
+    """Per-group Aug-Embedding forward: morphed tokens (G, B, L) gathered
+    from per-group (V, d) tables -> (G, B, L, d).
+
+    Like :func:`token_morph_batched`, a gather on every backend — "gather
+    stays a gather: zero runtime overhead" (``core.lm``).
+    """
+    resolve_backend(backend)
+    return ref.aug_embed_batched_ref(tokens, tables)

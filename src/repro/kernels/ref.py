@@ -45,6 +45,22 @@ def aug_gemm_ref(t: jax.Array, c_ac: jax.Array) -> jax.Array:
     ).astype(t.dtype)
 
 
+def token_morph_batched_ref(tokens: jax.Array, perms: jax.Array) -> jax.Array:
+    """Per-group token morphing: each group gathers its own vocab permutation.
+
+    tokens: (G, B, L) int; perms: (G, V) int -> morphed (G, B, L) int.
+    """
+    return jax.vmap(lambda p, t: p[t])(perms, tokens)
+
+
+def aug_embed_batched_ref(tokens: jax.Array, tables: jax.Array) -> jax.Array:
+    """Per-group Aug-Embedding forward: each group has its own (V, d) table.
+
+    tokens: (G, B, L) int; tables: (G, V, d) -> features (G, B, L, d).
+    """
+    return jax.vmap(lambda e, t: e[t])(tables, tokens)
+
+
 def wkv6_ref(
     r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     u: jax.Array, s0: jax.Array,

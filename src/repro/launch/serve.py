@@ -1,6 +1,6 @@
-"""Serving driver: MoLe-secured delivery and LM serving.
+"""Serving driver: MoLe-secured delivery and LM serving, one delivery plane.
 
-Two modes:
+Two modes, both engine-backed:
 
 ``--mode delivery`` (default) — the batched multi-tenant delivery engine
 (paper's training/inference data-delivery stage): many tenants register
@@ -12,21 +12,31 @@ path (``repro.runtime.engine``).  Reports throughput vs the per-request
     PYTHONPATH=src python -m repro.launch.serve --mode delivery \
         --tenants 4 --requests 64 --batch 1 --kappa 4
 
-``--mode delivery --async`` — the same traffic through the async front door
-(``repro.runtime.async_engine``): a background flusher with a
+``--mode lm`` — batched prefill + decode over a MoLe-secured token stream,
+with the provider side served by the **same engine**: LM tenants register
+in an ``LMSessionRegistry`` (each draws its own secret vocab permutation),
+prompts coalesce into length-bucketed token microbatches, and the batched
+multi-tenant morph runs as one jitted gather.  The developer serves each
+tenant with that tenant's Aug-fused params; the provider unmorphs the
+sampled tokens through the tenant's session.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch deepseek_7b \
+        --smoke --requests 8 --prompt-len 32 --gen 16 --mole token
+
+``--async`` works in **both** modes: traffic goes through the async front
+door (``repro.runtime.async_engine``) — a background flusher with a
 ``--max-delay-ms`` latency SLO and per-tenant admission control
 (``--max-inflight-rows``, ``--admission block|reject``); additionally
 reports p50/p95 completion latency.
 
     PYTHONPATH=src python -m repro.launch.serve --mode delivery --async \
         --tenants 4 --requests 64 --max-delay-ms 5
-
-``--mode lm`` — batched prefill + decode over a MoLe-secured token stream:
-provider morphs request tokens (secret vocab permutation) -> developer
-serves with Aug-fused params -> provider unmorphs the sampled tokens.
-
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch deepseek_7b \
-        --smoke --requests 8 --prompt-len 32 --gen 16 --mole token
+        --smoke --async --max-delay-ms 5 --admission reject
+
+Flags that only make sense for the other mode are an error, not silently
+ignored (``--batch`` with ``--mode lm``, ``--gen`` with ``--mode delivery``,
+...).
 """
 from __future__ import annotations
 
@@ -40,7 +50,6 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core.deploy import fuse_lm_params
-from repro.core.lm import TokenMorpher
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.api import Model
@@ -143,96 +152,268 @@ def run_delivery(args) -> dict:
     return out
 
 
+def run_lm(args) -> np.ndarray:
+    """Serve LM traffic: engine-morphed prompts, per-tenant Aug-fused serving.
+
+    Provider side (the delivery engine): each LM tenant holds its own secret
+    vocab permutation in the shared ``LMSessionRegistry``; prompt requests
+    coalesce into length-bucketed token microbatches and morph as one jitted
+    multi-tenant gather — sync flush or the async deadline flusher.
+    Developer side: prefill + greedy decode per tenant, with that tenant's
+    Aug-fused params.  Provider unmorphs the sampled tokens.
+
+    Returns the unmorphed generations, request-ordered — with ``--tenants 1``
+    bit-identical to the pre-engine single-``TokenMorpher`` path.
+    """
+    from repro.core.lm import LMSessionRegistry
+    from repro.runtime import AsyncDeliveryEngine, MoLeDeliveryEngine
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    use_mole = args.mole != "off"
+    if use_mole:
+        cfg = dataclasses.replace(cfg, mole=MoLeCfg(enabled=True, mode="token"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    embed = np.asarray(
+        params["dec"]["embed"] if cfg.family == "audio" else params["embed"],
+        np.float32,
+    )
+
+    tenants = max(1, min(args.tenants, args.requests))
+    src = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
+                                 global_batch=args.requests, seed=args.seed))
+    raw_prompts = np.asarray(src.batch(0)["tokens"])
+    tenant_of = [f"lm-{i % tenants}" for i in range(args.requests)]
+
+    # ---- provider side: engine-morphed prompts ---------------------------
+    registry = engine = None
+    stats = None
+    if use_mole:
+        capacity = args.capacity if args.capacity is not None else tenants
+        registry = LMSessionRegistry(
+            cfg.vocab, embed.shape[1], capacity=capacity
+        )
+        for i in range(tenants):
+            # Tenant lm-0 draws the same secret as the pre-engine single-
+            # morpher path (seed = cfg.mole.seed), so --tenants 1 reproduces
+            # it bit-for-bit; other tenants offset the seed.
+            registry.register(f"lm-{i}", embed, seed=cfg.mole.seed + i)
+        engine = MoLeDeliveryEngine(
+            lm_registry=registry, backend=args.backend or None,
+            # Make --prompt-len itself a seq bucket: any prompt length is
+            # servable and the steady-state microbatch carries zero
+            # sequence padding.
+            seq_buckets=tuple(
+                sorted({8, 16, 32, 64, 128, 256, 512, args.prompt_len})
+            ),
+        )
+        t0 = time.time()
+        if args.use_async:
+            front = AsyncDeliveryEngine(
+                engine, max_delay_ms=args.max_delay_ms,
+                max_inflight_rows=args.max_inflight_rows,
+                admission=args.admission,
+            )
+            futures = [
+                front.submit_tokens(tenant_of[r], raw_prompts[r : r + 1])
+                for r in range(args.requests)
+            ]
+            served_prompts = np.concatenate(
+                [f.result(timeout=120) for f in futures], axis=0
+            )
+            front.close()
+        else:
+            rids = [
+                engine.submit_tokens(tenant_of[r], raw_prompts[r : r + 1])
+                for r in range(args.requests)
+            ]
+            engine.flush()
+            served_prompts = np.concatenate(
+                [engine.take(r) for r in rids], axis=0
+            )
+        dt_morph = time.time() - t0
+        stats = engine.stats
+    else:
+        served_prompts = raw_prompts
+        dt_morph = 0.0
+
+    # ---- developer side: Aug-fused params, prefill + decode per tenant ---
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(3,))
+    max_len = args.prompt_len + args.gen + 1
+    by_tenant: dict[str, list[int]] = {}
+    for r, t in enumerate(tenant_of):
+        by_tenant.setdefault(t if use_mole else "all", []).append(r)
+
+    final = np.zeros((args.requests, args.gen), np.int64)
+    t0 = time.time()
+    for t, ridx in by_tenant.items():
+        sess = registry.session(t) if use_mole else None
+        dev_params = (
+            fuse_lm_params(params, cfg, token_morpher=sess.morpher)
+            if use_mole else params
+        )
+        batch = {"tokens": jnp.asarray(served_prompts[ridx], jnp.int32)}
+        if cfg.frontend is not None:
+            key = "frames" if cfg.frontend.kind == "audio" else "patches"
+            batch[key] = jnp.zeros(
+                (len(ridx), cfg.frontend.n_tokens, cfg.frontend.d_in),
+                jnp.bfloat16,
+            )
+        caches = model.init_cache(len(ridx), max_len)
+        logits, caches = prefill(dev_params, batch, caches)
+        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens = [tok]
+        for i in range(args.gen - 1):
+            step_t = jnp.asarray(args.prompt_len + i, jnp.int32)
+            logits, caches = decode(dev_params, tok, step_t, caches)
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+            out_tokens.append(tok)
+        served_out = np.concatenate(
+            [np.asarray(tk) for tk in out_tokens], axis=1
+        )
+        # ---- provider side: unmorph this tenant's served tokens ----------
+        final[ridx] = (
+            np.asarray(sess.morpher.inv_perm)[served_out]
+            if use_mole else served_out
+        )
+    dt = time.time() - t0
+
+    tps = args.requests * args.gen / dt
+    engine_line = ""
+    if use_mole:
+        engine_line = (
+            f"  engine morph: {args.requests / max(dt_morph, 1e-9):9.1f} "
+            f"prompts/s ({stats.microbatches} microbatches, "
+            f"padding {stats.padding_fraction:.0%}, async={args.use_async}"
+        )
+        if args.use_async:
+            engine_line += (
+                f", p50={stats.p50_ms:.2f}ms p95={stats.p95_ms:.2f}ms"
+            )
+        engine_line += ")\n"
+    print(
+        f"arch={cfg.name} requests={args.requests} tenants={tenants} "
+        f"gen={args.gen} mole={'token' if use_mole else 'off'}  "
+        f"{dt:.2f}s  {tps:.1f} tok/s\n"
+        f"{engine_line}"
+        f"first request generation (provider view): "
+        f"{final[0][:12].tolist()}"
+    )
+    return final
+
+
+# Mode-specific flags: CLI spelling -> (argparse dest, default).  Giving one
+# of these with the other mode is an error — silently dropping flags hid
+# real misconfigurations (the old --mode lm ignored --async entirely).
+_DELIVERY_ONLY = {
+    "--batch": ("batch", 1),
+    "--kappa": ("kappa", 1),
+    "--channels": ("channels", 3),
+    "--out-channels": ("out_channels", 16),
+    "--image-size": ("image_size", 16),
+}
+_LM_ONLY = {
+    "--arch": ("arch", None),
+    "--smoke": ("smoke", False),
+    "--prompt-len": ("prompt_len", 32),
+    "--gen": ("gen", 16),
+    "--mole": ("mole", "token"),
+}
+# Flags that configure the delivery engine / its async front door.  Under
+# ``--mode lm --mole off`` no engine runs at all, so these would be silently
+# ignored — same policy: that is an error, not a no-op.
+_ENGINE_ONLY = {
+    "--tenants": ("tenants", 4),
+    "--backend": ("backend", None),
+    "--async": ("use_async", False),
+    "--max-delay-ms": ("max_delay_ms", 5.0),
+    "--max-inflight-rows": ("max_inflight_rows", 4096),
+    "--admission": ("admission", "block"),
+    "--capacity": ("capacity", None),
+}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default=None, choices=["delivery", "lm"],
                     help="default: lm when --arch is given, else delivery")
     ap.add_argument("--arch", default=None, choices=ARCHS)
-    # delivery-engine options
-    ap.add_argument("--tenants", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=1,
-                    help="images per delivery request")
-    ap.add_argument("--kappa", type=int, default=1)
-    ap.add_argument("--channels", type=int, default=3)
-    ap.add_argument("--out-channels", type=int, default=16)
-    ap.add_argument("--image-size", type=int, default=16)
+    # delivery-engine options (both modes, but require the engine: error
+    # under --mode lm --mole off)
+    ap.add_argument("--tenants", type=int, default=None)
     ap.add_argument("--backend", default=None,
                     help="kernel backend: pallas | interpret | jnp (default auto)")
     ap.add_argument("--async", dest="use_async", action="store_true",
+                    default=None,
                     help="serve through the async front door (deadline "
                          "flusher + admission control)")
-    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+    ap.add_argument("--max-delay-ms", type=float, default=None,
                     help="async latency SLO: max wait before a flush fires")
-    ap.add_argument("--max-inflight-rows", type=int, default=4096,
+    ap.add_argument("--max-inflight-rows", type=int, default=None,
                     help="async per-tenant admission quota (rows in flight)")
-    ap.add_argument("--admission", default="block", choices=["block", "reject"],
+    ap.add_argument("--admission", default=None, choices=["block", "reject"],
                     help="over-quota behavior: backpressure or AdmissionError")
     ap.add_argument("--capacity", type=int, default=None,
                     help="registry slot capacity (default: one slot per "
                          "--tenants, which keeps steady-state microbatches "
                          "on the identity-gather fast path; tenants beyond "
                          "capacity LRU-evict to host)")
-    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mole", default="token", choices=["off", "token"])
     ap.add_argument("--seed", type=int, default=0)
+    # vision-delivery-only options (error under --mode lm)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="[delivery] images per delivery request")
+    ap.add_argument("--kappa", type=int, default=None)
+    ap.add_argument("--channels", type=int, default=None)
+    ap.add_argument("--out-channels", type=int, default=None)
+    ap.add_argument("--image-size", type=int, default=None)
+    # lm-only options (error under --mode delivery)
+    ap.add_argument("--smoke", action="store_true", default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=None)
+    ap.add_argument("--mole", default=None, choices=["off", "token"])
+    # Every None-default flag must belong to exactly one gating table —
+    # otherwise a future flag would silently stay None in every mode, the
+    # misconfiguration class this validation exists to kill.
+    gated = {
+        dest
+        for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY)
+        for dest, _ in table.values()
+    }
+    ungated = {
+        a.dest for a in ap._actions
+        if a.default is None and a.dest not in ("help", "mode")
+    } - gated
+    assert not ungated, f"flags missing from a mode-gating table: {ungated}"
     args = ap.parse_args(argv)
 
     mode = args.mode or ("lm" if args.arch else "delivery")
+    wrong = _LM_ONLY if mode == "delivery" else _DELIVERY_ONLY
+    for flag, (dest, _) in wrong.items():
+        if getattr(args, dest) is not None:
+            ap.error(
+                f"{flag} only applies to --mode "
+                f"{'lm' if mode == 'delivery' else 'delivery'} "
+                f"(got --mode {mode})"
+            )
+    if mode == "lm" and args.mole == "off":
+        for flag, (dest, _) in _ENGINE_ONLY.items():
+            if getattr(args, dest) is not None:
+                ap.error(
+                    f"{flag} requires the delivery engine, which --mole off "
+                    f"disables"
+                )
+    for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY):
+        for dest, default in table.values():
+            if getattr(args, dest) is None:
+                setattr(args, dest, default)
+
     if mode == "delivery":
         return run_delivery(args)
     if args.arch is None:
         ap.error("--arch is required with --mode lm")
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.mole != "off":
-        cfg = dataclasses.replace(cfg, mole=MoLeCfg(enabled=True, mode="token"))
-    model = Model(cfg)
-    params = model.init(jax.random.key(args.seed))
-
-    # ---- provider side: secrets + morphed request batch ------------------
-    morpher = TokenMorpher.create(cfg.mole.seed, cfg.vocab) if args.mole != "off" else None
-    src = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
-                                 global_batch=args.requests, seed=args.seed))
-    raw_prompts = src.batch(0)["tokens"]
-    served_prompts = (
-        np.asarray(morpher.perm)[raw_prompts] if morpher else raw_prompts
-    )
-
-    # ---- developer side: Aug-fused params, prefill + decode loop ---------
-    dev_params = fuse_lm_params(params, cfg, token_morpher=morpher) if morpher else params
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model), donate_argnums=(3,))
-
-    max_len = args.prompt_len + args.gen + 1
-    batch = {"tokens": jnp.asarray(served_prompts, jnp.int32)}
-    if cfg.frontend is not None:
-        key = "frames" if cfg.frontend.kind == "audio" else "patches"
-        batch[key] = jnp.zeros(
-            (args.requests, cfg.frontend.n_tokens, cfg.frontend.d_in), jnp.bfloat16
-        )
-    caches = model.init_cache(args.requests, max_len)
-    t0 = time.time()
-    logits, caches = prefill(dev_params, batch, caches)
-    tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-    out_tokens = [tok]
-    for i in range(args.gen - 1):
-        t = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, caches = decode(dev_params, tok, t, caches)
-        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens.append(tok)
-    served_out = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    dt = time.time() - t0
-
-    # ---- provider side: unmorph the served tokens ------------------------
-    final = np.asarray(morpher.inv_perm)[served_out] if morpher else served_out
-    tps = args.requests * args.gen / dt
-    print(f"arch={cfg.name} requests={args.requests} gen={args.gen} "
-          f"mole={'token' if morpher else 'off'}  {dt:.2f}s  {tps:.1f} tok/s")
-    print("first request generation (provider view):", final[0][:12].tolist())
-    return final
+    return run_lm(args)
 
 
 if __name__ == "__main__":

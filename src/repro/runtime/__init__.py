@@ -7,7 +7,7 @@
 """
 from .async_engine import AdmissionError, AsyncDeliveryEngine
 from .engine import EngineStats, MoLeDeliveryEngine, delivery_trace_count
-from .queue import DeliveryRequest, Microbatch, RequestQueue
+from .queue import DeliveryRequest, Microbatch, RequestQueue, TokenQueue
 from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
 
 __all__ = [
@@ -19,6 +19,7 @@ __all__ = [
     "DeliveryRequest",
     "Microbatch",
     "RequestQueue",
+    "TokenQueue",
     "FailureInjector",
     "ResilientLoop",
     "SimulatedFailure",

@@ -29,7 +29,7 @@ import threading
 import time
 from concurrent.futures import Future
 
-from repro.core.protocol import SessionRegistry
+from repro.core.protocol import SlotRegistry
 
 from .engine import MoLeDeliveryEngine
 
@@ -46,9 +46,14 @@ class AsyncDeliveryEngine:
     Parameters
     ----------
     engine:
-        A :class:`MoLeDeliveryEngine` or a :class:`SessionRegistry` (a
-        default engine is built around it; extra ``engine_kwargs`` pass
-        through).
+        A :class:`MoLeDeliveryEngine` or any :class:`SlotRegistry` —
+        vision ``SessionRegistry`` or ``LMSessionRegistry`` (a default
+        engine is built around a bare registry; extra ``engine_kwargs``
+        pass through).  Vision and LM
+        tenants share the one front door: :meth:`submit` takes image
+        payloads, :meth:`submit_tokens` / :meth:`submit_features` take LM
+        payloads, and all three share the deadline flusher and the
+        per-tenant admission quota.
     max_delay_ms:
         Latency SLO: the flusher guarantees a flush starts within this long
         of any request's submission, so completion latency is bounded by
@@ -64,7 +69,7 @@ class AsyncDeliveryEngine:
 
     def __init__(
         self,
-        engine: MoLeDeliveryEngine | SessionRegistry,
+        engine: MoLeDeliveryEngine | SlotRegistry,
         *,
         max_delay_ms: float = 5.0,
         flush_rows: int | None = None,
@@ -72,7 +77,10 @@ class AsyncDeliveryEngine:
         admission: str = "block",
         **engine_kwargs,
     ):
-        if isinstance(engine, SessionRegistry):
+        # Any SlotRegistry subclass (vision SessionRegistry, LMSessionRegistry,
+        # future kinds): the engine's positional dispatch routes it to the
+        # right lane.
+        if isinstance(engine, SlotRegistry):
             engine = MoLeDeliveryEngine(engine, **engine_kwargs)
         elif engine_kwargs:
             raise TypeError(
@@ -84,7 +92,7 @@ class AsyncDeliveryEngine:
         self.engine = engine
         self.max_delay_ms = float(max_delay_ms)
         self.flush_rows = (
-            engine.queue.max_rows * engine.queue.group_buckets[-1]
+            engine.max_rows * engine.group_buckets[-1]
             if flush_rows is None else int(flush_rows)
         )
         self.max_inflight_rows = int(max_inflight_rows)
@@ -117,13 +125,13 @@ class AsyncDeliveryEngine:
         with self._cv:
             return len(self._futures)
 
-    def submit(self, tenant_id: str, data) -> Future:
-        """Enqueue one tenant request; the Future resolves to features
-        ``(b, beta, n, n)`` once a deadline/bucket flush completes it."""
-        # Payload validation/unrolling is pure per-request work — do it
-        # before taking the lock so data prep never serializes submitters.
-        rows = self.engine.prepare_rows(tenant_id, data)
-        n_rows = rows.shape[0]
+    def _admit(self, tenant_id: str, n_rows: int, enqueue) -> Future:
+        """Shared admission path: quota-gate ``enqueue()`` under the lock.
+
+        ``enqueue`` performs the actual (lane-specific) engine submit and
+        returns a request id; rows are the admission unit in every lane
+        (images for vision, sequences for tokens, positions for features).
+        """
         with self._cv:
             if self._closed:
                 raise RuntimeError("AsyncDeliveryEngine is closed")
@@ -150,7 +158,7 @@ class AsyncDeliveryEngine:
                 self._cv.wait()
                 if self._closed:
                     raise RuntimeError("AsyncDeliveryEngine is closed")
-            rid = self.engine.submit(tenant_id, rows)
+            rid = enqueue()
             fut: Future = Future()
             fut.request_id = rid  # engine request id, for tracing/tests
             self._futures[rid] = fut
@@ -162,9 +170,50 @@ class AsyncDeliveryEngine:
             self._cv.notify_all()  # wake the flusher: new deadline / bucket
             return fut
 
+    def submit(self, tenant_id: str, data) -> Future:
+        """Enqueue one vision tenant request; the Future resolves to features
+        ``(b, beta, n, n)`` once a deadline/bucket flush completes it."""
+        # Payload validation/unrolling is pure per-request work — do it
+        # before taking the lock so data prep never serializes submitters.
+        rows = self.engine.prepare_rows(tenant_id, data)
+        return self._admit(
+            tenant_id, rows.shape[0],
+            lambda: self.engine._enqueue_rows(tenant_id, rows),
+        )
+
+    def submit_tokens(
+        self, tenant_id: str, tokens, *, deliver: str = "tokens"
+    ) -> Future:
+        """Enqueue one LM token request ``(b, L)``; the Future resolves to
+        morphed tokens (``deliver="tokens"``) or Aug-embedded features
+        (``deliver="embed"``) — same semantics as the sync engine."""
+        if deliver not in ("tokens", "embed"):
+            raise ValueError(f"deliver must be 'tokens' or 'embed', got {deliver!r}")
+        toks = self.engine.prepare_tokens(tenant_id, tokens)
+        return self._admit(
+            tenant_id, toks.shape[0],
+            lambda: self.engine._enqueue_tokens(tenant_id, toks, deliver),
+        )
+
+    def submit_features(self, tenant_id: str, data) -> Future:
+        """Enqueue one continuous-LM request (per-position feature rows)."""
+        rows = self.engine.prepare_features(tenant_id, data)
+        n_rows = rows.reshape(-1, rows.shape[-1]).shape[0]
+        return self._admit(
+            tenant_id, n_rows,
+            lambda: self.engine._enqueue_features(tenant_id, rows),
+        )
+
     def deliver(self, tenant_id: str, data, timeout: float | None = None):
         """Synchronous convenience: submit and wait for the features."""
         return self.submit(tenant_id, data).result(timeout=timeout)
+
+    def deliver_tokens(self, tenant_id: str, tokens, *,
+                       deliver: str = "tokens", timeout: float | None = None):
+        """Synchronous convenience: submit tokens and wait for the result."""
+        return self.submit_tokens(
+            tenant_id, tokens, deliver=deliver
+        ).result(timeout=timeout)
 
     def flush_now(self) -> None:
         """Ask the flusher to flush immediately (does not wait for results)."""
@@ -220,7 +269,7 @@ class AsyncDeliveryEngine:
             return False
         if self._force_flush or self._closed:
             return True
-        if self.engine.queue.pending_rows >= self.flush_rows:
+        if self.engine.pending_rows >= self.flush_rows:
             return True
         deadline = self._oldest_deadline()
         return deadline is not None and now >= deadline

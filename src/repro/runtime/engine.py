@@ -1,32 +1,43 @@
-"""Batched multi-tenant MoLe delivery engine.
+"""Batched multi-tenant MoLe delivery engine — one plane for vision + LM.
 
-The serving counterpart of :class:`repro.core.protocol.MoLeSession`: many
-provider sessions (one per tenant, each with its own secret core and channel
-permutation) are registered in a :class:`repro.core.SessionRegistry`; incoming
+The serving counterpart of :class:`repro.core.protocol.MoLeSession` and
+:class:`repro.core.lm.LMSession`: many provider sessions (one per tenant,
+each with its own secrets) are registered in slot registries; incoming
 requests are coalesced into padded microbatches (``repro.runtime.queue``) and
-the provider-side block-diagonal morph plus the developer-side Aug-Conv
-forward run as **one jitted, mesh-shardable path** over the whole microbatch:
+the provider-side morph plus the developer-side Aug forward run as **one
+jitted, mesh-shardable path** over the whole microbatch.  Three lanes share
+the machinery:
 
-    (G, B, F_in) --morph cores[gidx]--> (G, B, F_in) --@ augs[gidx]--> (G, B, F_out)
+  * **vision rows** (``SessionRegistry``): block-diagonal morph + Aug-Conv,
+      (G, B, F_in) --morph cores[gidx]--> (G, B, F_in) --@ augs[gidx]--> (G, B, F_out)
+  * **LM tokens** (``LMSessionRegistry``): per-tenant vocab permutation +
+    Aug-Embedding, length-bucketed,
+      (G, B, L) --perms[gidx] gather--> (G, B, L) [--AugE[gidx] gather--> (G, B, L, d)]
+  * **LM embeddings** (continuous lane): the paper's scheme verbatim with
+    ``m^2 -> 1`` — per-position feature rows run through the *same* jitted
+    ``_delivery_step`` as the vision lane, with the registry's stacked
+    embedding cores and fused input projections as the secrets.
 
 Groups never mix tenants, so tenant A's rows are only ever morphed with
-tenant A's core and only ever hit tenant A's Aug-Conv matrix — the isolation
-property asserted in ``tests/test_engine.py``.
+tenant A's secrets — the isolation property asserted in
+``tests/test_engine.py`` / ``tests/test_lm_engine.py``.
 
 Kernel backend selection follows ``repro.kernels.dispatch``: the Pallas
 ``block_diag_matmul`` / ``aug_gemm`` kernels on TPU, the jnp reference on CPU
-— a flag, not the old hard-coded ``interpret=True``.
+— a flag, not the old hard-coded ``interpret=True``.  The token lane's
+gathers are XLA-native on every backend (``kernels.ops.token_morph_batched``).
 
 Under an active mesh the group axis is sharded over the data-parallel axes
 (``repro.sharding.rules.delivery_rules`` / ``hints.hint``); on a single
 device the hints are no-ops.
 
-**Shape-stable plans.**  The registry's stacked secrets have a fixed leading
-slot dim (``SessionRegistry`` capacity); registration/eviction churn reaches
+**Shape-stable plans.**  Each registry's stacked secrets have a fixed leading
+slot dim (``SlotRegistry`` capacity); registration/eviction churn reaches
 the device through per-slot ``.at[slot].set`` patches on the cached plan, so
-``_delivery_step`` is traced at most once per ``(bucket, kappa, backend)``
-shape regardless of tenant churn (``delivery_trace_count`` exposes the trace
-counter the regression test asserts on).
+``_delivery_step`` / ``_lm_delivery_step`` are traced at most once per
+``(bucket, kappa, backend)`` shape regardless of tenant churn
+(``delivery_trace_count`` exposes the trace counter the regression tests
+assert on).
 
 This class is **not** thread-safe; ``repro.runtime.async_engine`` layers a
 lock, a background deadline flusher, and admission control on top.
@@ -35,16 +46,24 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.d2r import reroll_batch, unroll_batch
+from repro.core.lm import LMSessionRegistry
 from repro.core.protocol import SessionRegistry
 from repro.kernels.dispatch import resolve_backend
-from repro.kernels.ops import aug_conv_forward_batched, morph_rows_batched
+from repro.kernels.ops import (
+    aug_conv_forward_batched,
+    aug_embed_batched,
+    morph_rows_batched,
+    token_morph_batched,
+)
 from repro.sharding.hints import hint
 
 __all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
@@ -97,85 +116,163 @@ class EngineStats:
 
 @dataclasses.dataclass
 class _Plan:
-    """Device-side stacked secrets, patched in place as the registry churns."""
+    """Device-side stacked secrets, patched in place as a registry churns."""
 
     version: int
-    cores: jax.Array        # (S, q, q)
-    augs: jax.Array         # (S, F_in, F_out)
+    arrays: dict[str, jax.Array]    # name -> (S, ...) stacked per-slot secret
 
 
-# (x_shape, gidx_shape, stacked_shapes, kappa, backend, identity) tuples seen
-# by actual traces of _delivery_step.  Python side effects inside a jitted
-# function run only while tracing, so this counts compilations, not calls —
-# the retrace-regression test asserts registration churn adds nothing here.
+def _sync_plan(plan, registry, slot_fns: dict[str, Callable[[int], np.ndarray]]):
+    """Bring a device plan up to ``registry.version``.
+
+    ``slot_fns`` maps each stacked-array name to the registry's per-slot
+    materializer.  Changed slots are patched with one scatter per stack —
+    shapes are stable, so neither the scatter nor the jitted delivery steps
+    retrace on tenant churn, and the (S, ...) stacks are copied once, not
+    once per slot.  A full rebuild happens only when the changelog has been
+    trimmed or capacity grew (auto-capacity doubling).
+    """
+    if plan is not None and plan.version != registry.version:
+        stable = all(
+            a.shape[0] == registry.capacity for a in plan.arrays.values()
+        )
+        slots = registry.updates_since(plan.version) if stable else None
+        if slots is None:
+            plan = None         # capacity grew / changelog trimmed: rebuild
+        elif not slots:  # pragma: no cover - version bump w/o slot churn
+            plan = dataclasses.replace(plan, version=registry.version)
+        else:
+            idx = jnp.asarray(slots, jnp.int32)
+            plan = _Plan(
+                version=registry.version,
+                arrays={
+                    name: plan.arrays[name].at[idx].set(
+                        np.stack([fn(s) for s in slots])
+                    )
+                    for name, fn in slot_fns.items()
+                },
+            )
+    if plan is None:
+        plan = _Plan(
+            version=registry.version,
+            arrays={
+                name: jnp.asarray(
+                    np.stack([fn(s) for s in range(registry.capacity)])
+                )
+                for name, fn in slot_fns.items()
+            },
+        )
+    return plan
+
+
+# Shape/static-arg tuples seen by actual traces of the jitted delivery steps.
+# Python side effects inside a jitted function run only while tracing, so
+# this counts compilations, not calls — the retrace-regression tests assert
+# registration churn adds nothing here.
 _TRACES: collections.Counter = collections.Counter()
 
 
 def delivery_trace_count() -> int:
-    """Total number of times ``_delivery_step`` has been traced (process-wide)."""
+    """Total number of times the jitted delivery steps (vision rows, LM
+    tokens) have been traced (process-wide)."""
     return sum(_TRACES.values())
 
 
 class MoLeDeliveryEngine:
-    """Multiplexes many tenants' delivery traffic over one compiled graph."""
+    """Multiplexes many tenants' delivery traffic over one compiled graph.
+
+    A tenant is a **vision session** (``registry``: :class:`SessionRegistry`)
+    or an **LM session** (``lm_registry``: :class:`LMSessionRegistry`); one
+    engine can serve either kind or a mixed fleet.  Passing an
+    ``LMSessionRegistry`` as the positional ``registry`` is accepted and
+    routed to the LM lane, so single-kind callers need not know two names.
+    """
 
     def __init__(
         self,
-        registry: SessionRegistry,
+        registry: SessionRegistry | LMSessionRegistry | None = None,
         *,
+        lm_registry: LMSessionRegistry | None = None,
         max_rows: int = 64,
         row_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
         group_buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
+        seq_buckets: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512),
         backend: str | None = None,
     ):
-        from .queue import RequestQueue  # local import keeps queue swappable
+        from .queue import RequestQueue, TokenQueue  # keeps queues swappable
 
+        if isinstance(registry, LMSessionRegistry):
+            if lm_registry is not None:
+                raise ValueError(
+                    "two LM registries given (positional + lm_registry=)"
+                )
+            registry, lm_registry = None, registry
+        if registry is None and lm_registry is None:
+            raise ValueError("need a vision registry, an LM registry, or both")
         self.registry = registry
+        self.lm_registry = lm_registry
         self.backend = resolve_backend(backend)
-        self.queue = RequestQueue(
-            registry.geom.in_features, max_rows=max_rows,
-            row_buckets=row_buckets, group_buckets=group_buckets,
+        self.max_rows = max_rows
+        self.row_buckets = tuple(sorted(row_buckets))
+        self.group_buckets = tuple(sorted(group_buckets))
+        self.seq_buckets = tuple(sorted(seq_buckets))
+        # One id space across every lane: request ids key the shared result
+        # table, so take() works the same whether the rid came from images,
+        # tokens, or embedding rows.
+        self._ids = itertools.count()
+        self._id_alloc = lambda: next(self._ids)
+        self.queue = (
+            RequestQueue(
+                registry.geom.in_features, max_rows=max_rows,
+                row_buckets=self.row_buckets, group_buckets=self.group_buckets,
+                id_alloc=self._id_alloc,
+            )
+            if registry is not None else None
+        )
+        self.token_queue = (
+            TokenQueue(
+                max_rows=max_rows, row_buckets=self.row_buckets,
+                group_buckets=self.group_buckets, seq_buckets=self.seq_buckets,
+                id_alloc=self._id_alloc,
+            )
+            if lm_registry is not None else None
+        )
+        self.embed_queue = (
+            RequestQueue(
+                lm_registry.d_in, max_rows=max_rows,
+                row_buckets=self.row_buckets, group_buckets=self.group_buckets,
+                id_alloc=self._id_alloc,
+            )
+            if lm_registry is not None and lm_registry.has_embed_lane else None
         )
         self.stats = EngineStats()
         self._plan: _Plan | None = None
+        self._lm_plan: _Plan | None = None
+        # The stacked (S, V, d_model) AugE tables are by far the largest
+        # secrets; they are staged to the device lazily, only once a
+        # deliver="embed" request has actually been seen — pure token-morph
+        # traffic (serve.py --mode lm, the benchmark sweep) never pays the
+        # upload or the device memory.
+        self._embed_tables_needed = False
         self._results: dict[int, np.ndarray] = {}
         self._request_shape: dict[int, tuple[int, ...]] = {}
+        self._token_deliver: dict[int, str] = {}   # rid -> "tokens" | "embed"
+        self._embed_shape: dict[int, tuple[int, ...]] = {}
         self._done: set[int] = set()
+
+    @property
+    def pending_rows(self) -> int:
+        """Unscheduled rows across every lane (rows == sequences for tokens)."""
+        lanes = (self.queue, self.token_queue, self.embed_queue)
+        return sum(q.pending_rows for q in lanes if q is not None)
 
     # -- secrets ------------------------------------------------------------
     def _refresh_plan(self) -> _Plan:
         reg = self.registry
-        plan = self._plan
-        if plan is not None and plan.version != reg.version:
-            slots = (
-                reg.updates_since(plan.version)
-                if plan.cores.shape[0] == reg.capacity else None
-            )
-            if slots is None:
-                plan = None         # capacity grew / changelog trimmed: rebuild
-            elif not slots:  # pragma: no cover - version bump w/o slot churn
-                plan = dataclasses.replace(plan, version=reg.version)
-            else:
-                # Patch the changed slots in one scatter per stack: shapes
-                # are stable, so neither the scatter nor _delivery_step
-                # retraces on tenant churn — and the (S, ...) stacks are
-                # copied once, not once per slot.
-                idx = jnp.asarray(slots, jnp.int32)
-                plan = _Plan(
-                    version=reg.version,
-                    cores=plan.cores.at[idx].set(
-                        np.stack([reg.slot_core(s) for s in slots])
-                    ),
-                    augs=plan.augs.at[idx].set(
-                        np.stack([reg.slot_aug(s) for s in slots])
-                    ),
-                )
-        if plan is None:
-            plan = _Plan(
-                version=reg.version,
-                cores=jnp.asarray(reg.stacked_cores()),
-                augs=jnp.asarray(reg.stacked_aug_matrices()),
-            )
+        plan = _sync_plan(
+            self._plan, reg,
+            {"cores": reg.slot_core, "augs": reg.slot_aug},
+        )
         if plan is not self._plan:
             self._plan = plan
             # Make the tenant count and the slot capacity group buckets: the
@@ -187,14 +284,36 @@ class MoLeDeliveryEngine:
             self.queue.ensure_group_bucket(reg.capacity)
         return plan
 
+    def _refresh_lm_plan(self) -> _Plan:
+        reg = self.lm_registry
+        slot_fns = {"perms": reg.slot_perm}
+        if self._embed_tables_needed:
+            slot_fns["aug_embeds"] = reg.slot_aug_embedding
+        if reg.has_embed_lane:
+            slot_fns["embed_cores"] = reg.slot_embed_core
+            slot_fns["aug_projs"] = reg.slot_aug_projection
+        prev = self._lm_plan
+        if prev is not None and set(prev.arrays) != set(slot_fns):
+            prev = None   # lane set changed (first embed request): rebuild
+        plan = _sync_plan(prev, reg, slot_fns)
+        if plan is not self._lm_plan:
+            self._lm_plan = plan
+            for q in (self.token_queue, self.embed_queue):
+                if q is not None:
+                    q.ensure_group_bucket(len(reg))
+                    q.ensure_group_bucket(reg.capacity)
+        return plan
+
     # -- request intake ------------------------------------------------------
     def prepare_rows(self, tenant_id: str, data) -> np.ndarray:
-        """Validate a request payload and unroll it to ``(b, F_in)`` rows.
+        """Validate a vision request payload and unroll it to ``(b, F_in)``.
 
         Pure per-request data prep with no engine-state mutation — the async
         front door runs it outside its lock so payload conversion never
         serializes submitters.
         """
+        if self.registry is None:
+            raise ValueError("engine has no vision registry")
         if tenant_id not in self.registry:
             raise KeyError(f"unknown tenant {tenant_id!r}")
         data = np.asarray(data, np.float32)
@@ -209,13 +328,55 @@ class MoLeDeliveryEngine:
             return data
         raise ValueError(f"expected rank-2 rows or rank-4 images, got {data.shape}")
 
+    def prepare_tokens(self, tenant_id: str, tokens) -> np.ndarray:
+        """Validate an LM token payload to ``(b, L)`` int32 (lock-free prep)."""
+        if self.lm_registry is None:
+            raise ValueError("engine has no LM registry")
+        if tenant_id not in self.lm_registry:
+            raise KeyError(f"unknown LM tenant {tenant_id!r}")
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2 or not np.issubdtype(tokens.dtype, np.integer):
+            raise ValueError(
+                f"expected int tokens of shape (b, L), got {tokens.dtype} "
+                f"{tokens.shape}"
+            )
+        max_seq = self.seq_buckets[-1]
+        if tokens.shape[1] > max_seq:
+            raise ValueError(
+                f"sequence length {tokens.shape[1]} exceeds the largest "
+                f"seq bucket {max_seq}; construct the engine with larger "
+                f"seq_buckets (or split the request)"
+            )
+        v = self.lm_registry.vocab
+        if tokens.size and (tokens.min() < 0 or tokens.max() >= v):
+            raise ValueError(f"token ids out of range [0, {v})")
+        return tokens.astype(np.int32)
+
+    def prepare_features(self, tenant_id: str, data) -> np.ndarray:
+        """Validate a continuous LM payload: (b, L, d_in) or (n, d_in) rows."""
+        if self.embed_queue is None:
+            raise ValueError("engine's LM registry has no continuous lane")
+        if tenant_id not in self.lm_registry:
+            raise KeyError(f"unknown LM tenant {tenant_id!r}")
+        data = np.asarray(data, np.float32)
+        if data.ndim not in (2, 3) or data.shape[-1] != self.lm_registry.d_in:
+            raise ValueError(
+                f"expected (..., {self.lm_registry.d_in}) features with rank "
+                f"2 or 3, got {data.shape}"
+            )
+        return data
+
     def submit(self, tenant_id: str, data) -> int:
-        """Enqueue one tenant request.
+        """Enqueue one vision tenant request.
 
         ``data`` is either images ``(b, alpha, m, m)`` or pre-unrolled rows
         ``(b, F_in)``; returns a request id redeemable after :meth:`flush`.
         """
-        rows = self.prepare_rows(tenant_id, data)
+        return self._enqueue_rows(tenant_id, self.prepare_rows(tenant_id, data))
+
+    def _enqueue_rows(self, tenant_id: str, rows: np.ndarray) -> int:
+        """Queue rows already validated by :meth:`prepare_rows` — the async
+        front door calls this under its lock so validation cost stays outside."""
         rid = self.queue.submit(tenant_id, rows)
         g = self.registry.geom
         self._request_shape[rid] = (rows.shape[0], g.beta, g.n, g.n)
@@ -223,37 +384,112 @@ class MoLeDeliveryEngine:
         self.stats.rows_in += rows.shape[0]
         return rid
 
-    # -- the jitted hot path -------------------------------------------------
-    def _execute(self, x: np.ndarray, gidx: np.ndarray) -> jax.Array:
-        plan = self._refresh_plan()
+    def submit_tokens(
+        self, tenant_id: str, tokens, *, deliver: str = "tokens"
+    ) -> int:
+        """Enqueue one LM tenant request of ``(b, L)`` token sequences.
+
+        ``deliver="tokens"`` redeems the provider-side morphed tokens
+        ``pi(tokens)`` (what crosses the trust boundary to the developer);
+        ``deliver="embed"`` additionally runs the developer-side
+        Aug-Embedding and redeems features ``(b, L, d_model)`` — exactly
+        ``E[tokens]``, the LM analogue of the vision lane's delivered
+        feature maps.
+        """
+        if deliver not in ("tokens", "embed"):
+            raise ValueError(f"deliver must be 'tokens' or 'embed', got {deliver!r}")
+        return self._enqueue_tokens(
+            tenant_id, self.prepare_tokens(tenant_id, tokens), deliver
+        )
+
+    def _enqueue_tokens(self, tenant_id: str, toks: np.ndarray,
+                        deliver: str) -> int:
+        """Queue tokens already validated by :meth:`prepare_tokens` (skips
+        the O(b*L) range scan — the async front door holds its lock here)."""
+        rid = self.token_queue.submit(tenant_id, toks)
+        b, L = toks.shape
+        if deliver == "embed":
+            self._embed_tables_needed = True
+        self._token_deliver[rid] = deliver
+        self._request_shape[rid] = (
+            (b, L) if deliver == "tokens" else (b, L, self.lm_registry.d_model)
+        )
+        self.stats.requests += 1
+        self.stats.rows_in += b
+        return rid
+
+    def submit_features(self, tenant_id: str, data) -> int:
+        """Enqueue one continuous-LM request: per-position features
+        ``(b, L, d_in)`` (or pre-flattened ``(n, d_in)`` rows), delivered as
+        ``x @ W_in`` through the tenant's morph core + fused projection."""
+        return self._enqueue_features(
+            tenant_id, self.prepare_features(tenant_id, data)
+        )
+
+    def _enqueue_features(self, tenant_id: str, data: np.ndarray) -> int:
+        """Queue features already validated by :meth:`prepare_features`."""
+        rows = data.reshape(-1, self.lm_registry.d_in)
+        rid = self.embed_queue.submit(tenant_id, rows)
+        self._request_shape[rid] = (rows.shape[0], self.lm_registry.d_out)
+        self._embed_shape[rid] = data.shape[:-1] + (self.lm_registry.d_out,)
+        self.stats.requests += 1
+        self.stats.rows_in += rows.shape[0]
+        return rid
+
+    # -- the jitted hot paths ------------------------------------------------
+    @staticmethod
+    def _identity_gather(gidx: np.ndarray, capacity: int) -> bool:
         # When every slot is active once, in slot order (the common
         # steady-state pattern), the per-group secret gather is the identity —
-        # skipping it avoids copying the (S, F_in, F_out) stack per
-        # microbatch, which dominates at high tenant counts.  The condition
-        # compares against the *capacity* (shape-stable), never the tenant
-        # count, so the static flag cannot flip — and thus cannot retrace —
-        # on registration churn at a fixed (G, B) bucket.
-        identity = len(gidx) == plan.cores.shape[0] and bool(
+        # skipping it avoids copying the stacked secrets per microbatch,
+        # which dominates at high tenant counts.  The condition compares
+        # against the *capacity* (shape-stable), never the tenant count, so
+        # the static flag cannot flip — and thus cannot retrace — on
+        # registration churn at a fixed (G, B) bucket.
+        return len(gidx) == capacity and bool(
             np.array_equal(gidx, np.arange(len(gidx)))
         )
+
+    def _execute(self, x: np.ndarray, gidx: np.ndarray) -> jax.Array:
+        plan = self._refresh_plan()
+        identity = self._identity_gather(gidx, plan.arrays["cores"].shape[0])
         return _delivery_step(
-            jnp.asarray(x), jnp.asarray(gidx), plan.cores, plan.augs,
+            jnp.asarray(x), jnp.asarray(gidx),
+            plan.arrays["cores"], plan.arrays["augs"],
             self.registry.kappa, self.backend, identity,
         )
 
-    # -- draining ------------------------------------------------------------
-    def flush(self) -> dict[int, np.ndarray]:
-        """Run every pending request through padded microbatches.
+    def _execute_tokens(self, tokens: np.ndarray, gidx: np.ndarray,
+                        want_embed: bool):
+        plan = self._refresh_lm_plan()
+        identity = self._identity_gather(gidx, plan.arrays["perms"].shape[0])
+        return _lm_delivery_step(
+            jnp.asarray(tokens), jnp.asarray(gidx),
+            plan.arrays["perms"],
+            plan.arrays["aug_embeds"] if want_embed else None,
+            self.backend, want_embed, identity,
+        )
 
-        Returns {request_id: features (b, beta, n, n)} for all requests that
-        completed during this flush (results are also retained until redeemed
-        via :meth:`take`).
-        """
-        if not len(self.registry):
-            return {}  # nothing registered yet -> nothing can be pending
-        self._refresh_plan()  # also syncs group buckets to the tenant count
-        self.stats.flushes += 1
-        done: dict[int, np.ndarray] = {}
+    def _execute_features(self, x: np.ndarray, gidx: np.ndarray) -> jax.Array:
+        # The continuous LM lane *is* the vision math (m^2 -> 1): same jitted
+        # step, with the registry's embedding cores / fused projections.
+        plan = self._refresh_lm_plan()
+        identity = self._identity_gather(
+            gidx, plan.arrays["embed_cores"].shape[0]
+        )
+        return _delivery_step(
+            jnp.asarray(x), jnp.asarray(gidx),
+            plan.arrays["embed_cores"], plan.arrays["aug_projs"],
+            self.lm_registry.kappa, self.backend, identity,
+        )
+
+    # -- draining ------------------------------------------------------------
+    def _note_microbatch(self, mb) -> None:
+        self.stats.microbatches += 1
+        self.stats.rows_padded += mb.n_padded_rows
+        self.stats.bucket_shapes.add(mb.x.shape[:2])
+
+    def _drain_vision(self, done: dict[int, np.ndarray]) -> None:
         while True:
             # slot_for activates (and LRU-touches) each tenant on lookup, so
             # evicted tenants transparently regain a slot; max_groups caps a
@@ -265,9 +501,7 @@ class MoLeDeliveryEngine:
             if mb is None:
                 break
             out = np.asarray(self._execute(mb.x, mb.group_tenant))
-            self.stats.microbatches += 1
-            self.stats.rows_padded += mb.n_padded_rows
-            self.stats.bucket_shapes.add(mb.x.shape[:2])
+            self._note_microbatch(mb)
             for s in mb.slices:
                 shape = self._request_shape[s.request_id]
                 buf = self._results.setdefault(
@@ -283,10 +517,98 @@ class MoLeDeliveryEngine:
                     )
                     self._results[s.request_id] = done[s.request_id]
                     self._done.add(s.request_id)
+
+    def _drain_tokens(self, done: dict[int, np.ndarray]) -> None:
+        reg = self.lm_registry
+        while True:
+            mb = self.token_queue.coalesce(reg.slot_for, max_groups=reg.capacity)
+            if mb is None:
+                break
+            # One microbatch may mix "tokens" and "embed" requests; the
+            # Aug-Embedding gather runs only when someone asked for features
+            # (a static flag — at most two traces per bucket, independent of
+            # tenant churn).
+            want_embed = any(
+                self._token_deliver[s.request_id] == "embed" for s in mb.slices
+            )
+            morphed, feats = self._execute_tokens(
+                mb.x, mb.group_tenant, want_embed
+            )
+            morphed = np.asarray(morphed)
+            feats = None if feats is None else np.asarray(feats)
+            self._note_microbatch(mb)
+            seq = mb.x.shape[2]      # this lane's padded sequence bucket
+            for s in mb.slices:
+                rid = s.request_id
+                shape = self._request_shape[rid]   # (b, L) or (b, L, d)
+                embed = self._token_deliver[rid] == "embed"
+                buf = self._results.get(rid)
+                if buf is None:
+                    buf = self._results[rid] = (
+                        np.empty((shape[0], seq, feats.shape[-1]), np.float32)
+                        if embed else np.empty((shape[0], seq), np.int32)
+                    )
+                src = feats if embed else morphed
+                buf[s.req_offset : s.req_offset + s.n_rows] = src[
+                    s.group, s.group_offset : s.group_offset + s.n_rows
+                ]
+                if s.req_offset + s.n_rows == shape[0]:
+                    # Strip the sequence padding back to the true length.
+                    done[rid] = np.ascontiguousarray(buf[:, : shape[1]])
+                    self._results[rid] = done[rid]
+                    self._done.add(rid)
+
+    def _drain_features(self, done: dict[int, np.ndarray]) -> None:
+        reg = self.lm_registry
+        while True:
+            mb = self.embed_queue.coalesce(reg.slot_for, max_groups=reg.capacity)
+            if mb is None:
+                break
+            out = np.asarray(self._execute_features(mb.x, mb.group_tenant))
+            self._note_microbatch(mb)
+            for s in mb.slices:
+                shape = self._request_shape[s.request_id]
+                buf = self._results.setdefault(
+                    s.request_id,
+                    np.empty((shape[0], out.shape[-1]), np.float32),
+                )
+                buf[s.req_offset : s.req_offset + s.n_rows] = out[
+                    s.group, s.group_offset : s.group_offset + s.n_rows
+                ]
+                if s.req_offset + s.n_rows == shape[0]:
+                    done[s.request_id] = buf.reshape(
+                        self._embed_shape[s.request_id]
+                    )
+                    self._results[s.request_id] = done[s.request_id]
+                    self._done.add(s.request_id)
+
+    def flush(self) -> dict[int, np.ndarray]:
+        """Run every pending request (all lanes) through padded microbatches.
+
+        Returns {request_id: result} for all requests that completed during
+        this flush (results are also retained until redeemed via
+        :meth:`take`).  Vision requests resolve to features (b, beta, n, n);
+        token requests to morphed tokens (b, L) or Aug-embedded features
+        (b, L, d_model); continuous requests to projected features.
+        """
+        vision_live = self.registry is not None and len(self.registry) > 0
+        lm_live = self.lm_registry is not None and len(self.lm_registry) > 0
+        if not vision_live and not lm_live:
+            return {}  # nothing registered yet -> nothing can be pending
+        self.stats.flushes += 1
+        done: dict[int, np.ndarray] = {}
+        if vision_live:
+            self._refresh_plan()  # also syncs group buckets to tenant count
+            self._drain_vision(done)
+        if lm_live:
+            self._refresh_lm_plan()
+            self._drain_tokens(done)
+            if self.embed_queue is not None:
+                self._drain_features(done)
         return done
 
     def take(self, request_id: int) -> np.ndarray:
-        """Redeem a completed request's features (pops the result)."""
+        """Redeem a completed request's result (pops it), any lane."""
         if request_id not in self._done:
             if request_id in self._request_shape:
                 n_rows = self._request_shape[request_id][0]
@@ -305,12 +627,26 @@ class MoLeDeliveryEngine:
             )
         out = self._results.pop(request_id)
         self._request_shape.pop(request_id, None)
+        self._token_deliver.pop(request_id, None)
+        self._embed_shape.pop(request_id, None)
         self._done.discard(request_id)
         return out
 
     def deliver(self, tenant_id: str, data) -> np.ndarray:
-        """Convenience: submit one request, flush, return its features."""
+        """Convenience: submit one vision request, flush, return its features."""
         rid = self.submit(tenant_id, data)
+        self.flush()
+        return self.take(rid)
+
+    def deliver_tokens(self, tenant_id: str, tokens, *, deliver: str = "tokens"):
+        """Convenience: submit one token request, flush, return its result."""
+        rid = self.submit_tokens(tenant_id, tokens, deliver=deliver)
+        self.flush()
+        return self.take(rid)
+
+    def deliver_features(self, tenant_id: str, data) -> np.ndarray:
+        """Convenience: submit one continuous request, flush, return features."""
+        rid = self.submit_features(tenant_id, data)
         self.flush()
         return self.take(rid)
 
@@ -318,30 +654,57 @@ class MoLeDeliveryEngine:
         """Drop every queued request and unredeemed result (failure reset).
 
         The async front door calls this after a failed flush: whatever is
-        left in the queue / result buffers belongs to requests whose waiters
+        left in the queues / result buffers belongs to requests whose waiters
         have already been failed, and coalescing it later would only produce
-        results nobody can take().
+        results nobody can take().  The shared id allocator survives, so
+        request ids stay process-unique.
         """
-        from .queue import RequestQueue
+        from .queue import RequestQueue, TokenQueue
 
-        q = self.queue
-        self.queue = RequestQueue(
-            q.feature_dim, max_rows=q.max_rows, row_buckets=q.row_buckets,
-            group_buckets=q.group_buckets, dtype=q.dtype,
-        )
-        self.queue._next_id = q._next_id  # request ids stay process-unique
+        if self.queue is not None:
+            self.queue = RequestQueue(
+                self.queue.feature_dim, max_rows=self.max_rows,
+                row_buckets=self.queue.row_buckets,
+                group_buckets=self.queue.group_buckets,
+                dtype=self.queue.dtype, id_alloc=self._id_alloc,
+            )
+        if self.token_queue is not None:
+            tq = self.token_queue
+            self.token_queue = TokenQueue(
+                max_rows=self.max_rows, row_buckets=tq.row_buckets,
+                group_buckets=tq.group_buckets, seq_buckets=tq.seq_buckets,
+                id_alloc=self._id_alloc,
+            )
+            # Carry the ensured group buckets over: the LM plan is still
+            # current after a reset, so _refresh_lm_plan would not re-ensure
+            # them — losing the tenant-count bucket would shift steady-state
+            # microbatches off the identity-gather fast path and retrace.
+            for g in sorted(tq._ensured_groups):
+                self.token_queue.ensure_group_bucket(g)
+        if self.embed_queue is not None:
+            self.embed_queue = RequestQueue(
+                self.embed_queue.feature_dim, max_rows=self.max_rows,
+                row_buckets=self.embed_queue.row_buckets,
+                group_buckets=self.embed_queue.group_buckets,
+                dtype=self.embed_queue.dtype, id_alloc=self._id_alloc,
+            )
         self._results.clear()
         self._request_shape.clear()
+        self._token_deliver.clear()
+        self._embed_shape.clear()
         self._done.clear()
 
 
 @partial(jax.jit, static_argnames=("kappa", "backend", "identity_gather"))
 def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str,
                    identity_gather: bool = False):
-    """morph + Aug-Conv for one padded microbatch, single compiled graph.
+    """morph + Aug forward for one padded microbatch, single compiled graph.
 
     x: (G, B, F_in); gidx: (G,); cores: (S, q, q); augs: (S, F_in, F_out).
-    The group axis is the natural data-parallel shard axis (delivery_rules).
+    Serves both the vision rows lane (Aug-Conv) and the continuous LM lane
+    (fused input projections) — the same math, per the paper's m^2 -> 1
+    reduction.  The group axis is the natural data-parallel shard axis
+    (delivery_rules).
     """
     _TRACES[
         (x.shape, gidx.shape, cores.shape, kappa, backend, identity_gather)
@@ -357,3 +720,33 @@ def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str,
     morphed = hint(morphed, "dp")
     feats = aug_conv_forward_batched(morphed, augs_g, backend=backend)
     return hint(feats, "dp")
+
+
+@partial(jax.jit, static_argnames=("backend", "want_embed", "identity_gather"))
+def _lm_delivery_step(tokens, gidx, perms, aug_embeds, backend: str,
+                      want_embed: bool, identity_gather: bool = False):
+    """Token morph (+ optional Aug-Embedding) for one padded microbatch.
+
+    tokens: (G, B, L) int32; gidx: (G,); perms: (S, V) int32;
+    aug_embeds: (S, V, d), or None when ``want_embed`` is False (the engine
+    stages the AugE stacks lazily).  Returns (morphed, feats) where feats is
+    None unless ``want_embed`` — the provider-side permutation gather always
+    runs (it is what crosses the trust boundary), the developer-side AugE
+    gather only when a request asked for delivered features.
+    """
+    _TRACES[
+        ("lm", tokens.shape, gidx.shape, perms.shape, backend, want_embed,
+         identity_gather)
+    ] += 1
+    G = tokens.shape[0]
+    tokens = hint(tokens, "dp")
+    perms_g = perms[:G] if identity_gather else perms[gidx]   # (G, V)
+    morphed = token_morph_batched(tokens, perms_g, backend=backend)
+    morphed = hint(morphed, "dp")
+    if not want_embed:
+        return morphed, None
+    embeds_g = (
+        aug_embeds[:G] if identity_gather else aug_embeds[gidx]
+    )                                                         # (G, V, d)
+    feats = aug_embed_batched(morphed, embeds_g, backend=backend)
+    return morphed, hint(feats, "dp")

@@ -15,7 +15,12 @@ are small.  The coalescer packs pending rows into a *padded microbatch*:
     keeps ``gidx == arange`` (the engine's identity-gather fast path) even
     when trailing slots are padding.
 
-The queue is deliberately synchronous and **not thread-safe** (``submit`` /
+LM token traffic coalesces through :class:`TokenQueue`: the same packing,
+but requests are int32 token sequences and microbatches are additionally
+**length-bucketed** — one padded-sequence-length bucket per microbatch, so a
+16-token probe never pads out to a co-tenant's 512-token prompt.
+
+The queues are deliberately synchronous and **not thread-safe** (``submit`` /
 ``coalesce``); the async front door (``repro.runtime.async_engine``)
 serializes access behind its lock and layers deadline-driven flushing and
 admission control on top.
@@ -27,7 +32,13 @@ from typing import Callable, Iterable, Mapping
 
 import numpy as np
 
-__all__ = ["DeliveryRequest", "GroupSlice", "Microbatch", "RequestQueue"]
+__all__ = [
+    "DeliveryRequest",
+    "GroupSlice",
+    "Microbatch",
+    "RequestQueue",
+    "TokenQueue",
+]
 
 
 def bucketize(n: int, buckets: Iterable[int]) -> int:
@@ -86,6 +97,7 @@ class RequestQueue:
         row_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
         group_buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
         dtype=np.float32,
+        id_alloc: Callable[[], int] | None = None,
     ):
         assert max_rows in row_buckets, (max_rows, row_buckets)
         self.feature_dim = feature_dim
@@ -93,6 +105,10 @@ class RequestQueue:
         self.row_buckets = tuple(sorted(row_buckets))
         self.group_buckets = tuple(sorted(group_buckets))
         self.dtype = np.dtype(dtype)
+        # The engine passes one shared allocator to all of its lanes so a
+        # request id is unique engine-wide (take() is lane-agnostic); a
+        # stand-alone queue falls back to its own counter.
+        self._id_alloc = id_alloc
         self._pending: list[DeliveryRequest] = []
         self._next_id = 0
 
@@ -102,6 +118,11 @@ class RequestQueue:
     @property
     def pending_rows(self) -> int:
         return sum(r.rows.shape[0] - r.delivered for r in self._pending)
+
+    @property
+    def oldest_pending_id(self) -> int | None:
+        """Request id of the oldest pending request (None when empty)."""
+        return self._pending[0].request_id if self._pending else None
 
     def pending_rows_by_tenant(self) -> dict[str, int]:
         """Unscheduled row counts keyed by tenant (observability/debugging)."""
@@ -126,8 +147,11 @@ class RequestQueue:
             raise ValueError(
                 f"expected rows of shape (b, {self.feature_dim}), got {rows.shape}"
             )
-        rid = self._next_id
-        self._next_id += 1
+        if self._id_alloc is not None:
+            rid = self._id_alloc()
+        else:
+            rid = self._next_id
+            self._next_id += 1
         self._pending.append(DeliveryRequest(rid, tenant_id, rows))
         return rid
 
@@ -213,3 +237,102 @@ class RequestQueue:
             x=x, group_tenant=gidx, slices=slices,
             n_real_groups=len(chunks), n_real_rows=n_real_rows,
         )
+
+
+class TokenQueue:
+    """Length-bucketed delivery queue for LM token requests.
+
+    A token request is a ``(b, L)`` int32 batch of sequences; ``L`` is padded
+    up to the smallest ``seq_buckets`` entry at submission (pad id 0 — the
+    padded positions are sliced away on reassembly, so the id only has to be
+    a valid gather index).  Internally one :class:`RequestQueue` runs per
+    sequence bucket (rows of width ``L_bucket``), so every microbatch is
+    ``(G, B, L_bucket)`` with the exact same tenant-grouping, row/group
+    bucketing, and padding-group-carries-its-own-index behavior as the
+    vision rows lane; ``coalesce`` serves the bucket holding the oldest
+    pending request, which keeps cross-bucket traffic FIFO-fair.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_rows: int = 64,
+        row_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64),
+        group_buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
+        seq_buckets: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512),
+        id_alloc: Callable[[], int] | None = None,
+    ):
+        self.max_rows = max_rows
+        self.row_buckets = tuple(sorted(row_buckets))
+        self.group_buckets = tuple(sorted(group_buckets))
+        self.seq_buckets = tuple(sorted(seq_buckets))
+        if id_alloc is None:
+            # All per-bucket queues must share one id space (rids order the
+            # cross-bucket FIFO and key the engine's result table).
+            import itertools
+
+            counter = itertools.count()
+            id_alloc = lambda: next(counter)
+        self._id_alloc = id_alloc
+        self._queues: dict[int, RequestQueue] = {}   # seq bucket -> lane
+        self._ensured_groups: set[int] = set()
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(q.pending_rows for q in self._queues.values())
+
+    def pending_rows_by_tenant(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for q in self._queues.values():
+            for t, n in q.pending_rows_by_tenant().items():
+                out[t] = out.get(t, 0) + n
+        return out
+
+    def ensure_group_bucket(self, n: int) -> None:
+        self._ensured_groups.add(n)
+        for q in self._queues.values():
+            q.ensure_group_bucket(n)
+
+    def seq_bucket_for(self, seq_len: int) -> int:
+        """Padded sequence length a request of ``seq_len`` coalesces at."""
+        return bucketize(seq_len, self.seq_buckets)
+
+    def submit(self, tenant_id: str, tokens: np.ndarray) -> int:
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2:
+            raise ValueError(f"expected tokens (b, L), got {tokens.shape}")
+        b, L = tokens.shape
+        Lb = self.seq_bucket_for(L)
+        lane = self._queues.get(Lb)
+        if lane is None:
+            lane = RequestQueue(
+                Lb, max_rows=self.max_rows, row_buckets=self.row_buckets,
+                group_buckets=self.group_buckets, dtype=np.int32,
+                id_alloc=self._id_alloc,
+            )
+            for g in sorted(self._ensured_groups):
+                lane.ensure_group_bucket(g)
+            self._queues[Lb] = lane
+        padded = np.zeros((b, Lb), np.int32)
+        padded[:, :L] = tokens
+        return lane.submit(tenant_id, padded)
+
+    def coalesce(
+        self,
+        tenant_index: Mapping[str, int] | Callable[[str], int],
+        max_groups: int | None = None,
+    ) -> Microbatch | None:
+        """One padded ``(G, B, L_bucket)`` microbatch from the seq bucket
+        whose head-of-line request is oldest; None when nothing is pending."""
+        live = [
+            (q.oldest_pending_id, q)
+            for q in self._queues.values()
+            if q.oldest_pending_id is not None
+        ]
+        if not live:
+            return None
+        _, lane = min(live, key=lambda kv: kv[0])
+        return lane.coalesce(tenant_index, max_groups)

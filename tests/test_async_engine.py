@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ConvGeometry, SessionRegistry
+from repro.core import ConvGeometry, LMSessionRegistry, SessionRegistry
 from repro.runtime import AdmissionError, AsyncDeliveryEngine, MoLeDeliveryEngine
 
 GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
@@ -80,6 +80,82 @@ def test_async_matches_sync_under_concurrent_load(rng):
 
     assert front.pending() == 0
     assert front.stats.requests >= n_threads * per_thread
+
+
+def test_mixed_fleet_vision_and_lm_concurrent(rng):
+    """Threads submit vision *and* LM requests to one AsyncDeliveryEngine:
+    no lost/duplicated request ids across lanes, and every result bit-matches
+    its kind's sync per-session path."""
+    vision_tenants, lm_tenants = 2, 2
+    vreg = _registry(rng, tenants=vision_tenants)
+    lreg = LMSessionRegistry(211, 8, capacity=lm_tenants)
+    for i in range(lm_tenants):
+        lreg.register(
+            f"lm{i}", rng.standard_normal((211, 8)).astype(np.float32),
+            seed=50 + i,
+        )
+    engine = MoLeDeliveryEngine(vreg, lm_registry=lreg)
+
+    images = {
+        t: rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        for t in vreg.tenant_ids
+    }
+    tokens = {t: rng.integers(0, 211, (2, 9)) for t in lreg.tenant_ids}
+    want_img = {
+        t: np.asarray(vreg.session(t).deliver(jnp.asarray(d)))
+        for t, d in images.items()
+    }
+    want_tok = {
+        t: np.asarray(lreg.session(t).morph_tokens(jnp.asarray(d)))
+        for t, d in tokens.items()
+    }
+
+    n_threads, per_thread = 6, 6
+    futures: list[list] = [[] for _ in range(n_threads)]
+    errors: list[BaseException] = []
+
+    with AsyncDeliveryEngine(engine, max_delay_ms=5.0) as front:
+        def worker(wid: int) -> None:
+            try:
+                for j in range(per_thread):
+                    if (wid + j) % 2:
+                        t = f"lm{(wid + j) % lm_tenants}"
+                        futures[wid].append(
+                            ("lm", t, front.submit_tokens(t, tokens[t]))
+                        )
+                    else:
+                        t = f"t{(wid + j) % vision_tenants}"
+                        futures[wid].append(
+                            ("img", t, front.submit(t, images[t]))
+                        )
+            except BaseException as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(i,)) for i in range(n_threads)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors
+
+        flat = [kf for per in futures for kf in per]
+        assert len(flat) == n_threads * per_thread
+        # one id space across lanes: none lost, none duplicated
+        rids = [f.request_id for _, _, f in flat]
+        assert len(set(rids)) == len(rids)
+
+        for kind, t, f in flat:
+            got = f.result(timeout=60)
+            if kind == "img":
+                np.testing.assert_allclose(got, want_img[t], atol=1e-5)
+            else:
+                np.testing.assert_array_equal(got, want_tok[t])
+
+    assert front.pending() == 0
 
 
 def test_deadline_flusher_meets_max_delay(rng):

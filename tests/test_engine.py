@@ -243,6 +243,40 @@ def test_eviction_churn_traces_at_most_once_per_bucket(rng):
     assert delivery_trace_count() == n0  # same bucket throughout: zero traces
 
 
+def test_non_identity_gather_matches_and_does_not_retrace(rng):
+    """The general gather path (T < capacity, out-of-order slots) — the
+    ROADMAP's 0.8x-vs-4.9x hazard — must be exactly equivalent to the
+    per-request path AND stay retrace-free under churn at a fixed bucket."""
+    reg = _registry(rng, tenants=3, capacity=8)   # T < capacity: no fast path
+    eng = MoLeDeliveryEngine(reg)
+    datas = {
+        t: rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        for t in reg.tenant_ids
+    }
+    tenants = reg.tenant_ids                      # pinned: churn adds t3 later
+
+    def roundtrip():
+        # Reverse registration order -> gidx != arange(G): the general path.
+        rids = {t: eng.submit(t, datas[t]) for t in reversed(tenants)}
+        eng.flush()
+        for t, rid in rids.items():
+            want = np.asarray(reg.session(t).deliver(jnp.asarray(datas[t])))
+            np.testing.assert_allclose(eng.take(rid), want, atol=1e-5)
+
+    roundtrip()                                   # compiles the bucket
+    n0 = delivery_trace_count()
+    roundtrip()                                   # warm: zero new traces
+    assert delivery_trace_count() == n0
+    k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
+        np.float32
+    )
+    reg.register("t3", k)                         # churn into a free slot
+    roundtrip()                                   # same bucket, same path
+    assert delivery_trace_count() == n0
+
+
 def test_capacity_growth_rebuilds_plan(rng):
     """Auto-capacity growth is the one churn event allowed to rebuild (and
     so retrace): shapes change, but only O(log T) times."""

@@ -1,0 +1,388 @@
+"""LM lanes of the unified delivery engine (repro.runtime.engine): token
+morphing + Aug-Embedding through the same registry/queue/flush plane as
+vision tenants, with zero-retrace churn, and the engine-backed
+``serve.py --mode lm`` path matching the single-TokenMorpher baseline."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LMSessionRegistry
+from repro.launch import serve as serve_mod
+from repro.runtime import (
+    AsyncDeliveryEngine,
+    MoLeDeliveryEngine,
+    delivery_trace_count,
+)
+
+VOCAB, DMODEL = 131, 8
+
+
+def _lm_registry(rng, tenants=3, capacity=None, d_in=None, d_out=None, kappa=1):
+    reg = LMSessionRegistry(
+        VOCAB, DMODEL, d_in=d_in, d_out=d_out, kappa=kappa, capacity=capacity
+    )
+    for i in range(tenants):
+        E = rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+        W = (
+            rng.standard_normal((d_in, d_out)).astype(np.float32)
+            if d_in is not None else None
+        )
+        reg.register(f"t{i}", E, W, seed=100 + i)
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# token lane: multi-tenant equivalence to the per-session path
+# ---------------------------------------------------------------------------
+
+def test_token_lane_matches_per_session_morph(rng):
+    reg = _lm_registry(rng, tenants=3)
+    eng = MoLeDeliveryEngine(lm_registry=reg, max_rows=4,
+                             row_buckets=(1, 2, 4), group_buckets=(1, 2, 4),
+                             seq_buckets=(8, 16))
+    reqs = []
+    for i in range(9):  # ragged batch sizes -> row padding in microbatches
+        t = f"t{i % 3}"
+        toks = rng.integers(0, VOCAB, (1 + i % 3, 5 + i % 4))
+        reqs.append((eng.submit_tokens(t, toks), t, toks))
+    done = eng.flush()
+    assert sorted(done) == sorted(r for r, _, _ in reqs)
+    for rid, t, toks in reqs:
+        want = np.asarray(reg.session(t).morph_tokens(jnp.asarray(toks)))
+        got = eng.take(rid)
+        assert got.shape == toks.shape and got.dtype == np.int32
+        np.testing.assert_array_equal(got, want)
+
+
+def test_token_embed_deliver_bit_matches_plain_forward(rng):
+    """morph -> deliver -> the developer's AugE gather == E[tokens] exactly
+    (the LM analogue of paper eq. 5, bit-exact because gathers move bits)."""
+    reg = _lm_registry(rng, tenants=2)
+    eng = MoLeDeliveryEngine(lm_registry=reg)
+    embeds = {
+        t: np.asarray(reg.session(t).aug_embedding)[reg.session(t).morpher.perm]
+        for t in reg.tenant_ids
+    }  # AugE[pi(v)] == E[v]: recover each tenant's plain table for the oracle
+    for t in reg.tenant_ids:
+        toks = rng.integers(0, VOCAB, (3, 7))
+        feats = eng.deliver_tokens(t, toks, deliver="embed")
+        assert feats.shape == (3, 7, DMODEL)
+        np.testing.assert_array_equal(feats, embeds[t][toks])
+
+
+def test_mixed_deliver_modes_share_one_flush(rng):
+    reg = _lm_registry(rng, tenants=2)
+    eng = MoLeDeliveryEngine(lm_registry=reg)
+    toks = rng.integers(0, VOCAB, (2, 6))
+    r_tok = eng.submit_tokens("t0", toks)
+    r_emb = eng.submit_tokens("t1", toks, deliver="embed")
+    done = eng.flush()
+    assert set(done) == {r_tok, r_emb}
+    assert eng.take(r_tok).shape == (2, 6)
+    assert eng.take(r_emb).shape == (2, 6, DMODEL)
+
+
+def test_token_requests_are_length_bucketed(rng):
+    """A short probe and a long prompt never share a microbatch: each seq
+    bucket coalesces separately, so the probe pads to its own bucket."""
+    reg = _lm_registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8, 64))
+    short = rng.integers(0, VOCAB, (2, 5))     # -> bucket 8
+    long = rng.integers(0, VOCAB, (2, 33))     # -> bucket 64
+    r0 = eng.submit_tokens("t0", short)
+    r1 = eng.submit_tokens("t0", long)
+    n0 = eng.stats.microbatches
+    eng.flush()
+    assert eng.stats.microbatches - n0 == 2
+    shapes = {s for s in eng.stats.bucket_shapes}
+    assert shapes  # (G, B) buckets recorded for both lanes
+    np.testing.assert_array_equal(
+        eng.take(r0), np.asarray(reg.session("t0").morph_tokens(jnp.asarray(short)))
+    )
+    np.testing.assert_array_equal(
+        eng.take(r1), np.asarray(reg.session("t0").morph_tokens(jnp.asarray(long)))
+    )
+
+
+def test_large_token_request_spans_microbatches(rng):
+    reg = _lm_registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(lm_registry=reg, max_rows=4,
+                             row_buckets=(1, 2, 4), group_buckets=(1, 2),
+                             seq_buckets=(8,))
+    toks = rng.integers(0, VOCAB, (11, 8))
+    got = eng.deliver_tokens("t0", toks)
+    np.testing.assert_array_equal(
+        got, np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks)))
+    )
+    assert eng.stats.microbatches >= 2  # 11 sequences / (2 groups x 4 rows)
+
+
+# ---------------------------------------------------------------------------
+# continuous (embedding-MoLe) lane: same scheme as Aug-Conv, same jitted step
+# ---------------------------------------------------------------------------
+
+def test_continuous_lane_matches_per_session(rng):
+    reg = _lm_registry(rng, tenants=3, d_in=12, d_out=8, kappa=4)
+    eng = MoLeDeliveryEngine(lm_registry=reg)
+    for t in reg.tenant_ids:
+        x = rng.standard_normal((2, 5, 12)).astype(np.float32)
+        got = eng.deliver_features(t, x)
+        want = np.asarray(reg.session(t).deliver_features(jnp.asarray(x)))
+        assert got.shape == (2, 5, 8)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+    # pre-flattened rows work too and reshape back to rank 2
+    rows = rng.standard_normal((6, 12)).astype(np.float32)
+    got = eng.deliver_features("t0", rows)
+    want = np.asarray(reg.session("t0").deliver_features(jnp.asarray(rows)))
+    assert got.shape == (6, 8)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_continuous_lane_equals_plain_projection(rng):
+    """morph(x) @ AugProj == x @ W_in — the continuous unfuse property."""
+    rng2 = np.random.default_rng(7)
+    reg = LMSessionRegistry(VOCAB, DMODEL, d_in=16, d_out=8, kappa=2)
+    E = rng2.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+    W = rng2.standard_normal((16, 8)).astype(np.float32)
+    reg.register("t0", E, W, seed=5)
+    eng = MoLeDeliveryEngine(lm_registry=reg)
+    x = rng2.standard_normal((4, 16)).astype(np.float32)
+    np.testing.assert_allclose(eng.deliver_features("t0", x), x @ W, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# churn: LM registration/eviction never retraces the jitted steps
+# ---------------------------------------------------------------------------
+
+def test_lm_registration_churn_does_not_retrace(rng):
+    """The acceptance property: registering/evicting LM tenants at a fixed
+    (bucket, backend) shape adds zero traces of the jitted delivery steps."""
+    reg = _lm_registry(rng, tenants=1, capacity=4)
+    eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
+    toks = rng.integers(0, VOCAB, (3, 8))
+    eng.deliver_tokens("t0", toks)          # compiles the (G=1, B=4) bucket
+    n0 = delivery_trace_count()
+    eng.deliver_tokens("t0", toks)          # warm bucket: cache hit
+    assert delivery_trace_count() == n0
+    E = rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+    reg.register("late", E)                 # free slot: in-place plan patch
+    got = eng.deliver_tokens("late", toks)
+    np.testing.assert_array_equal(
+        got, np.asarray(reg.session("late").morph_tokens(jnp.asarray(toks)))
+    )
+    assert delivery_trace_count() == n0
+
+
+def test_lm_eviction_churn_traces_at_most_once_per_bucket(rng):
+    reg = _lm_registry(rng, tenants=4, capacity=4)
+    eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
+    toks = rng.integers(0, VOCAB, (3, 8))
+    eng.deliver_tokens("t0", toks)
+    n0 = delivery_trace_count()
+    for i in range(4, 10):                  # every registration now evicts
+        reg.register(
+            f"t{i}", rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+        )
+        got = eng.deliver_tokens(f"t{i}", toks)
+        want = np.asarray(reg.session(f"t{i}").morph_tokens(jnp.asarray(toks)))
+        np.testing.assert_array_equal(got, want)
+    eng.deliver_tokens("t0", toks)          # re-activate an evicted tenant
+    assert reg.evictions >= 6
+    assert delivery_trace_count() == n0     # same bucket throughout
+
+
+def test_lm_non_identity_gather_matches_and_stays_flat(rng):
+    """T < capacity with out-of-order slot traffic: the gather path (not the
+    identity fast path) must still be exact and must not retrace on churn."""
+    reg = _lm_registry(rng, tenants=3, capacity=8)
+    eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
+    tenants = reg.tenant_ids                # pinned: churn adds t3 later
+    toks = {t: rng.integers(0, VOCAB, (2, 8)) for t in tenants}
+
+    def roundtrip():
+        # Reverse registration order -> gidx != arange: the general path.
+        rids = {t: eng.submit_tokens(t, toks[t]) for t in reversed(tenants)}
+        eng.flush()
+        for t, rid in rids.items():
+            np.testing.assert_array_equal(
+                eng.take(rid),
+                np.asarray(reg.session(t).morph_tokens(jnp.asarray(toks[t]))),
+            )
+
+    roundtrip()                             # compiles the bucket
+    n0 = delivery_trace_count()
+    roundtrip()                             # warm: zero new traces
+    reg.register(
+        "t3", rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+    )                                       # churn into a free slot
+    roundtrip()
+    assert delivery_trace_count() == n0
+
+
+def test_aug_embedding_stacks_stage_lazily(rng):
+    """Pure token-morph traffic never uploads the (S, V, d) AugE stacks —
+    they are by far the largest secrets and serve.py never needs them; the
+    first deliver="embed" request stages them, exactly."""
+    reg = _lm_registry(rng, tenants=2)
+    eng = MoLeDeliveryEngine(lm_registry=reg)
+    toks = rng.integers(0, VOCAB, (2, 6))
+    eng.deliver_tokens("t0", toks)
+    assert "aug_embeds" not in eng._lm_plan.arrays
+    feats = eng.deliver_tokens("t1", toks, deliver="embed")
+    assert "aug_embeds" in eng._lm_plan.arrays
+    want = np.asarray(reg.session("t1").aug_embedding)[
+        reg.session("t1").morpher.perm
+    ][toks]
+    np.testing.assert_array_equal(feats, want)
+    # and the token-only path still serves exactly after the lane appeared
+    np.testing.assert_array_equal(
+        eng.deliver_tokens("t0", toks),
+        np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks))),
+    )
+
+
+def test_reset_pending_keeps_token_lane_fast_path(rng):
+    """reset_pending must not drop the ensured group buckets: steady-state
+    microbatches would shift off the identity-gather fast path and retrace."""
+    tenants = 3
+    reg = _lm_registry(rng, tenants=tenants, capacity=tenants)
+    eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
+    toks = {t: rng.integers(0, VOCAB, (2, 8)) for t in reg.tenant_ids}
+
+    def roundtrip():
+        rids = {t: eng.submit_tokens(t, toks[t]) for t in reg.tenant_ids}
+        eng.flush()
+        for t, rid in rids.items():
+            np.testing.assert_array_equal(
+                eng.take(rid),
+                np.asarray(reg.session(t).morph_tokens(jnp.asarray(toks[t]))),
+            )
+
+    roundtrip()                     # compiles the (G=tenants, B) bucket
+    n0 = delivery_trace_count()
+    eng.reset_pending()
+    roundtrip()                     # same bucket, same fast path: no retrace
+    assert delivery_trace_count() == n0
+
+
+# ---------------------------------------------------------------------------
+# intake validation + engine construction
+# ---------------------------------------------------------------------------
+
+def test_engine_accepts_lm_registry_positionally(rng):
+    reg = _lm_registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(reg)
+    assert eng.lm_registry is reg and eng.registry is None
+    toks = rng.integers(0, VOCAB, (1, 4))
+    np.testing.assert_array_equal(
+        eng.deliver_tokens("t0", toks),
+        np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks))),
+    )
+    with pytest.raises(ValueError, match="two LM registries"):
+        MoLeDeliveryEngine(reg, lm_registry=reg)
+    with pytest.raises(ValueError, match="registry"):
+        MoLeDeliveryEngine()
+
+
+def test_token_intake_validation(rng):
+    reg = _lm_registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(lm_registry=reg)
+    with pytest.raises(KeyError):
+        eng.submit_tokens("nobody", np.zeros((1, 4), np.int32))
+    with pytest.raises(ValueError, match="out of range"):
+        eng.submit_tokens("t0", np.full((1, 4), VOCAB, np.int64))
+    with pytest.raises(ValueError, match="int tokens"):
+        eng.submit_tokens("t0", np.zeros((1, 4), np.float32))
+    with pytest.raises(ValueError, match="deliver"):
+        eng.submit_tokens("t0", np.zeros((1, 4), np.int32), deliver="logits")
+    with pytest.raises(ValueError, match="no vision registry"):
+        eng.submit("t0", np.zeros((1, 3, 4, 4), np.float32))
+    with pytest.raises(ValueError, match="no continuous lane"):
+        eng.submit_features("t0", np.zeros((2, 4), np.float32))
+
+
+def test_registry_construction_validation(rng):
+    with pytest.raises(ValueError, match="together"):
+        LMSessionRegistry(VOCAB, DMODEL, d_in=8)
+    with pytest.raises(ValueError, match="divide"):
+        LMSessionRegistry(VOCAB, DMODEL, d_in=9, d_out=4, kappa=2)
+    reg = LMSessionRegistry(VOCAB, DMODEL)
+    E = rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+    with pytest.raises(ValueError, match="no continuous lane"):
+        reg.register("t0", E, w_in=np.zeros((8, 4), np.float32))
+    with pytest.raises(ValueError, match="expected embedding"):
+        reg.register("t0", E[:, :4])
+    reg.register("t0", E)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("t0", E)
+
+
+def test_async_front_door_serves_lm_lanes(rng):
+    reg = _lm_registry(rng, tenants=2, d_in=12, d_out=8, kappa=4)
+    with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
+        toks = rng.integers(0, VOCAB, (2, 6))
+        x = rng.standard_normal((1, 3, 12)).astype(np.float32)
+        f_tok = front.submit_tokens("t0", toks)
+        f_emb = front.submit_tokens("t1", toks, deliver="embed")
+        f_feat = front.submit_features("t0", x)
+        np.testing.assert_array_equal(
+            f_tok.result(timeout=60),
+            np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks))),
+        )
+        assert f_emb.result(timeout=60).shape == (2, 6, DMODEL)
+        np.testing.assert_allclose(
+            f_feat.result(timeout=60),
+            np.asarray(reg.session("t0").deliver_features(jnp.asarray(x))),
+            atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# serve.py --mode lm through the engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deepseek_7b"])
+def test_serve_lm_engine_matches_plain_serving(arch):
+    """Engine-served MoLe generations (prefill + decode on Aug-fused params
+    over engine-morphed prompts, unmorphed) bit-match serving the same
+    prompts with MoLe off — the end-to-end exact-equivalence property."""
+    common = ["--mode", "lm", "--arch", arch, "--smoke", "--requests", "4",
+              "--prompt-len", "16", "--gen", "4"]
+    plain = serve_mod.main(common + ["--mole", "off"])
+    mole = serve_mod.main(common + ["--mole", "token", "--tenants", "1"])
+    np.testing.assert_array_equal(mole, plain)
+    # multi-tenant: every tenant's lane preserves the same equivalence
+    multi = serve_mod.main(common + ["--mole", "token", "--tenants", "2"])
+    np.testing.assert_array_equal(multi, plain)
+
+
+def test_serve_lm_async_matches_sync():
+    """--async now *works* under --mode lm (it used to be silently ignored)
+    and produces identical generations to the sync flush path."""
+    common = ["--mode", "lm", "--arch", "deepseek_7b", "--smoke",
+              "--requests", "4", "--prompt-len", "16", "--gen", "4",
+              "--tenants", "2", "--mole", "token"]
+    sync = serve_mod.main(common)
+    async_ = serve_mod.main(common + ["--async", "--max-delay-ms", "5",
+                                      "--admission", "reject"])
+    np.testing.assert_array_equal(async_, sync)
+
+
+def test_serve_rejects_cross_mode_flags():
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "delivery", "--gen", "4"])
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "delivery", "--arch", "deepseek_7b"])
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "lm", "--arch", "deepseek_7b", "--batch", "2"])
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "lm", "--arch", "deepseek_7b", "--kappa", "2"])
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "lm"])  # --arch still required
+    # engine/front-door flags require the engine, which --mole off disables
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "lm", "--arch", "deepseek_7b",
+                        "--mole", "off", "--async"])
+    with pytest.raises(SystemExit):
+        serve_mod.main(["--mode", "lm", "--arch", "deepseek_7b",
+                        "--mole", "off", "--tenants", "2"])

@@ -4,7 +4,10 @@
     convolution (paper eq. 5) under the session's channel permutation, for
     random shapes and both CPU-capable kernel backends;
   * engine equivalence — the batched multi-tenant engine path equals
-    per-request ``MoLeSession.deliver`` for random traffic patterns.
+    per-request ``MoLeSession.deliver`` for random traffic patterns;
+  * LM delivery — for random vocab/seq/seed, engine-morphed tokens round-trip
+    (morph -> deliver -> unfuse bit-matches the plain embedding forward, and
+    unmorph recovers the originals), mirroring the vision coverage.
 
 Runs as hypothesis sweeps when hypothesis is installed (the nightly lane);
 the parametrized cases below keep a deterministic slice of the same
@@ -14,7 +17,13 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import ConvGeometry, MoLeSession, SessionRegistry, conv_reference
+from repro.core import (
+    ConvGeometry,
+    LMSessionRegistry,
+    MoLeSession,
+    SessionRegistry,
+    conv_reference,
+)
 from repro.runtime import MoLeDeliveryEngine
 
 BACKENDS = ("jnp", "interpret")
@@ -64,6 +73,44 @@ def _check_engine_matches_per_request(
         np.testing.assert_allclose(eng.take(rid), want, atol=1e-5)
 
 
+def _check_lm_roundtrip(vocab, tenants, seq_lens, seed, backend, capacity=None):
+    """Engine LM lane: morph -> deliver -> unfuse bit-matches plain forward.
+
+    For every request: (a) the engine's morphed tokens equal the tenant's
+    secret permutation applied per element, (b) unmorphing recovers the
+    original tokens exactly, and (c) the engine-delivered Aug-embedded
+    features bit-match the plain embedding forward ``E[tokens]`` (gathers
+    move bits, so equality is exact, not approximate).
+    """
+    d_model = 8
+    g = np.random.default_rng(seed)
+    reg = LMSessionRegistry(vocab, d_model, capacity=capacity)
+    tables = {}
+    for i in range(tenants):
+        E = g.standard_normal((vocab, d_model)).astype(np.float32)
+        reg.register(f"t{i}", E, seed=seed + i)
+        tables[f"t{i}"] = E
+    eng = MoLeDeliveryEngine(lm_registry=reg, backend=backend)
+    reqs = []
+    for i, L in enumerate(seq_lens):
+        t = f"t{i % tenants}"
+        toks = g.integers(0, vocab, (1 + i % 3, L))
+        reqs.append((
+            eng.submit_tokens(t, toks),
+            eng.submit_tokens(t, toks, deliver="embed"),
+            t, toks,
+        ))
+    eng.flush()
+    for rid_tok, rid_emb, t, toks in reqs:
+        sess = reg.session(t)
+        morphed = eng.take(rid_tok)
+        np.testing.assert_array_equal(morphed, sess.morpher.perm[toks])
+        np.testing.assert_array_equal(
+            np.asarray(sess.unmorph_tokens(jnp.asarray(morphed))), toks
+        )
+        np.testing.assert_array_equal(eng.take(rid_emb), tables[t][toks])
+
+
 # ---------------------------------------------------------------------------
 # hypothesis sweeps (nightly lane; skip cleanly without hypothesis)
 # ---------------------------------------------------------------------------
@@ -92,6 +139,17 @@ def test_engine_property(tenants, kappa, batches, seed, backend, capacity):
     _check_engine_matches_per_request(
         tenants, kappa, batches, seed, backend, capacity=capacity
     )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    vocab=st.integers(2, 400), tenants=st.integers(1, 4),
+    seq_lens=st.lists(st.integers(1, 40), min_size=1, max_size=6),
+    seed=st.integers(0, 2**31 - 1), backend=st.sampled_from(BACKENDS),
+    capacity=st.sampled_from([None, 2]),
+)
+def test_lm_roundtrip_property(vocab, tenants, seq_lens, seed, backend, capacity):
+    _check_lm_roundtrip(vocab, tenants, seq_lens, seed, backend, capacity)
 
 
 # ---------------------------------------------------------------------------
@@ -124,4 +182,22 @@ def test_engine_cases_with_eviction(backend):
     traffic forces LRU eviction + re-activation mid-stream."""
     _check_engine_matches_per_request(
         5, 2, (2, 3, 1, 4, 2, 1, 3), 13, backend, capacity=2
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("vocab,tenants,seq_lens", [
+    (2, 1, (1,)),                       # degenerate: binary vocab, 1 token
+    (97, 3, (5, 17, 9, 33)),            # mixed seq buckets, 3 tenants
+    (350, 4, (40, 40, 12, 7, 21, 3)),   # more tenants than some buckets
+])
+def test_lm_roundtrip_cases(backend, vocab, tenants, seq_lens):
+    _check_lm_roundtrip(vocab, tenants, seq_lens, seed=11, backend=backend)
+
+
+def test_lm_roundtrip_case_with_eviction():
+    """LM traffic through a capacity-2 registry with 4 tenants: LRU eviction
+    + re-activation mid-stream keeps the same exactness."""
+    _check_lm_roundtrip(
+        123, 4, (6, 14, 9, 30, 5, 8), seed=17, backend="jnp", capacity=2
     )
