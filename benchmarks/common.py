@@ -1,10 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission + SSIM."""
+"""Shared benchmark utilities: timing + CSV/JSON emission + SSIM."""
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import jax
 import numpy as np
+
+# Every emit() lands here too, so benchmark mains can dump a machine-readable
+# trajectory point (--json) next to the human CSV on stdout.
+RESULTS: list[dict] = []
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -21,6 +27,26 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS.append(
+        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+    )
+
+
+def write_json(path: str) -> None:
+    """Dump every result emitted so far as one machine-readable trajectory
+    point (committed as BENCH_*.json so perf history lives in git)."""
+    doc = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "machine": platform.machine(),
+            "python": platform.python_version(),
+        },
+        "results": RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
 
 
 def ssim(a: np.ndarray, b: np.ndarray, window: int = 8) -> float:

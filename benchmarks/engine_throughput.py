@@ -20,23 +20,42 @@ all tenants' prompts into length-bucketed token microbatches and morphing
 them as one batched multi-tenant gather.  Results are integers, so the
 equivalence check is exact.
 
+A fourth sweep measures the **gather cost** the slot-indexed grouped kernels
+exist to kill: the same 16-tenant traffic served (a) with capacity == T in
+slot order (the old identity-gather fast path), (b) with out-of-order
+submission over the same table (the old 0.8x-vs-4.9x hazard — now slot-
+sorted back to the identical microbatch, asserted within 1.25x of (a) and
+bit-identical), and (c) with T < capacity (a genuinely sparse slot subset —
+in-place tile reads on Pallas, a ~2x scan on the jnp CPU reference, gated
+far below the old 6-16x gather-copy cliff), plus engine-vs-per-request
+agreement.
+
 CSV rows:
   engine/b{B}_k{kappa}_t{T}/per_request,<us>,<images/s>
   engine/b{B}_k{kappa}_t{T}/engine,<us>,<images/s> speedup=<x>
+  engine_gather/b{B}_t{T}/identity,<us>,<images/s>
+  engine_gather/b{B}_t{T}/partial_table,<us>,<images/s> vs_identity=<x>
+  engine_gather/b{B}_t{T}/out_of_order,<us>,<images/s> vs_identity=<x>
   engine_latency/n{N}/sync_flush,<p95 us>,p50=<ms> p95=<ms>
   engine_latency/n{N}/async_deadline,<p95 us>,p50=<ms> p95=<ms> SLO=<ms>
   engine_lm/b{B}_s{L}_t{T}/per_request,<us>,<prompts/s>
   engine_lm/b{B}_s{L}_t{T}/engine,<us>,<prompts/s> speedup=<x>
+
+``--json PATH`` additionally writes every row to a machine-readable file
+(the committed ``BENCH_delivery.json`` trajectory point); ``--smoke`` runs a
+tiny-shape subset as the CI per-PR job, keeping the non-identity gather path
+exercised on every change.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit
+from .common import emit, write_json
 
 GEOM = dict(alpha=3, beta=16, m=16, p=3)   # CIFAR-ish first conv layer
 
@@ -47,8 +66,8 @@ def _build(tenants: int, kappa: int, seed: int = 0):
 
     rng = np.random.default_rng(seed)
     geom = ConvGeometry(**GEOM)
-    # Capacity == tenant count: steady-state microbatches stay on the
-    # identity-gather fast path (see engine._execute).
+    # Capacity == tenant count: steady-state microbatches carry no padding
+    # groups and slot-sort to gidx == arange.
     registry = SessionRegistry(geom, kappa=kappa, capacity=tenants)
     fan_in = geom.alpha * geom.p * geom.p
     for i in range(tenants):
@@ -104,6 +123,92 @@ def _sweep_point(batch: int, kappa: int, tenants: int) -> None:
     )
 
 
+def _time_engine(engine, requests, iters: int = 5) -> tuple[float, list]:
+    """Seconds per replay of ``requests`` through submit/flush/take."""
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        rids = [engine.submit(t, d) for t, d in requests]
+        engine.flush()
+        feats = [engine.take(r) for r in rids]
+    return (time.perf_counter() - t0) / iters, feats
+
+
+def _gather_sweep_point(
+    batch: int, tenants: int, kappa: int = 1,
+    max_ratio: float | None = 1.25, sparse_max_ratio: float | None = 3.0,
+    iters: int = 5,
+) -> None:
+    """Identity vs non-identity slot-index cost (the ROADMAP 0.8x-vs-4.9x
+    hazard).  One traffic pattern, three slot layouts:
+
+      identity:      capacity == T, slot-order round-robin -> gidx == arange
+      out_of_order:  same registry, submission order shuffled — the old
+                     engine saw a permuted gidx and fell off the fast path
+                     (the 0.8x case); slot-sorted coalescing restores the
+                     very same arange microbatch, so this must now cost the
+                     same as identity (``max_ratio``, default 1.25x) and be
+                     bit-identical to the sorted run.
+      partial_table: 2T slots registered, traffic to every other one ->
+                     gidx == [0, 2, 4, ...]: genuinely sparse.  The Pallas
+                     grouped kernels read each tile in place for any layout
+                     (no gather, ~1.0x by construction); the jnp reference
+                     has no gather-free batched GEMM available in XLA:CPU,
+                     so its scan of dynamic slices pays ~2x vs the in-place
+                     einsum — gated at ``sparse_max_ratio`` (down from the
+                     6-16x gather-copy cliff this sweep used to show).
+    """
+    geom, registry, engine, rng = _build(tenants, kappa)
+    requests = [
+        (f"tenant-{i % tenants}",
+         rng.standard_normal((1, geom.alpha, geom.m, geom.m)).astype(np.float32))
+        for i in range(batch)
+    ]
+
+    def _prep(engine_, reqs):  # warm the exact (G, B) buckets, then time
+        for t, d in reqs:
+            engine_.submit(t, d)
+        for rid in engine_.flush():
+            engine_.take(rid)  # release the warm-up result buffers
+        return _time_engine(engine_, reqs, iters)
+
+    dt_id, feats_id = _prep(engine, requests)
+
+    # Shuffled submission over the same full table: the queue sorts it back
+    # into the identical slot-order microbatch — asserted bit-identical.
+    order = np.random.default_rng(7).permutation(len(requests))
+    dt_oo, feats_oo = _prep(engine, [requests[i] for i in order])
+    for i, j in enumerate(order):
+        assert np.array_equal(feats_oo[i], feats_id[j]), "sort changed math"
+
+    # T < capacity: register 2T tenants, steer the same traffic to every
+    # other slot — a sparse, sorted, non-arange index vector.
+    geom2, registry2, engine2, _ = _build(2 * tenants, kappa)
+    sparse = [(f"tenant-{2 * int(t.split('-')[1])}", d) for t, d in requests]
+    dt_sp, feats_sp = _prep(engine2, sparse)
+
+    err_sp = max(
+        float(np.max(np.abs(f - registry2.session(t).deliver(jnp.asarray(d)))))
+        for f, (t, d) in zip(feats_sp, sparse)
+    )
+    assert err_sp < 1e-5, f"engine/per-request mismatch: {err_sp}"
+
+    tag = f"engine_gather/b{batch}_t{tenants}"
+    emit(f"{tag}/identity", dt_id * 1e6, f"{batch / dt_id:.1f} images/s")
+    for case, dt, limit, exact in (
+        ("out_of_order", dt_oo, max_ratio, "bit_identical_to_identity"),
+        ("partial_table", dt_sp, sparse_max_ratio, f"err={err_sp:.1e}"),
+    ):
+        ratio = dt / dt_id
+        emit(
+            f"{tag}/{case}", dt * 1e6,
+            f"{batch / dt:.1f} images/s vs_identity={ratio:.2f}x {exact}",
+        )
+        assert limit is None or ratio < limit, (
+            f"{case} gather path {ratio:.2f}x slower than identity "
+            f"(limit {limit}x)"
+        )
+
+
 LM_VOCAB, LM_DMODEL = 1024, 64
 
 
@@ -112,8 +217,8 @@ def _build_lm(tenants: int, seed: int = 0):
     from repro.runtime import MoLeDeliveryEngine
 
     rng = np.random.default_rng(seed)
-    # Capacity == tenant count keeps steady-state token microbatches on the
-    # identity-gather fast path, mirroring the vision sweep.
+    # Capacity == tenant count keeps steady-state token microbatches free of
+    # padding groups, mirroring the vision sweep.
     registry = LMSessionRegistry(LM_VOCAB, LM_DMODEL, capacity=tenants)
     for i in range(tenants):
         registry.register(
@@ -263,6 +368,7 @@ def run() -> None:
         for kappa in (1, 4):
             for tenants in (1, 4, 16):
                 _sweep_point(batch, kappa, tenants)
+    _gather_sweep_point(batch=64, tenants=16)
     for batch in (8, 64):
         for seq in (16, 128):
             for tenants in (1, 4, 16):
@@ -271,6 +377,28 @@ def run() -> None:
         _latency_point(n)
 
 
+def run_smoke() -> None:
+    """Tiny-shape subset for the per-PR CI job: one point per sweep, with
+    the non-identity gather path exercised (and its equivalence asserted)
+    on every change.  The perf-ratio gates are off — tiny shapes on shared
+    2-core CI runners flake; the local/nightly ``run()`` asserts the real
+    bounds — the ratios are still emitted for the uploaded artifact."""
+    _sweep_point(8, 1, 4)
+    _gather_sweep_point(
+        batch=16, tenants=4, max_ratio=None, sparse_max_ratio=None, iters=3
+    )
+    _token_sweep_point(8, 16, 4)
+    _latency_point(16)
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as machine-readable JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape subset (the per-PR CI job)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run_smoke() if args.smoke else run()
+    if args.json:
+        write_json(args.json)

@@ -2,6 +2,9 @@
 
   block_diag  — provider-side morphing: repeated-block-diagonal GEMM (eq. 2-4)
   aug_gemm    — developer-side Aug-Conv forward: T @ C^{ac} (eq. 5)
+  grouped     — slot-indexed grouped GEMMs: the gather-free delivery hot path
+                (per-tenant secrets read in place from the stacked slot table
+                via scalar-prefetched index maps)
   wkv6        — chunked RWKV-6 linear-attention scan (rwkv6_3b long-context)
 
 Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
@@ -11,10 +14,14 @@ from .dispatch import BACKENDS, resolve_backend
 from .ops import (
     aug_conv_forward,
     aug_conv_forward_batched,
+    aug_conv_forward_grouped,
     aug_embed_batched,
+    aug_embed_grouped,
     morph_rows,
     morph_rows_batched,
+    morph_rows_grouped,
     token_morph_batched,
+    token_morph_grouped,
 )
 from .wkv6 import wkv6_chunked
 from . import ref
@@ -24,10 +31,14 @@ __all__ = [
     "resolve_backend",
     "aug_conv_forward",
     "aug_conv_forward_batched",
+    "aug_conv_forward_grouped",
     "aug_embed_batched",
+    "aug_embed_grouped",
     "morph_rows",
     "morph_rows_batched",
+    "morph_rows_grouped",
     "token_morph_batched",
+    "token_morph_grouped",
     "wkv6_chunked",
     "ref",
 ]

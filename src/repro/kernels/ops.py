@@ -26,14 +26,19 @@ from . import ref
 from .aug_gemm import aug_gemm
 from .block_diag import block_diag_matmul
 from .dispatch import pallas_interpret, resolve_backend
+from .grouped import grouped_aug_gemm, grouped_block_diag_matmul
 
 __all__ = [
     "morph_rows",
     "aug_conv_forward",
     "morph_rows_batched",
     "aug_conv_forward_batched",
+    "morph_rows_grouped",
+    "aug_conv_forward_grouped",
     "token_morph_batched",
     "aug_embed_batched",
+    "token_morph_grouped",
+    "aug_embed_grouped",
 ]
 
 
@@ -132,6 +137,110 @@ def _aug_conv_forward_batched(t, c_acs, backend):
     return ref.aug_gemm_batched_ref(t, c_acs)
 
 
+def _safe_gidx(gidx: jax.Array, n_slots: int) -> jax.Array:
+    """Clamp slot indices into the stacked-secret range.
+
+    Padding groups at the tail of a microbatch may carry an index past the
+    slot table (the queue can only see the group bucket, not the registry
+    capacity); XLA's gather clamps out-of-range indices silently, but the
+    Pallas index_maps DMA whatever block they are told to — so the grouped
+    entry points clamp once here.  Padding rows are zero, so the result is
+    zeros regardless of whose secret they hit.
+    """
+    return jnp.clip(gidx.astype(jnp.int32), 0, n_slots - 1)
+
+
+def _with_arange_fast_case(gidx, n_slots, fast, general, *operands):
+    """Value-level fast case for the jnp grouped fallbacks.
+
+    When the microbatch spans the full slot table in slot order (the
+    slot-sorted steady state: ``gidx == arange(S)``), the per-group secrets
+    are the stacked array itself, and XLA's batched einsum reads it in place
+    with full threading — measurably faster on CPU than the scan of dynamic
+    slices.  The check is a ``lax.cond`` on the *values*, inside one
+    compiled graph: unlike the engine's old host-side ``identity_gather``
+    static flag there is nothing to re-trace when traffic shifts between
+    layouts, and the Pallas backends never need it (their index maps read
+    in place for any ``gidx``).  Statically skipped unless ``G == S`` —
+    ``arange(G)`` cannot cover a larger table.
+    """
+    if gidx.shape[0] != n_slots:
+        return general(*operands)
+    return jax.lax.cond(
+        jnp.array_equal(gidx, jnp.arange(n_slots, dtype=gidx.dtype)),
+        fast, general, *operands,
+    )
+
+
+def morph_rows_grouped(
+    x: jax.Array, gidx: jax.Array, cores: jax.Array, kappa: int,
+    backend: str | None = None,
+) -> jax.Array:
+    """Slot-indexed morphing: x (G, B, kappa*q), gidx (G,), cores (S, q, q).
+
+    The gather-free delivery hot path: per-group secrets are read **in
+    place** from the stacked slot table — on Pallas backends the scalar-
+    prefetched index_map DMAs slot ``gidx[g]``'s core tile directly, and the
+    jnp reference dynamic-slices one core per ``lax.scan`` step — so no
+    ``(G, q, q)`` copy is ever materialized, for *any* index vector
+    (out-of-order, duplicate, partial-table, or the identity).
+    """
+    return _morph_rows_grouped(
+        x, gidx, cores, int(kappa), resolve_backend(backend)
+    )
+
+
+@partial(jax.jit, static_argnames=("kappa", "backend"))
+def _morph_rows_grouped(x, gidx, cores, kappa, backend):
+    G, B, F = x.shape
+    q = cores.shape[-1]
+    gidx = _safe_gidx(gidx, cores.shape[0])
+    if backend != "jnp" and _morph_tileable(B, q):
+        return grouped_block_diag_matmul(
+            x, gidx, cores, kappa,
+            bm=min(128, B), bn=min(128, q), bk=min(128, q),
+            interpret=pallas_interpret(backend),
+        )
+    return _with_arange_fast_case(
+        gidx, cores.shape[0],
+        lambda x_, g_: ref.block_diag_matmul_batched_ref(x_, cores, kappa),
+        lambda x_, g_: ref.block_diag_matmul_grouped_ref(x_, g_, cores, kappa),
+        x, gidx,
+    )
+
+
+def aug_conv_forward_grouped(
+    t: jax.Array, gidx: jax.Array, c_acs: jax.Array,
+    backend: str | None = None,
+) -> jax.Array:
+    """Slot-indexed Aug-Conv forward: t (G, B, K), gidx (G,), c_acs (S, K, N).
+
+    This is the GEMM whose per-microbatch ``(G, K, N)`` weight gather was
+    the non-identity delivery cost (ROADMAP: 0.8x vs 4.9x at 16 tenants);
+    here the slot table is read in place on every backend.
+    """
+    return _aug_conv_forward_grouped(t, gidx, c_acs, resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _aug_conv_forward_grouped(t, gidx, c_acs, backend):
+    G, B, K = t.shape
+    N = c_acs.shape[-1]
+    gidx = _safe_gidx(gidx, c_acs.shape[0])
+    bm, bn, bk = min(128, B), min(128, N), min(512, K)
+    if backend != "jnp" and B % bm == 0 and N % bn == 0 and K % bk == 0:
+        return grouped_aug_gemm(
+            t, gidx, c_acs, bm=bm, bn=bn, bk=bk,
+            interpret=pallas_interpret(backend),
+        )
+    return _with_arange_fast_case(
+        gidx, c_acs.shape[0],
+        lambda t_, g_: ref.aug_gemm_batched_ref(t_, c_acs),
+        lambda t_, g_: ref.aug_gemm_grouped_ref(t_, g_, c_acs),
+        t, gidx,
+    )
+
+
 def token_morph_batched(
     tokens: jax.Array, perms: jax.Array, backend: str | None = None
 ) -> jax.Array:
@@ -159,3 +268,52 @@ def aug_embed_batched(
     """
     resolve_backend(backend)
     return ref.aug_embed_batched_ref(tokens, tables)
+
+
+def token_morph_grouped(
+    tokens: jax.Array, gidx: jax.Array, perms: jax.Array,
+    backend: str | None = None,
+) -> jax.Array:
+    """Slot-indexed token morphing: tokens (G, B, L), gidx (G,), perms (S, V).
+
+    The LM twin of :func:`morph_rows_grouped`: each scan step dynamic-slices
+    one slot's permutation out of the stacked ``(S, V)`` table, so the
+    ``(G, V)`` per-microbatch permutation copy is never materialized.  A
+    gather-of-gathers is still memory-bound with no MACs, so every backend
+    routes to the XLA formulation (see :func:`token_morph_batched`).
+    """
+    resolve_backend(backend)
+    return _token_morph_grouped(tokens, gidx, perms)
+
+
+@jax.jit
+def _token_morph_grouped(tokens, gidx, perms):
+    gidx = _safe_gidx(gidx, perms.shape[0])
+    return _with_arange_fast_case(
+        gidx, perms.shape[0],
+        lambda t_, g_: ref.token_morph_batched_ref(t_, perms),
+        lambda t_, g_: ref.token_morph_grouped_ref(t_, g_, perms),
+        tokens, gidx,
+    )
+
+
+def aug_embed_grouped(
+    tokens: jax.Array, gidx: jax.Array, tables: jax.Array,
+    backend: str | None = None,
+) -> jax.Array:
+    """Slot-indexed Aug-Embedding: morphed tokens (G, B, L) gathered from the
+    stacked ``(S, V, d)`` tables via gidx (G,) -> (G, B, L, d), without the
+    ``(G, V, d)`` per-microbatch table copy (the largest secret stack)."""
+    resolve_backend(backend)
+    return _aug_embed_grouped(tokens, gidx, tables)
+
+
+@jax.jit
+def _aug_embed_grouped(tokens, gidx, tables):
+    gidx = _safe_gidx(gidx, tables.shape[0])
+    return _with_arange_fast_case(
+        gidx, tables.shape[0],
+        lambda t_, g_: ref.aug_embed_batched_ref(t_, tables),
+        lambda t_, g_: ref.aug_embed_grouped_ref(t_, g_, tables),
+        tokens, gidx,
+    )

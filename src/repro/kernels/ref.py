@@ -39,6 +39,80 @@ def aug_gemm_batched_ref(t: jax.Array, c_acs: jax.Array) -> jax.Array:
     ).astype(t.dtype)
 
 
+# -- slot-indexed grouped variants ------------------------------------------
+#
+# The grouped refs take the (G,) slot-index vector and the *stacked* (S, ...)
+# secrets and never materialize the (G, ...) per-group copy: a lax.scan over
+# the group axis dynamic-slices exactly one slot's secret per step, so peak
+# extra memory is one secret tile (not G of them) and XLA runs each step as a
+# plain GEMM/gather.  This is both the correctness oracle for the Pallas
+# kernels in ``grouped.py`` and the fast CPU path — on CPU it beats the
+# einsum-over-gathered-weights formulation even for the identity index.
+
+def block_diag_matmul_grouped_ref(
+    x: jax.Array, gidx: jax.Array, cores: jax.Array, kappa: int
+) -> jax.Array:
+    """Slot-indexed morphing: x (G, B, kappa*q), gidx (G,), cores (S, q, q)."""
+    G, B, F = x.shape
+    q = cores.shape[-1]
+
+    def step(_, inp):
+        xg, i = inp
+        core = jax.lax.dynamic_index_in_dim(cores, i, 0, keepdims=False)
+        blocks = xg.reshape(B, kappa, q)
+        out = jnp.einsum(
+            "bkq,qp->bkp", blocks.astype(jnp.float32), core.astype(jnp.float32)
+        )
+        return None, out.reshape(B, F).astype(x.dtype)
+
+    _, out = jax.lax.scan(step, None, (x, gidx))
+    return out
+
+
+def aug_gemm_grouped_ref(
+    t: jax.Array, gidx: jax.Array, c_acs: jax.Array
+) -> jax.Array:
+    """Slot-indexed Aug-Conv forward: t (G, B, K), gidx (G,), c_acs (S, K, N)."""
+
+    def step(_, inp):
+        tg, i = inp
+        c = jax.lax.dynamic_index_in_dim(c_acs, i, 0, keepdims=False)
+        out = jnp.dot(tg.astype(jnp.float32), c.astype(jnp.float32))
+        return None, out.astype(t.dtype)
+
+    _, out = jax.lax.scan(step, None, (t, gidx))
+    return out
+
+
+def token_morph_grouped_ref(
+    tokens: jax.Array, gidx: jax.Array, perms: jax.Array
+) -> jax.Array:
+    """Slot-indexed token morphing: tokens (G, B, L), gidx (G,), perms (S, V)."""
+
+    def step(_, inp):
+        tg, i = inp
+        p = jax.lax.dynamic_index_in_dim(perms, i, 0, keepdims=False)
+        return None, p[tg]
+
+    _, out = jax.lax.scan(step, None, (tokens, gidx))
+    return out
+
+
+def aug_embed_grouped_ref(
+    tokens: jax.Array, gidx: jax.Array, tables: jax.Array
+) -> jax.Array:
+    """Slot-indexed Aug-Embedding: tokens (G, B, L), gidx (G,),
+    tables (S, V, d) -> (G, B, L, d)."""
+
+    def step(_, inp):
+        tg, i = inp
+        e = jax.lax.dynamic_index_in_dim(tables, i, 0, keepdims=False)
+        return None, e[tg]
+
+    _, out = jax.lax.scan(step, None, (tokens, gidx))
+    return out
+
+
 def aug_gemm_ref(t: jax.Array, c_ac: jax.Array) -> jax.Array:
     return jnp.dot(
         t.astype(jnp.float32), c_ac.astype(jnp.float32)

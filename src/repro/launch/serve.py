@@ -65,8 +65,8 @@ def run_delivery(args) -> dict:
     geom = ConvGeometry(alpha=args.channels, beta=args.out_channels,
                         m=args.image_size, p=3)
     # Default the slot capacity to the tenant count: an exactly-sized slot
-    # table keeps the steady-state "all tenants active" microbatch on the
-    # identity-gather fast path (gidx == arange(capacity)).
+    # table keeps the steady-state "all tenants active" microbatch free of
+    # padding groups (and on CPU, on the in-place arange fast case).
     capacity = args.capacity if args.capacity is not None else args.tenants
     registry = SessionRegistry(geom, kappa=args.kappa, capacity=capacity)
     fan_in = geom.alpha * geom.p * geom.p
@@ -140,6 +140,10 @@ def run_delivery(args) -> dict:
         f"  speedup:     {dt_per_request / dt_engine:9.2f}x   "
         f"max |engine - per-request| = {err:.2e}"
     )
+    if args.stats:
+        print("engine stats:")
+        for line in stats.summary().splitlines():
+            print(f"  {line}")
     out = {
         "images_per_s_engine": n_images / dt_engine,
         "images_per_s_per_request": n_images / dt_per_request,
@@ -300,6 +304,10 @@ def run_lm(args) -> np.ndarray:
         f"first request generation (provider view): "
         f"{final[0][:12].tolist()}"
     )
+    if use_mole and args.stats:
+        print("engine stats:")
+        for line in stats.summary().splitlines():
+            print(f"  {line}")
     return final
 
 
@@ -331,6 +339,7 @@ _ENGINE_ONLY = {
     "--max-inflight-rows": ("max_inflight_rows", 4096),
     "--admission": ("admission", "block"),
     "--capacity": ("capacity", None),
+    "--stats": ("stats", False),
 }
 
 
@@ -356,9 +365,13 @@ def main(argv=None):
                     help="over-quota behavior: backpressure or AdmissionError")
     ap.add_argument("--capacity", type=int, default=None,
                     help="registry slot capacity (default: one slot per "
-                         "--tenants, which keeps steady-state microbatches "
-                         "on the identity-gather fast path; tenants beyond "
-                         "capacity LRU-evict to host)")
+                         "--tenants, which minimizes padding groups; "
+                         "tenants beyond capacity LRU-evict to host — the "
+                         "grouped kernels serve any slot layout at the "
+                         "same cost)")
+    ap.add_argument("--stats", action="store_true", default=None,
+                    help="print the engine stats summary after the run "
+                         "(flush-phase p50/p95, submit stalls, latency)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     # vision-delivery-only options (error under --mode lm)

@@ -22,10 +22,14 @@ Groups never mix tenants, so tenant A's rows are only ever morphed with
 tenant A's secrets — the isolation property asserted in
 ``tests/test_engine.py`` / ``tests/test_lm_engine.py``.
 
-Kernel backend selection follows ``repro.kernels.dispatch``: the Pallas
-``block_diag_matmul`` / ``aug_gemm`` kernels on TPU, the jnp reference on CPU
-— a flag, not the old hard-coded ``interpret=True``.  The token lane's
-gathers are XLA-native on every backend (``kernels.ops.token_morph_batched``).
+Kernel backend selection follows ``repro.kernels.dispatch``: the slot-indexed
+grouped Pallas kernels (``kernels.grouped``) on TPU, the scan-based jnp
+reference on CPU — a flag, not the old hard-coded ``interpret=True``.  Every
+lane reads per-tenant secrets **in place** from the stacked ``(S, ...)``
+slot arrays (``kernels.ops.morph_rows_grouped`` and friends): there is no
+per-microbatch ``secrets[gidx]`` gather copy and no identity-order special
+case — out-of-order, duplicate, and partial-table microbatches cost the
+same as the slot-ordered steady state.
 
 Under an active mesh the group axis is sharded over the data-parallel axes
 (``repro.sharding.rules.delivery_rules`` / ``hints.hint``); on a single
@@ -39,6 +43,14 @@ the device through per-slot ``.at[slot].set`` patches on the cached plan, so
 (``delivery_trace_count`` exposes the trace counter the regression tests
 assert on).
 
+**Phase-split flushing.**  :meth:`MoLeDeliveryEngine.flush` is three phases —
+:meth:`begin_flush` (coalesce every lane's pending rows into microbatch work
+items), :meth:`execute_flush` (run the jitted device steps), and
+:meth:`publish_flush` (scatter results back to per-request buffers).  The
+sync ``flush()`` just chains them; the async front door calls them
+separately so only coalesce/publish run under its lock and the device step
+never blocks submitters (``repro.runtime.async_engine``).
+
 This class is **not** thread-safe; ``repro.runtime.async_engine`` layers a
 lock, a background deadline flusher, and admission control on top.
 """
@@ -47,6 +59,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import time
 from functools import partial
 from typing import Callable
 
@@ -59,14 +72,26 @@ from repro.core.lm import LMSessionRegistry
 from repro.core.protocol import SessionRegistry
 from repro.kernels.dispatch import resolve_backend
 from repro.kernels.ops import (
-    aug_conv_forward_batched,
-    aug_embed_batched,
-    morph_rows_batched,
-    token_morph_batched,
+    aug_conv_forward_grouped,
+    aug_embed_grouped,
+    morph_rows_grouped,
+    token_morph_grouped,
 )
 from repro.sharding.hints import hint
 
 __all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
+
+
+def _window_quantile(xs, q: float) -> float:
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+    return xs[idx]
+
+
+# Flush phases timed by the engine; EngineStats keeps one reservoir each.
+FLUSH_PHASES = ("coalesce", "device", "publish")
 
 
 @dataclasses.dataclass
@@ -77,16 +102,33 @@ class EngineStats:
     microbatches: int = 0
     flushes: int = 0
     rejected: int = 0           # requests refused by admission control
+    # Submits whose front-door lock wait exceeded stall_threshold_ms: the
+    # observable for "the flusher holds the lock across device execution".
+    submit_stalls: int = 0
+    stall_threshold_ms: float = 1.0
     bucket_shapes: set = dataclasses.field(default_factory=set)
     # Completion latencies (ms), submit -> result, recorded by the async
     # front door.  Bounded reservoir: keeps the most recent window so p50/p95
     # reflect current traffic, not the whole process lifetime.
     latency_window: int = 4096
     _latencies_ms: collections.deque = dataclasses.field(default=None)
+    # Per-flush phase durations (FLUSH_PHASES) + per-submit lock waits, same
+    # sliding-window reservoirs.
+    _phases_ms: dict = dataclasses.field(default=None)
+    _submit_wait_ms: collections.deque = dataclasses.field(default=None)
 
     def __post_init__(self):
         if self._latencies_ms is None:
             self._latencies_ms = collections.deque(maxlen=self.latency_window)
+        if self._phases_ms is None:
+            self._phases_ms = {
+                p: collections.deque(maxlen=self.latency_window)
+                for p in FLUSH_PHASES
+            }
+        if self._submit_wait_ms is None:
+            self._submit_wait_ms = collections.deque(
+                maxlen=self.latency_window
+            )
 
     @property
     def padding_fraction(self) -> float:
@@ -99,11 +141,7 @@ class EngineStats:
     def latency_quantile_ms(self, q: float) -> float:
         """Empirical latency quantile in ms over the recent window (nan if
         nothing has been recorded)."""
-        if not self._latencies_ms:
-            return float("nan")
-        xs = sorted(self._latencies_ms)
-        idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
-        return xs[idx]
+        return _window_quantile(self._latencies_ms, q)
 
     @property
     def p50_ms(self) -> float:
@@ -112,6 +150,47 @@ class EngineStats:
     @property
     def p95_ms(self) -> float:
         return self.latency_quantile_ms(0.95)
+
+    # -- flush-phase timing ---------------------------------------------------
+    def record_phase_ms(self, phase: str, ms: float) -> None:
+        self._phases_ms[phase].append(float(ms))
+
+    def phase_quantile_ms(self, phase: str, q: float) -> float:
+        """Per-flush duration quantile of one phase ('coalesce' | 'device' |
+        'publish') over the recent window (nan when never flushed)."""
+        return _window_quantile(self._phases_ms[phase], q)
+
+    # -- submit-stall accounting ----------------------------------------------
+    def record_submit_wait_ms(self, ms: float) -> None:
+        """One front-door submit's lock-acquisition wait; waits above
+        ``stall_threshold_ms`` count as stalls."""
+        self._submit_wait_ms.append(float(ms))
+        if ms > self.stall_threshold_ms:
+            self.submit_stalls += 1
+
+    def submit_wait_quantile_ms(self, q: float) -> float:
+        return _window_quantile(self._submit_wait_ms, q)
+
+    def summary(self) -> str:
+        """Multi-line human-readable dump (serve.py --stats)."""
+        lines = [
+            f"requests={self.requests} rows_in={self.rows_in} "
+            f"microbatches={self.microbatches} flushes={self.flushes} "
+            f"rejected={self.rejected} padding={self.padding_fraction:.0%}",
+            f"completion latency: p50={self.p50_ms:.2f}ms "
+            f"p95={self.p95_ms:.2f}ms",
+        ]
+        for p in FLUSH_PHASES:
+            lines.append(
+                f"flush {p:>8}: p50={self.phase_quantile_ms(p, 0.5):.2f}ms "
+                f"p95={self.phase_quantile_ms(p, 0.95):.2f}ms"
+            )
+        lines.append(
+            f"submit wait: p50={self.submit_wait_quantile_ms(0.5):.3f}ms "
+            f"p95={self.submit_wait_quantile_ms(0.95):.3f}ms "
+            f"stalls(>{self.stall_threshold_ms:g}ms)={self.submit_stalls}"
+        )
+        return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -165,6 +244,35 @@ def _sync_plan(plan, registry, slot_fns: dict[str, Callable[[int], np.ndarray]])
     return plan
 
 
+@dataclasses.dataclass
+class _WorkItem:
+    """One coalesced microbatch on its way through a phase-split flush.
+
+    Each item carries its **own** plan snapshot: when capacity is smaller
+    than the flushed tenant set, coalescing microbatch k+1 may evict-and-
+    reuse slots that microbatch k's ``gidx`` still refers to — the snapshot
+    taken right after each coalesce pins the slot contents that index
+    vector was built against.  Snapshots are immutable jax arrays and alias
+    the previous plan when nothing churned, so the steady state stores one
+    plan G times, not G plans.
+    """
+
+    lane: str                   # "vision" | "tokens" | "features"
+    mb: object                  # runtime.queue.Microbatch
+    plan: _Plan                 # slot secrets as of this item's coalesce
+    want_embed: bool = False    # tokens lane: run the Aug-Embedding gather
+    out: object = None          # host results, set by execute_flush
+
+
+@dataclasses.dataclass
+class _FlushWork:
+    """The coalesced work items one flush hands from phase to phase; holds
+    everything execute_flush needs so it never touches mutable engine or
+    registry state."""
+
+    items: list
+
+
 # Shape/static-arg tuples seen by actual traces of the jitted delivery steps.
 # Python side effects inside a jitted function run only while tracing, so
 # this counts compilations, not calls — the retrace-regression tests assert
@@ -198,6 +306,7 @@ class MoLeDeliveryEngine:
         group_buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
         seq_buckets: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512),
         backend: str | None = None,
+        max_flush_microbatches: int = 64,
     ):
         from .queue import RequestQueue, TokenQueue  # keeps queues swappable
 
@@ -213,6 +322,11 @@ class MoLeDeliveryEngine:
         self.lm_registry = lm_registry
         self.backend = resolve_backend(backend)
         self.max_rows = max_rows
+        # Bounds one flush round's working set: begin_flush coalesces at
+        # most this many microbatches, so peak host memory (padded inputs +
+        # materialized outputs held until publish) never scales with the
+        # backlog — flush()/the async flusher simply run more rounds.
+        self.max_flush_microbatches = int(max_flush_microbatches)
         self.row_buckets = tuple(sorted(row_buckets))
         self.group_buckets = tuple(sorted(group_buckets))
         self.seq_buckets = tuple(sorted(seq_buckets))
@@ -277,9 +391,9 @@ class MoLeDeliveryEngine:
             self._plan = plan
             # Make the tenant count and the slot capacity group buckets: the
             # steady-state "every tenant active" microbatch of a capacity-
-            # sized registry then lands on G == S with gidx == arange (slot-
-            # order padding groups included), which the identity-gather fast
-            # path needs.
+            # sized registry then lands exactly on G == tenant count (no
+            # padding groups) and a fixed (G, B) bucket, minimizing both
+            # padding and distinct compiled shapes.
             self.queue.ensure_group_bucket(len(reg))
             self.queue.ensure_group_bucket(reg.capacity)
         return plan
@@ -437,175 +551,218 @@ class MoLeDeliveryEngine:
         return rid
 
     # -- the jitted hot paths ------------------------------------------------
-    @staticmethod
-    def _identity_gather(gidx: np.ndarray, capacity: int) -> bool:
-        # When every slot is active once, in slot order (the common
-        # steady-state pattern), the per-group secret gather is the identity —
-        # skipping it avoids copying the stacked secrets per microbatch,
-        # which dominates at high tenant counts.  The condition compares
-        # against the *capacity* (shape-stable), never the tenant count, so
-        # the static flag cannot flip — and thus cannot retrace — on
-        # registration churn at a fixed (G, B) bucket.
-        return len(gidx) == capacity and bool(
-            np.array_equal(gidx, np.arange(len(gidx)))
-        )
-
-    def _execute(self, x: np.ndarray, gidx: np.ndarray) -> jax.Array:
-        plan = self._refresh_plan()
-        identity = self._identity_gather(gidx, plan.arrays["cores"].shape[0])
+    def _execute(self, x: np.ndarray, gidx: np.ndarray,
+                 plan: _Plan) -> jax.Array:
         return _delivery_step(
             jnp.asarray(x), jnp.asarray(gidx),
             plan.arrays["cores"], plan.arrays["augs"],
-            self.registry.kappa, self.backend, identity,
+            self.registry.kappa, self.backend,
         )
 
     def _execute_tokens(self, tokens: np.ndarray, gidx: np.ndarray,
-                        want_embed: bool):
-        plan = self._refresh_lm_plan()
-        identity = self._identity_gather(gidx, plan.arrays["perms"].shape[0])
+                        want_embed: bool, plan: _Plan):
         return _lm_delivery_step(
             jnp.asarray(tokens), jnp.asarray(gidx),
             plan.arrays["perms"],
             plan.arrays["aug_embeds"] if want_embed else None,
-            self.backend, want_embed, identity,
+            self.backend, want_embed,
         )
 
-    def _execute_features(self, x: np.ndarray, gidx: np.ndarray) -> jax.Array:
+    def _execute_features(self, x: np.ndarray, gidx: np.ndarray,
+                          plan: _Plan) -> jax.Array:
         # The continuous LM lane *is* the vision math (m^2 -> 1): same jitted
         # step, with the registry's embedding cores / fused projections.
-        plan = self._refresh_lm_plan()
-        identity = self._identity_gather(
-            gidx, plan.arrays["embed_cores"].shape[0]
-        )
         return _delivery_step(
             jnp.asarray(x), jnp.asarray(gidx),
             plan.arrays["embed_cores"], plan.arrays["aug_projs"],
-            self.lm_registry.kappa, self.backend, identity,
+            self.lm_registry.kappa, self.backend,
         )
 
-    # -- draining ------------------------------------------------------------
+    # -- phase-split flushing -------------------------------------------------
     def _note_microbatch(self, mb) -> None:
         self.stats.microbatches += 1
         self.stats.rows_padded += mb.n_padded_rows
         self.stats.bucket_shapes.add(mb.x.shape[:2])
 
-    def _drain_vision(self, done: dict[int, np.ndarray]) -> None:
-        while True:
+    def begin_flush(self) -> _FlushWork | None:
+        """Phase 1 (cheap, engine-state-mutating): coalesce pending rows
+        into microbatch work items and snapshot the device plans.  The async
+        front door runs this under its lock; the coalesced rows leave the
+        queues, which immediately accept new submissions — the double-buffer
+        that lets submitters progress mid-flush.  At most
+        ``max_flush_microbatches`` items are taken per call so one round's
+        working set stays bounded however deep the backlog; the caller loops
+        until None, which is returned when nothing is pending.
+        """
+        vision_live = self.registry is not None and len(self.registry) > 0
+        lm_live = self.lm_registry is not None and len(self.lm_registry) > 0
+        if not vision_live and not lm_live:
+            return None  # nothing registered yet -> nothing can be pending
+        t0 = time.monotonic()
+        work = _FlushWork(items=[])
+        cap = self.max_flush_microbatches
+        lanes: list[tuple[str, object, object, Callable[[], _Plan]]] = []
+        if vision_live:
+            self._refresh_plan()  # sync group buckets before coalescing
+            lanes.append(
+                ("vision", self.queue, self.registry, self._refresh_plan)
+            )
+        if lm_live:
+            self._refresh_lm_plan()
+            lanes.append(
+                ("tokens", self.token_queue, self.lm_registry,
+                 self._refresh_lm_plan)
+            )
+            if self.embed_queue is not None:
+                lanes.append(
+                    ("features", self.embed_queue, self.lm_registry,
+                     self._refresh_lm_plan)
+                )
+        for lane, queue, reg, refresh in lanes:
             # slot_for activates (and LRU-touches) each tenant on lookup, so
             # evicted tenants transparently regain a slot; max_groups caps a
             # microbatch at `capacity` distinct tenants so activations within
-            # one coalesce round can never evict each other.
-            mb = self.queue.coalesce(
-                self.registry.slot_for, max_groups=self.registry.capacity
-            )
-            if mb is None:
-                break
-            out = np.asarray(self._execute(mb.x, mb.group_tenant))
-            self._note_microbatch(mb)
-            for s in mb.slices:
-                shape = self._request_shape[s.request_id]
-                buf = self._results.setdefault(
-                    s.request_id,
-                    np.empty((shape[0], out.shape[-1]), np.float32),
+            # one coalesce round can never evict each other.  The plan
+            # re-sync after each coalesce pins the slots that microbatch's
+            # gidx was built against (see _WorkItem).
+            while len(work.items) < cap:
+                mb = queue.coalesce(reg.slot_for, max_groups=reg.capacity)
+                if mb is None:
+                    break
+                self._note_microbatch(mb)
+                # One token microbatch may mix "tokens" and "embed"
+                # requests; the Aug-Embedding gather runs only when someone
+                # asked for features (a static flag — at most two traces
+                # per bucket, independent of tenant churn).
+                want_embed = lane == "tokens" and any(
+                    self._token_deliver[s.request_id] == "embed"
+                    for s in mb.slices
                 )
-                buf[s.req_offset : s.req_offset + s.n_rows] = out[
-                    s.group, s.group_offset : s.group_offset + s.n_rows
-                ]
-                if s.req_offset + s.n_rows == shape[0]:
-                    done[s.request_id] = np.asarray(
-                        reroll_batch(buf, shape[1], shape[2])
-                    )
-                    self._results[s.request_id] = done[s.request_id]
-                    self._done.add(s.request_id)
+                work.items.append(_WorkItem(lane, mb, refresh(), want_embed))
+        if not work.items:
+            return None
+        self.stats.flushes += 1
+        self.stats.record_phase_ms("coalesce", (time.monotonic() - t0) * 1e3)
+        return work
 
-    def _drain_tokens(self, done: dict[int, np.ndarray]) -> None:
-        reg = self.lm_registry
-        while True:
-            mb = self.token_queue.coalesce(reg.slot_for, max_groups=reg.capacity)
-            if mb is None:
-                break
-            # One microbatch may mix "tokens" and "embed" requests; the
-            # Aug-Embedding gather runs only when someone asked for features
-            # (a static flag — at most two traces per bucket, independent of
-            # tenant churn).
-            want_embed = any(
-                self._token_deliver[s.request_id] == "embed" for s in mb.slices
-            )
-            morphed, feats = self._execute_tokens(
-                mb.x, mb.group_tenant, want_embed
-            )
-            morphed = np.asarray(morphed)
-            feats = None if feats is None else np.asarray(feats)
-            self._note_microbatch(mb)
-            seq = mb.x.shape[2]      # this lane's padded sequence bucket
-            for s in mb.slices:
-                rid = s.request_id
-                shape = self._request_shape[rid]   # (b, L) or (b, L, d)
-                embed = self._token_deliver[rid] == "embed"
-                buf = self._results.get(rid)
-                if buf is None:
-                    buf = self._results[rid] = (
-                        np.empty((shape[0], seq, feats.shape[-1]), np.float32)
-                        if embed else np.empty((shape[0], seq), np.int32)
-                    )
-                src = feats if embed else morphed
-                buf[s.req_offset : s.req_offset + s.n_rows] = src[
-                    s.group, s.group_offset : s.group_offset + s.n_rows
-                ]
-                if s.req_offset + s.n_rows == shape[0]:
-                    # Strip the sequence padding back to the true length.
-                    done[rid] = np.ascontiguousarray(buf[:, : shape[1]])
-                    self._results[rid] = done[rid]
-                    self._done.add(rid)
+    def execute_flush(self, work: _FlushWork) -> None:
+        """Phase 2 (device compute, no engine-state mutation): run the jitted
+        delivery steps over the work items' microbatches against the plan
+        snapshots and materialize the results on host.
 
-    def _drain_features(self, done: dict[int, np.ndarray]) -> None:
-        reg = self.lm_registry
-        while True:
-            mb = self.embed_queue.coalesce(reg.slot_for, max_groups=reg.capacity)
-            if mb is None:
-                break
-            out = np.asarray(self._execute_features(mb.x, mb.group_tenant))
-            self._note_microbatch(mb)
-            for s in mb.slices:
-                shape = self._request_shape[s.request_id]
-                buf = self._results.setdefault(
-                    s.request_id,
-                    np.empty((shape[0], out.shape[-1]), np.float32),
+        Touches only ``work`` and immutable jax arrays, so the async flusher
+        runs it **outside** its lock while submitters keep enqueuing.
+        """
+        t0 = time.monotonic()
+        # Dispatch every step first (jax dispatch is async), then block: the
+        # device pipelines the microbatches instead of idling between them.
+        outs = []
+        for item in work.items:
+            mb = item.mb
+            if item.lane == "vision":
+                outs.append(self._execute(mb.x, mb.group_tenant, item.plan))
+            elif item.lane == "tokens":
+                outs.append(self._execute_tokens(
+                    mb.x, mb.group_tenant, item.want_embed, item.plan
+                ))
+            else:
+                outs.append(self._execute_features(
+                    mb.x, mb.group_tenant, item.plan
+                ))
+        for item, out in zip(work.items, outs):
+            if item.lane == "tokens":
+                morphed, feats = out
+                item.out = (
+                    np.asarray(morphed),
+                    None if feats is None else np.asarray(feats),
                 )
-                buf[s.req_offset : s.req_offset + s.n_rows] = out[
-                    s.group, s.group_offset : s.group_offset + s.n_rows
-                ]
-                if s.req_offset + s.n_rows == shape[0]:
-                    done[s.request_id] = buf.reshape(
-                        self._embed_shape[s.request_id]
-                    )
-                    self._results[s.request_id] = done[s.request_id]
-                    self._done.add(s.request_id)
+            else:
+                item.out = np.asarray(out)
+        self.stats.record_phase_ms("device", (time.monotonic() - t0) * 1e3)
+
+    def publish_flush(self, work: _FlushWork) -> dict[int, np.ndarray]:
+        """Phase 3 (cheap, engine-state-mutating): scatter executed results
+        into per-request buffers and mark completed requests done.  Runs
+        under the async front door's lock."""
+        t0 = time.monotonic()
+        done: dict[int, np.ndarray] = {}
+        for item in work.items:
+            if item.lane == "vision":
+                self._publish_rows(item, done, self._finish_vision)
+            elif item.lane == "tokens":
+                self._publish_tokens(item, done)
+            else:
+                self._publish_rows(item, done, self._finish_features)
+        self.stats.record_phase_ms("publish", (time.monotonic() - t0) * 1e3)
+        return done
+
+    def _finish_vision(self, rid: int, buf: np.ndarray) -> np.ndarray:
+        shape = self._request_shape[rid]
+        return np.asarray(reroll_batch(buf, shape[1], shape[2]))
+
+    def _finish_features(self, rid: int, buf: np.ndarray) -> np.ndarray:
+        return buf.reshape(self._embed_shape[rid])
+
+    def _publish_rows(self, item: _WorkItem, done: dict[int, np.ndarray],
+                      finish) -> None:
+        out = item.out
+        for s in item.mb.slices:
+            shape = self._request_shape[s.request_id]
+            buf = self._results.setdefault(
+                s.request_id,
+                np.empty((shape[0], out.shape[-1]), np.float32),
+            )
+            buf[s.req_offset : s.req_offset + s.n_rows] = out[
+                s.group, s.group_offset : s.group_offset + s.n_rows
+            ]
+            if s.req_offset + s.n_rows == shape[0]:
+                done[s.request_id] = finish(s.request_id, buf)
+                self._results[s.request_id] = done[s.request_id]
+                self._done.add(s.request_id)
+
+    def _publish_tokens(self, item: _WorkItem,
+                        done: dict[int, np.ndarray]) -> None:
+        morphed, feats = item.out
+        seq = item.mb.x.shape[2]     # this lane's padded sequence bucket
+        for s in item.mb.slices:
+            rid = s.request_id
+            shape = self._request_shape[rid]   # (b, L) or (b, L, d)
+            embed = self._token_deliver[rid] == "embed"
+            buf = self._results.get(rid)
+            if buf is None:
+                buf = self._results[rid] = (
+                    np.empty((shape[0], seq, feats.shape[-1]), np.float32)
+                    if embed else np.empty((shape[0], seq), np.int32)
+                )
+            src = feats if embed else morphed
+            buf[s.req_offset : s.req_offset + s.n_rows] = src[
+                s.group, s.group_offset : s.group_offset + s.n_rows
+            ]
+            if s.req_offset + s.n_rows == shape[0]:
+                # Strip the sequence padding back to the true length.
+                done[rid] = np.ascontiguousarray(buf[:, : shape[1]])
+                self._results[rid] = done[rid]
+                self._done.add(rid)
 
     def flush(self) -> dict[int, np.ndarray]:
         """Run every pending request (all lanes) through padded microbatches.
 
+        Chains :meth:`begin_flush` -> :meth:`execute_flush` ->
+        :meth:`publish_flush`, in rounds of at most
+        ``max_flush_microbatches`` so memory stays bounded on deep backlogs.
         Returns {request_id: result} for all requests that completed during
         this flush (results are also retained until redeemed via
         :meth:`take`).  Vision requests resolve to features (b, beta, n, n);
         token requests to morphed tokens (b, L) or Aug-embedded features
         (b, L, d_model); continuous requests to projected features.
         """
-        vision_live = self.registry is not None and len(self.registry) > 0
-        lm_live = self.lm_registry is not None and len(self.lm_registry) > 0
-        if not vision_live and not lm_live:
-            return {}  # nothing registered yet -> nothing can be pending
-        self.stats.flushes += 1
         done: dict[int, np.ndarray] = {}
-        if vision_live:
-            self._refresh_plan()  # also syncs group buckets to tenant count
-            self._drain_vision(done)
-        if lm_live:
-            self._refresh_lm_plan()
-            self._drain_tokens(done)
-            if self.embed_queue is not None:
-                self._drain_features(done)
-        return done
+        while True:
+            work = self.begin_flush()
+            if work is None:
+                return done
+            self.execute_flush(work)
+            done.update(self.publish_flush(work))
 
     def take(self, request_id: int) -> np.ndarray:
         """Redeem a completed request's result (pops it), any lane."""
@@ -678,7 +835,7 @@ class MoLeDeliveryEngine:
             # Carry the ensured group buckets over: the LM plan is still
             # current after a reset, so _refresh_lm_plan would not re-ensure
             # them — losing the tenant-count bucket would shift steady-state
-            # microbatches off the identity-gather fast path and retrace.
+            # microbatches onto a different (G, B) bucket and retrace.
             for g in sorted(tq._ensured_groups):
                 self.token_queue.ensure_group_bucket(g)
         if self.embed_queue is not None:
@@ -695,9 +852,8 @@ class MoLeDeliveryEngine:
         self._done.clear()
 
 
-@partial(jax.jit, static_argnames=("kappa", "backend", "identity_gather"))
-def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str,
-                   identity_gather: bool = False):
+@partial(jax.jit, static_argnames=("kappa", "backend"))
+def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str):
     """morph + Aug forward for one padded microbatch, single compiled graph.
 
     x: (G, B, F_in); gidx: (G,); cores: (S, q, q); augs: (S, F_in, F_out).
@@ -705,26 +861,23 @@ def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str,
     (fused input projections) — the same math, per the paper's m^2 -> 1
     reduction.  The group axis is the natural data-parallel shard axis
     (delivery_rules).
+
+    One path for every ``gidx``: the grouped kernels read each group's
+    secrets in place from the stacked slot arrays (scalar-prefetched index
+    maps on Pallas, a scan of dynamic slices on jnp), so there is no
+    ``secrets[gidx]`` copy and no identity-order special case to fall off.
     """
-    _TRACES[
-        (x.shape, gidx.shape, cores.shape, kappa, backend, identity_gather)
-    ] += 1
-    G = x.shape[0]
+    _TRACES[(x.shape, gidx.shape, cores.shape, kappa, backend)] += 1
     x = hint(x, "dp")
-    if identity_gather:
-        cores_g, augs_g = cores[:G], augs[:G]  # gidx == arange(G): static slice
-    else:
-        cores_g = cores[gidx]                  # (G, q, q)   per-group secrets
-        augs_g = augs[gidx]                    # (G, Fi, Fo)
-    morphed = morph_rows_batched(x, cores_g, kappa, backend=backend)
+    morphed = morph_rows_grouped(x, gidx, cores, kappa, backend=backend)
     morphed = hint(morphed, "dp")
-    feats = aug_conv_forward_batched(morphed, augs_g, backend=backend)
+    feats = aug_conv_forward_grouped(morphed, gidx, augs, backend=backend)
     return hint(feats, "dp")
 
 
-@partial(jax.jit, static_argnames=("backend", "want_embed", "identity_gather"))
+@partial(jax.jit, static_argnames=("backend", "want_embed"))
 def _lm_delivery_step(tokens, gidx, perms, aug_embeds, backend: str,
-                      want_embed: bool, identity_gather: bool = False):
+                      want_embed: bool):
     """Token morph (+ optional Aug-Embedding) for one padded microbatch.
 
     tokens: (G, B, L) int32; gidx: (G,); perms: (S, V) int32;
@@ -732,21 +885,17 @@ def _lm_delivery_step(tokens, gidx, perms, aug_embeds, backend: str,
     stages the AugE stacks lazily).  Returns (morphed, feats) where feats is
     None unless ``want_embed`` — the provider-side permutation gather always
     runs (it is what crosses the trust boundary), the developer-side AugE
-    gather only when a request asked for delivered features.
+    gather only when a request asked for delivered features.  Like the rows
+    step, the grouped gathers read the stacked tables in place for any
+    ``gidx`` — no per-microbatch ``perms[gidx]`` / ``aug_embeds[gidx]`` copy.
     """
     _TRACES[
-        ("lm", tokens.shape, gidx.shape, perms.shape, backend, want_embed,
-         identity_gather)
+        ("lm", tokens.shape, gidx.shape, perms.shape, backend, want_embed)
     ] += 1
-    G = tokens.shape[0]
     tokens = hint(tokens, "dp")
-    perms_g = perms[:G] if identity_gather else perms[gidx]   # (G, V)
-    morphed = token_morph_batched(tokens, perms_g, backend=backend)
+    morphed = token_morph_grouped(tokens, gidx, perms, backend=backend)
     morphed = hint(morphed, "dp")
     if not want_embed:
         return morphed, None
-    embeds_g = (
-        aug_embeds[:G] if identity_gather else aug_embeds[gidx]
-    )                                                         # (G, V, d)
-    feats = aug_embed_batched(morphed, embeds_g, backend=backend)
+    feats = aug_embed_grouped(morphed, gidx, aug_embeds, backend=backend)
     return morphed, hint(feats, "dp")

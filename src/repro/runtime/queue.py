@@ -9,11 +9,17 @@ are small.  The coalescer packs pending rows into a *padded microbatch*:
   * ``B`` is the smallest bucket that fits the largest chunk and ``G`` is
     bucket-rounded too, so the jitted engine path compiles once per
     ``(G, B)`` bucket pair instead of once per traffic pattern;
-  * padding rows are zeros and each padding *group* carries its own group
-    index as tenant index — they flow through the batched GEMMs and are
-    sliced away on reassembly, and a full-capacity microbatch in slot order
-    keeps ``gidx == arange`` (the engine's identity-gather fast path) even
-    when trailing slots are padding.
+  * groups are **slot-sorted**: chunks are ordered by their registry slot
+    index (stable, so a tenant's overflow chunks stay FIFO-adjacent), and a
+    tenant's interleaved arrivals merge into its open chunk during packing —
+    so the engine's grouped kernels see monotone slot indices (duplicates
+    only where a tenant overflows ``max_rows``; adjacent groups sharing a
+    slot reuse the resident secret tile) and the steady-state full-table
+    microbatch degenerates to ``gidx == arange(S)`` for free;
+  * padding rows are zeros and padding *groups* carry their own group index
+    clamped to the slot-table bound — they flow through the grouped GEMMs
+    (zero in, zero out), are sliced away on reassembly, and a dense prefix
+    of active slots plus padding keeps ``gidx == arange``.
 
 LM token traffic coalesces through :class:`TokenQueue`: the same packing,
 but requests are int32 token sequences and microbatches are additionally
@@ -75,8 +81,9 @@ class Microbatch:
     """A padded (G, B, F) tensor plus the bookkeeping to scatter results back."""
 
     x: np.ndarray               # (G, B, F) zero-padded rows
-    group_tenant: np.ndarray    # (G,) int32 slot index per group (padding
-    # groups carry their own group index; identify them via n_real_groups)
+    group_tenant: np.ndarray    # (G,) int32 slot index per group; real
+    # groups sorted ascending, padding groups carry their own (clamped)
+    # index — identify them via n_real_groups
     slices: list[GroupSlice]
     n_real_groups: int
     n_real_rows: int
@@ -209,19 +216,33 @@ class RequestQueue:
         if not chunks:
             return None
 
+        # Slot-sorted coalescing: order groups by their registry slot so the
+        # grouped kernels see monotone indices (adjacent groups sharing a
+        # slot reuse the resident secret tile, and the full-table microbatch
+        # degenerates to gidx == arange).  Slot lookups happen once per
+        # tenant, in FIFO chunk order, *before* sorting — slot_for may
+        # activate an evicted tenant, and that must follow arrival order.
+        slot_of: dict[str, int] = {}
+        for tenant, _ in chunks:
+            if tenant not in slot_of:
+                slot_of[tenant] = lookup(tenant)
+        chunks.sort(key=lambda c: slot_of[c[0]])  # stable: FIFO within a slot
+        # Duplicate-slot groups are already merged as far as they can be:
+        # chunk building appends a tenant's later arrivals to its open chunk
+        # and only closes a chunk when it is exactly max_rows full, so two
+        # same-slot chunks always sum past max_rows (a genuine overflow) —
+        # the sort just guarantees they come out adjacent.
+
         largest = max(sum(n for _, _, n in runs) for _, runs in chunks)
         B = bucketize(largest, self.row_buckets)
         G = bucketize(len(chunks), self.group_buckets)
 
         x = np.zeros((G, B, self.feature_dim), self.dtype)
-        # Padding groups carry their own index: all-zero rows make their
-        # output zeros regardless of whose secrets they hit, and slot-order
-        # microbatches keep gidx == arange for the identity-gather fast path.
-        gidx = np.arange(G, dtype=np.int32)
+        gidx = np.empty(G, dtype=np.int32)
         slices: list[GroupSlice] = []
         n_real_rows = 0
         for g, (tenant, runs) in enumerate(chunks):
-            gidx[g] = lookup(tenant)
+            gidx[g] = slot_of[tenant]
             cursor = 0
             for req, off, n in runs:
                 x[g, cursor : cursor + n] = req.rows[off : off + n]
@@ -229,6 +250,14 @@ class RequestQueue:
                 req.delivered = off + n
                 cursor += n
                 n_real_rows += n
+        # Padding groups carry their own group index, clamped to the slot
+        # table bound (max_groups == registry capacity in engine use):
+        # all-zero rows make their output zeros regardless of whose secrets
+        # they hit, and a dense prefix of active slots plus padding
+        # degenerates to gidx == arange — the in-place fast case on the jnp
+        # backend (the grouped kernels cost the same either way).
+        pad = np.arange(len(chunks), G, dtype=np.int32)
+        gidx[len(chunks):] = np.minimum(pad, max_groups - 1)
 
         self._pending = [
             r for r in self._pending if r.delivered < r.rows.shape[0]
@@ -247,9 +276,9 @@ class TokenQueue:
     padded positions are sliced away on reassembly, so the id only has to be
     a valid gather index).  Internally one :class:`RequestQueue` runs per
     sequence bucket (rows of width ``L_bucket``), so every microbatch is
-    ``(G, B, L_bucket)`` with the exact same tenant-grouping, row/group
-    bucketing, and padding-group-carries-its-own-index behavior as the
-    vision rows lane; ``coalesce`` serves the bucket holding the oldest
+    ``(G, B, L_bucket)`` with the exact same tenant-grouping, slot-sorted
+    row/group bucketing, and padding-group behavior as the vision rows
+    lane; ``coalesce`` serves the bucket holding the oldest
     pending request, which keeps cross-bucket traffic FIFO-fair.
     """
 

@@ -359,6 +359,91 @@ def test_engine_reset_pending_drops_queued_state(rng):
     assert rid2.shape == (2, GEOM.beta, GEOM.n, GEOM.n)
 
 
+class _HeldExecuteEngine(MoLeDeliveryEngine):
+    """Engine whose device phase blocks until released — makes 'the flush's
+    device step is in flight' a deterministic window instead of a race."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.in_device = threading.Event()
+        self.release = threading.Event()
+
+    def execute_flush(self, work):
+        self.in_device.set()
+        assert self.release.wait(timeout=30), "test never released the flush"
+        return super().execute_flush(work)
+
+
+def test_submitters_progress_while_device_step_in_flight(rng):
+    """The off-lock acceptance: while a flush's device step is running, a
+    submitter must acquire the front door and enqueue — submit latency no
+    longer scales with flush duration."""
+    reg = _registry(rng, tenants=2)
+    eng = _HeldExecuteEngine(reg)
+    front = AsyncDeliveryEngine(eng, max_delay_ms=5.0)
+    try:
+        d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        f0 = front.submit("t0", d)
+        assert eng.in_device.wait(timeout=30)   # flush 1's device step is live
+        assert not f0.done()
+        t0 = time.monotonic()
+        f1 = front.submit("t1", d)              # held device step, free lock
+        submit_s = time.monotonic() - t0
+        assert not f0.done()                    # ...the flush is still open
+        eng.release.set()
+        np.testing.assert_allclose(
+            f0.result(timeout=60),
+            np.asarray(reg.session("t0").deliver(jnp.asarray(d))), atol=1e-5,
+        )
+        np.testing.assert_allclose(
+            f1.result(timeout=60),
+            np.asarray(reg.session("t1").deliver(jnp.asarray(d))), atol=1e-5,
+        )
+        # The mid-flight submit never waited on the device step (generous CI
+        # slack; the device step itself was held open arbitrarily long).
+        assert submit_s < 5.0
+        assert eng.stats.submit_wait_quantile_ms(0.95) < 5_000.0
+    finally:
+        eng.release.set()
+        front.close()
+
+
+def test_submit_wait_stats_recorded(rng):
+    """Every front-door submit records its lock wait; the stall counter
+    stays an integer >= 0 and the quantiles are finite."""
+    reg = _registry(rng, tenants=2)
+    with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        futs = [front.submit(t, d) for t in reg.tenant_ids for _ in range(4)]
+        for f in futs:
+            f.result(timeout=60)
+        stats = front.stats
+        p50 = stats.submit_wait_quantile_ms(0.5)
+        assert p50 == p50 and p50 >= 0.0        # recorded, not NaN
+        assert 0 <= stats.submit_stalls <= len(futs)
+
+
+def test_deadline_heap_prunes_completed_requests(rng):
+    """The deadline heap forgets completed requests: after a drain the
+    lazy-pruned peek reports no pending deadline."""
+    reg = _registry(rng, tenants=1)
+    with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        futs = [front.submit("t0", d) for _ in range(5)]
+        for f in futs:
+            f.result(timeout=60)
+        front.drain(timeout=60)
+        with front._cv:
+            assert front._oldest_deadline() is None
+            assert front._deadline_heap == []
+
+
 def test_drain_waits_for_inflight(rng):
     reg = _registry(rng, tenants=1)
     front = AsyncDeliveryEngine(reg, max_delay_ms=10_000.0)

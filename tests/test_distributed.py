@@ -133,7 +133,7 @@ def test_delivery_engine_shards_group_axis_across_devices():
                 eng.submit(t, d)
             mb = eng.queue.coalesce(reg.slot_for, max_groups=reg.capacity)
             assert mb.x.shape[0] == 8, mb.x.shape
-            out = eng._execute(mb.x, mb.group_tenant)
+            out = eng._execute(mb.x, mb.group_tenant, eng._refresh_plan())
             out.block_until_ready()
             spec = out.sharding.spec
             n_shards = len(set(

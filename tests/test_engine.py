@@ -302,6 +302,67 @@ def test_registry_rejects_bad_capacity():
         reg.ensure_resident("nobody")
 
 
+def test_engine_sorts_out_of_order_traffic_into_slot_order(rng):
+    """Reverse-order submissions still produce slot-sorted microbatches (the
+    grouped kernels' tile-reuse precondition) and exact results."""
+    reg = _registry(rng, tenants=4, capacity=8)   # T < capacity
+    eng = MoLeDeliveryEngine(reg)
+    datas = {
+        t: rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        for t in reg.tenant_ids
+    }
+    rids = {t: eng.submit(t, datas[t]) for t in reversed(reg.tenant_ids)}
+    work = eng.begin_flush()
+    assert len(work.items) == 1
+    gidx = work.items[0].mb.group_tenant
+    assert np.all(np.diff(gidx) >= 0)             # monotone despite reversal
+    eng.execute_flush(work)
+    eng.publish_flush(work)
+    for t, rid in rids.items():
+        want = np.asarray(reg.session(t).deliver(jnp.asarray(datas[t])))
+        np.testing.assert_allclose(eng.take(rid), want, atol=1e-5)
+
+
+def test_flush_rounds_bound_working_set(rng):
+    """max_flush_microbatches caps one begin/execute/publish round; flush()
+    loops rounds until the backlog drains, completing every request."""
+    reg = _registry(rng, tenants=1)
+    eng = MoLeDeliveryEngine(
+        reg, max_rows=4, row_buckets=(1, 2, 4), group_buckets=(1, 2),
+        max_flush_microbatches=1,
+    )
+    d = rng.standard_normal((19, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    rid = eng.submit("t0", d)       # 19 rows -> 3+ microbatches
+    work = eng.begin_flush()
+    assert len(work.items) == 1     # the cap, not the whole backlog
+    eng.execute_flush(work)
+    assert rid not in eng.publish_flush(work)   # partially delivered
+    done = eng.flush()              # loops the remaining rounds
+    assert set(done) == {rid}
+    np.testing.assert_allclose(
+        eng.take(rid), np.asarray(reg.session("t0").deliver(jnp.asarray(d))),
+        atol=1e-5,
+    )
+    assert eng.stats.flushes >= 3
+
+
+def test_flush_phase_stats_recorded(rng):
+    """Every flush records coalesce/device/publish durations; summary()
+    renders them for serve.py --stats."""
+    reg = _registry(rng, tenants=2)
+    eng = MoLeDeliveryEngine(reg)
+    d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
+    eng.deliver("t0", d)
+    for phase in ("coalesce", "device", "publish"):
+        p50 = eng.stats.phase_quantile_ms(phase, 0.5)
+        p95 = eng.stats.phase_quantile_ms(phase, 0.95)
+        assert p50 == p50 and p95 == p95, phase   # not NaN
+        assert 0.0 <= p50 <= p95
+    assert "flush" in eng.stats.summary() and "submit wait" in eng.stats.summary()
+
+
 # ---------------------------------------------------------------------------
 # take(): unknown / pending request ids fail with actionable context
 # ---------------------------------------------------------------------------
@@ -429,6 +490,74 @@ def test_queue_pending_rows_by_tenant():
     assert q.pending_rows_by_tenant() == {"a": 5, "b": 5}
     q.coalesce({"a": 0, "b": 1})
     assert q.pending_rows_by_tenant() == {}
+
+
+def test_queue_coalesce_orders_groups_by_slot():
+    """Groups come out slot-sorted regardless of arrival order, so the
+    grouped kernels see monotone indices and the full-table case degenerates
+    to gidx == arange."""
+    q = RequestQueue(4, max_rows=8, row_buckets=(1, 2, 4, 8),
+                     group_buckets=(1, 2, 4))
+    q.submit("c", np.full((2, 4), 3.0, np.float32))
+    q.submit("a", np.full((2, 4), 1.0, np.float32))
+    q.submit("b", np.full((2, 4), 2.0, np.float32))
+    mb = q.coalesce({"a": 0, "b": 1, "c": 5})
+    assert mb.n_real_groups == 3
+    # sorted by slot; the padding group carries its own (clamped) index
+    assert list(mb.group_tenant) == [0, 1, 5, 3]
+    # each tenant's rows moved with its group
+    assert np.all(mb.x[0, :2] == 1.0) and np.all(mb.x[1, :2] == 2.0)
+    assert np.all(mb.x[2, :2] == 3.0) and np.all(mb.x[3] == 0.0)
+
+
+def test_queue_dense_prefix_padding_keeps_arange():
+    """Active slots 0..k plus padding degenerate to gidx == arange — the
+    layout the jnp backend's in-place fast case keys on."""
+    q = RequestQueue(4, max_rows=8, row_buckets=(1, 2, 4, 8),
+                     group_buckets=(1, 2, 4))
+    for tenant in ("a", "b", "c"):
+        q.submit(tenant, np.ones((2, 4), np.float32))
+    mb = q.coalesce({"a": 0, "b": 1, "c": 2}, max_groups=4)
+    assert mb.n_real_groups == 3
+    assert list(mb.group_tenant) == [0, 1, 2, 3]
+    # and the clamp keeps padding in range when G buckets past max_groups
+    q.submit("a", np.ones((1, 4), np.float32))
+    q.submit("b", np.ones((1, 4), np.float32))
+    q.submit("c", np.ones((1, 4), np.float32))
+    mb = q.coalesce({"a": 0, "b": 1, "c": 2}, max_groups=3)
+    assert list(mb.group_tenant) == [0, 1, 2, 2]
+
+
+def test_queue_overflow_duplicates_stay_adjacent_and_monotone():
+    """A tenant overflowing max_rows spans several groups; slot sorting puts
+    them next to each other (duplicate indices, still monotone)."""
+    q = RequestQueue(4, max_rows=4, row_buckets=(1, 2, 4),
+                     group_buckets=(1, 2, 4))
+    q.submit("big", np.full((10, 4), 1.0, np.float32))
+    q.submit("small", np.full((1, 4), 2.0, np.float32))
+    mb = q.coalesce({"big": 2, "small": 0})
+    assert mb.n_real_groups == 4           # 3 chunks of "big" + 1 of "small"
+    assert list(mb.group_tenant) == [0, 2, 2, 2]
+    assert np.all(np.diff(mb.group_tenant) >= 0)
+    assert mb.n_real_rows == 11
+
+
+def test_queue_merges_interleaved_same_tenant_arrivals():
+    """a, b, a arrivals: tenant a's two requests share one group (chunk
+    building appends to the open chunk), so duplicate slots only remain
+    where a tenant truly overflows max_rows."""
+    q = RequestQueue(4, max_rows=8, row_buckets=(1, 2, 4, 8),
+                     group_buckets=(1, 2, 4))
+    r0 = q.submit("a", np.full((2, 4), 1.0, np.float32))
+    q.submit("b", np.full((2, 4), 2.0, np.float32))
+    r2 = q.submit("a", np.full((3, 4), 3.0, np.float32))
+    mb = q.coalesce({"a": 1, "b": 0})
+    assert mb.n_real_groups == 2
+    assert list(mb.group_tenant) == [0, 1]
+    by_req = {s.request_id: s for s in mb.slices}
+    # FIFO within the merged group: r0's rows precede r2's
+    assert by_req[r0].group == by_req[r2].group == 1
+    assert by_req[r0].group_offset == 0 and by_req[r2].group_offset == 2
 
 
 def test_queue_rejects_bad_shapes():

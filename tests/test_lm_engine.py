@@ -243,7 +243,7 @@ def test_aug_embedding_stacks_stage_lazily(rng):
 
 def test_reset_pending_keeps_token_lane_fast_path(rng):
     """reset_pending must not drop the ensured group buckets: steady-state
-    microbatches would shift off the identity-gather fast path and retrace."""
+    microbatches would land on a different (G, B) bucket and retrace."""
     tenants = 3
     reg = _lm_registry(rng, tenants=tenants, capacity=tenants)
     eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
