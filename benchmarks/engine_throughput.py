@@ -20,6 +20,14 @@ all tenants' prompts into length-bucketed token microbatches and morphing
 them as one batched multi-tenant gather.  Results are integers, so the
 equivalence check is exact.
 
+A **fairness sweep** saturates two tenants — one registered at WFQ weight 2,
+one at weight 1 — with identical deep backlogs and runs a fixed number of
+bounded flush rounds: the weight-2 tenant must achieve ~2x the goodput
+(completed rows) of the weight-1 tenant (gated at >= 1.6x; the allocation is
+deterministic scheduler arithmetic, not wall-clock, so the gate also runs in
+``--smoke``), with every completed result still exactly equal to per-request
+delivery.
+
 A fourth sweep measures the **gather cost** the slot-indexed grouped kernels
 exist to kill: the same 16-tenant traffic served (a) with capacity == T in
 slot order (the old identity-gather fast path), (b) with out-of-order
@@ -33,6 +41,8 @@ agreement.
 CSV rows:
   engine/b{B}_k{kappa}_t{T}/per_request,<us>,<images/s>
   engine/b{B}_k{kappa}_t{T}/engine,<us>,<images/s> speedup=<x>
+  engine_fairness/r{rounds}/weight2,<us>,<rows> goodput_ratio=<x>
+  engine_fairness/r{rounds}/weight1,<us>,<rows>
   engine_gather/b{B}_t{T}/identity,<us>,<images/s>
   engine_gather/b{B}_t{T}/partial_table,<us>,<images/s> vs_identity=<x>
   engine_gather/b{B}_t{T}/out_of_order,<us>,<images/s> vs_identity=<x>
@@ -58,6 +68,12 @@ import numpy as np
 from .common import emit, write_json
 
 GEOM = dict(alpha=3, beta=16, m=16, p=3)   # CIFAR-ish first conv layer
+
+
+def _req(tenant: str, payload, **kw):
+    from repro.runtime import DeliveryRequest
+
+    return DeliveryRequest(tenant, payload, **kw)
 
 
 def _build(tenants: int, kappa: int, seed: int = 0):
@@ -90,7 +106,7 @@ def _sweep_point(batch: int, kappa: int, tenants: int) -> None:
     # Warmup replays the full request pattern so the timed passes hit the
     # exact (G, B) buckets already compiled.
     for t, d in requests:
-        engine.submit(t, d)
+        engine.submit(_req(t, d))
     engine.flush()
     for t, d in requests:
         jax.block_until_ready(registry.session(t).deliver(jnp.asarray(d)))
@@ -106,7 +122,7 @@ def _sweep_point(batch: int, kappa: int, tenants: int) -> None:
 
     t0 = time.perf_counter()
     for _ in range(iters):
-        rids = [engine.submit(t, d) for t, d in requests]
+        rids = [engine.submit(_req(t, d)) for t, d in requests]
         engine.flush()
         feats = [engine.take(r) for r in rids]
     dt_eng = (time.perf_counter() - t0) / iters
@@ -127,7 +143,7 @@ def _time_engine(engine, requests, iters: int = 5) -> tuple[float, list]:
     """Seconds per replay of ``requests`` through submit/flush/take."""
     t0 = time.perf_counter()
     for _ in range(iters):
-        rids = [engine.submit(t, d) for t, d in requests]
+        rids = [engine.submit(_req(t, d)) for t, d in requests]
         engine.flush()
         feats = [engine.take(r) for r in rids]
     return (time.perf_counter() - t0) / iters, feats
@@ -166,7 +182,7 @@ def _gather_sweep_point(
 
     def _prep(engine_, reqs):  # warm the exact (G, B) buckets, then time
         for t, d in reqs:
-            engine_.submit(t, d)
+            engine_.submit(_req(t, d))
         for rid in engine_.flush():
             engine_.take(rid)  # release the warm-up result buffers
         return _time_engine(engine_, reqs, iters)
@@ -245,7 +261,7 @@ def _token_sweep_point(batch: int, seq: int, tenants: int) -> None:
     # Warmup replays the full pattern so the timed passes hit compiled
     # buckets on both paths.
     for t, d in requests:
-        engine.submit_tokens(t, d)
+        engine.submit(_req(t, d, lane="tokens"))
     engine.flush()
     for t, d in requests:
         jax.block_until_ready(
@@ -263,7 +279,7 @@ def _token_sweep_point(batch: int, seq: int, tenants: int) -> None:
 
     t0 = time.perf_counter()
     for _ in range(iters):
-        rids = [engine.submit_tokens(t, d) for t, d in requests]
+        rids = [engine.submit(_req(t, d, lane="tokens")) for t, d in requests]
         engine.flush()
         morphed = [engine.take(r) for r in rids]
     dt_eng = (time.perf_counter() - t0) / iters
@@ -277,6 +293,86 @@ def _token_sweep_point(batch: int, seq: int, tenants: int) -> None:
         f"{tag}/engine", dt_eng * 1e6,
         f"{batch / dt_eng:.1f} prompts/s speedup={dt_req / dt_eng:.2f}x "
         f"err=0.0e+00",
+    )
+
+
+def _fairness_sweep_point(
+    requests_per_tenant: int = 64, rows_per_request: int = 8,
+    rounds: int = 8, min_ratio: float = 1.6, max_ratio: float = 2.6,
+) -> None:
+    """Saturated 2-tenant WFQ fairness: a weight-2 tenant must achieve ~2x
+    the goodput (completed rows) of a weight-1 tenant when both hold deep
+    identical backlogs and only ``rounds`` bounded flush rounds run.
+
+    The allocation is deterministic scheduler arithmetic (virtual-time
+    bookkeeping, not wall-clock), so the ratio gate holds on any machine —
+    including the CI ``--smoke`` job; only the emitted us/round is timing.
+    """
+    from repro.core import ConvGeometry, SessionRegistry
+    from repro.runtime import MoLeDeliveryEngine
+
+    geom = ConvGeometry(**GEOM)
+    rng = np.random.default_rng(3)
+    registry = SessionRegistry(geom, kappa=1, capacity=2)
+    fan_in = geom.alpha * geom.p * geom.p
+    for name, w in (("heavy", 2.0), ("light", 1.0)):
+        k = rng.standard_normal(
+            (geom.alpha, geom.beta, geom.p, geom.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        registry.register(name, k, weight=w)
+    engine = MoLeDeliveryEngine(
+        registry, max_rows=rows_per_request,
+        row_buckets=tuple(sorted({1, 2, 4, rows_per_request})),
+        group_buckets=(1, 2), max_flush_microbatches=4,
+    )
+
+    datas: dict[int, tuple[str, np.ndarray]] = {}
+    for _ in range(requests_per_tenant):
+        for t in ("heavy", "light"):   # interleaved identical backlogs
+            d = rng.standard_normal(
+                (rows_per_request, geom.alpha, geom.m, geom.m)
+            ).astype(np.float32)
+            datas[engine.submit(_req(t, d))] = (t, d)
+
+    # Bounded rounds against a saturating backlog: WFQ decides whose rows
+    # fill the capped microbatch budget.
+    served = {"heavy": 0, "light": 0}
+    done_rids: list[int] = []
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        work = engine.begin_flush()
+        assert work is not None, "backlog drained: not saturated, grow it"
+        engine.execute_flush(work)
+        for rid in engine.publish_flush(work):
+            t, d = datas[rid]
+            served[t] += d.shape[0]
+            done_rids.append(rid)
+    dt = (time.perf_counter() - t0) / rounds
+
+    # Completed results are still exactly the per-request delivery.
+    err = max(
+        float(np.max(np.abs(
+            engine.take(rid)
+            - np.asarray(
+                registry.session(datas[rid][0]).deliver(
+                    jnp.asarray(datas[rid][1])
+                )
+            )
+        )))
+        for rid in done_rids[:8]
+    )
+    assert err < 1e-5, f"fairness sweep equivalence broke: {err}"
+
+    ratio = served["heavy"] / max(served["light"], 1)
+    tag = f"engine_fairness/r{rounds}"
+    emit(
+        f"{tag}/weight2", dt * 1e6,
+        f"{served['heavy']} rows goodput_ratio={ratio:.2f}x err={err:.1e}",
+    )
+    emit(f"{tag}/weight1", dt * 1e6, f"{served['light']} rows")
+    assert min_ratio <= ratio <= max_ratio, (
+        f"weight-2 tenant got {ratio:.2f}x the weight-1 goodput "
+        f"(want [{min_ratio}, {max_ratio}]x)"
     )
 
 
@@ -302,13 +398,13 @@ def _latency_point(
     for n_tenants in (1, 2, 4):
         for per_tenant in (1, 2, 3, 4):
             rids = [
-                engine.submit(t, d)
+                engine.submit(_req(t, d))
                 for t, d in datas[: n_tenants * per_tenant]
             ]
             engine.flush()
             for r in rids:
                 engine.take(r)
-    rids = [engine.submit(t, d) for t, d in datas]
+    rids = [engine.submit(_req(t, d)) for t, d in datas]
     engine.flush()
     for r in rids:
         engine.take(r)
@@ -316,7 +412,7 @@ def _latency_point(
     futs = []
     for t, d in datas:
         time.sleep(arrival_ms / 1e3)
-        futs.append(warm.submit(t, d))
+        futs.append(warm.submit(_req(t, d)))
     for f in futs:
         f.result(timeout=120)
     warm.close()
@@ -329,7 +425,7 @@ def _latency_point(
     rids = []
     for t, d in datas:
         time.sleep(arrival_ms / 1e3)
-        rid = engine.submit(t, d)
+        rid = engine.submit(_req(t, d))
         submit_at[rid] = time.perf_counter()
         rids.append(rid)
     engine.flush()
@@ -345,7 +441,7 @@ def _latency_point(
     futures = []
     for t, d in datas:
         time.sleep(arrival_ms / 1e3)
-        futures.append(front.submit(t, d))
+        futures.append(front.submit(_req(t, d)))
     for f in futures:
         f.result(timeout=120)
     stats = engine.stats
@@ -368,6 +464,7 @@ def run() -> None:
         for kappa in (1, 4):
             for tenants in (1, 4, 16):
                 _sweep_point(batch, kappa, tenants)
+    _fairness_sweep_point()
     _gather_sweep_point(batch=64, tenants=16)
     for batch in (8, 64):
         for seq in (16, 128):
@@ -382,8 +479,11 @@ def run_smoke() -> None:
     the non-identity gather path exercised (and its equivalence asserted)
     on every change.  The perf-ratio gates are off — tiny shapes on shared
     2-core CI runners flake; the local/nightly ``run()`` asserts the real
-    bounds — the ratios are still emitted for the uploaded artifact."""
+    bounds — the ratios are still emitted for the uploaded artifact.  The
+    fairness sweep's weight-ratio gate *does* run here: WFQ row allocation
+    is deterministic scheduler arithmetic, not wall-clock."""
     _sweep_point(8, 1, 4)
+    _fairness_sweep_point(requests_per_tenant=24, rounds=4)
     _gather_sweep_point(
         batch=16, tenants=4, max_ratio=None, sparse_max_ratio=None, iters=3
     )

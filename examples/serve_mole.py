@@ -28,9 +28,15 @@ def main():
     ])
     # Stage 1b: the same traffic through the async front door — deadline
     # flusher (5 ms SLO) + per-tenant admission control, p50/p95 reported.
+    # Typed-API scheduling knobs: tenant 0 gets a 2x WFQ share, requests
+    # alternate two priority levels, and every DeliveryRequest carries a
+    # 3 ms per-request deadline (tighter than the engine SLO); --stats
+    # prints the per-priority quantiles + admission/WFQ accounting.
     serve_mod.main([
         "--mode", "delivery", "--async", "--tenants", "4", "--requests", "32",
         "--batch", "2", "--kappa", "2", "--max-delay-ms", "5",
+        "--weights", "2,1", "--priority", "0,1", "--deadline-ms", "3",
+        "--stats",
     ])
     # Stage 2a: MoLe-secured LM serving — the engine's token lane morphs all
     # tenants' prompts in one batched gather; per-tenant Aug-fused serving.

@@ -236,6 +236,7 @@ class LMSessionRegistry(SlotRegistry):
         embedding: np.ndarray,
         w_in: np.ndarray | None = None,
         seed: int | None = None,
+        weight: float = 1.0,
     ) -> LMSession:
         """Create an LM tenant: draw a fresh vocab permutation (and, with a
         continuous lane, a fresh morph core), fuse the developer artifacts.
@@ -243,6 +244,8 @@ class LMSessionRegistry(SlotRegistry):
         ``embedding`` is the developer's (V, d_model) table — the LM "first
         layer" shipped across the trust boundary, like the vision protocol's
         ``dev_kernels``; ``w_in`` (d_in, d_out) is its continuous-lane analogue.
+        ``weight`` is the tenant's weighted-fair-queueing share in the
+        delivery engine (see :meth:`SlotRegistry.set_weight`).
         """
         embedding = np.asarray(embedding, np.float32)
         if embedding.shape != (self.vocab, self.d_model):
@@ -287,6 +290,8 @@ class LMSessionRegistry(SlotRegistry):
             embed_morpher=embed_morpher, aug_projection=aug_projection,
         )
         self._adopt(tenant_id, sess)
+        if weight != 1.0:
+            self.set_weight(tenant_id, weight)
         return sess
 
     def session(self, tenant_id: str) -> LMSession:

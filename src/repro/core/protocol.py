@@ -162,6 +162,7 @@ class SlotRegistry:
         self._slot_tenant: list[str | None] = [None] * (capacity or 1)
         self._slot_of: dict[str, int] = {}
         self._sessions: dict = {}                     # host store: ALL tenants
+        self._weights: dict[str, float] = {}          # WFQ share (default 1.0)
         self._order: list[str] = []
         self._clock = 0
         self._last_used: dict[str, int] = {}
@@ -251,6 +252,33 @@ class SlotRegistry:
     # Back-compat name from the pre-slot registry.
     tenant_index = slot_for
 
+    def prefetch(self, tenant_ids) -> dict[str, int]:
+        """Activate (and LRU-touch) each tenant in order, returning
+        {tenant_id: slot} — the registry half of the engine's slot prefetch.
+
+        Prefetching more tenants than there are slots keeps the *last*
+        ``capacity`` of them resident: earlier ones are simply the oldest
+        LRU entries and get evicted by the later ones.
+        """
+        return {t: self.slot_for(t) for t in tenant_ids}
+
+    # -- weighted fair queueing shares ---------------------------------------
+    def weight_of(self, tenant_id: str) -> float:
+        """Tenant's WFQ share for the delivery engine's coalescer (1.0 unless
+        set): under saturation a weight-2 tenant is served ~2x the rows of a
+        weight-1 tenant."""
+        return self._weights.get(tenant_id, 1.0)
+
+    def set_weight(self, tenant_id: str, weight: float) -> None:
+        """Set a registered tenant's WFQ share (provider-side policy: weights
+        live on the registry, not on requests, so a tenant cannot grant
+        itself a larger share of the fleet)."""
+        if tenant_id not in self._sessions:
+            raise KeyError(f"unknown tenant {tenant_id!r}")
+        if not weight > 0:
+            raise ValueError(f"weight must be positive, got {weight}")
+        self._weights[tenant_id] = float(weight)
+
     def updates_since(self, version: int) -> list[int] | None:
         """Slots whose contents changed after ``version`` (deduplicated).
 
@@ -324,9 +352,14 @@ class SessionRegistry(SlotRegistry):
         self.core_mode = core_mode
 
     def register(
-        self, tenant_id: str, dev_kernels: np.ndarray, seed: int | None = None
+        self, tenant_id: str, dev_kernels: np.ndarray, seed: int | None = None,
+        weight: float = 1.0,
     ) -> MoLeSession:
-        """Create a tenant session: draw fresh secrets, fuse its Aug-Conv."""
+        """Create a tenant session: draw fresh secrets, fuse its Aug-Conv.
+
+        ``weight`` is the tenant's weighted-fair-queueing share in the
+        delivery engine (see :meth:`SlotRegistry.set_weight`).
+        """
         if tenant_id in self._sessions:
             raise ValueError(f"tenant {tenant_id!r} already registered")
         sess = MoLeSession.create(
@@ -334,6 +367,8 @@ class SessionRegistry(SlotRegistry):
             seed=self._resolve_seed(seed), core_mode=self.core_mode,
         )
         self._adopt(tenant_id, sess)
+        if weight != 1.0:
+            self.set_weight(tenant_id, weight)
         return sess
 
     def session(self, tenant_id: str) -> MoLeSession:

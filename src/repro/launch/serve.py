@@ -56,10 +56,26 @@ from repro.models.api import Model
 from repro.models.base import MoLeCfg
 
 
+def _weights_of(args, tenants: int) -> list[float]:
+    """--weights "2,1" cycled over the tenant count (all 1.0 by default)."""
+    ws = [float(w) for w in args.weights.split(",")]
+    if any(not w > 0 for w in ws):
+        raise SystemExit(f"--weights must be positive, got {args.weights}")
+    return [ws[i % len(ws)] for i in range(tenants)]
+
+
+def _priorities_of(args, requests: int) -> list[int]:
+    """--priority "0,1" cycled over the request count (all 0 by default)."""
+    ps = [int(p) for p in args.priority.split(",")]
+    return [ps[r % len(ps)] for r in range(requests)]
+
+
 def run_delivery(args) -> dict:
     """Serve image-delivery traffic for many tenants through the engine."""
     from repro.core import ConvGeometry, SessionRegistry
-    from repro.runtime import AsyncDeliveryEngine, MoLeDeliveryEngine
+    from repro.runtime import (
+        AsyncDeliveryEngine, DeliveryRequest, MoLeDeliveryEngine,
+    )
 
     rng = np.random.default_rng(args.seed)
     geom = ConvGeometry(alpha=args.channels, beta=args.out_channels,
@@ -70,28 +86,40 @@ def run_delivery(args) -> dict:
     capacity = args.capacity if args.capacity is not None else args.tenants
     registry = SessionRegistry(geom, kappa=args.kappa, capacity=capacity)
     fan_in = geom.alpha * geom.p * geom.p
+    weights = _weights_of(args, args.tenants)
     for i in range(args.tenants):
         kernels = rng.standard_normal(
             (geom.alpha, geom.beta, geom.p, geom.p)
         ).astype(np.float32) / np.sqrt(fan_in)
-        registry.register(f"tenant-{i}", kernels)
+        registry.register(f"tenant-{i}", kernels, weight=weights[i])
 
     engine = MoLeDeliveryEngine(registry, backend=args.backend or None)
+    priorities = _priorities_of(args, args.requests)
     requests = [
-        (f"tenant-{i % args.tenants}",
-         rng.standard_normal((args.batch, geom.alpha, geom.m, geom.m))
-         .astype(np.float32))
+        DeliveryRequest(
+            f"tenant-{i % args.tenants}",
+            rng.standard_normal((args.batch, geom.alpha, geom.m, geom.m))
+            .astype(np.float32),
+            priority=priorities[i], deadline_ms=args.deadline_ms,
+        )
         for i in range(args.requests)
     ]
 
     # Warm both paths so we time steady-state serving, not compilation: the
     # engine warmup replays the full request pattern so the timed flush hits
     # the exact (G, B) buckets already compiled.
-    for t, d in requests:
-        engine.submit(t, d)
+    for q in requests:
+        engine.submit(q)
     engine.flush()
-    for t, d in requests:
-        jax.block_until_ready(registry.session(t).deliver(jnp.asarray(d)))
+    for q in requests:
+        jax.block_until_ready(
+            registry.session(q.tenant_id).deliver(jnp.asarray(q.payload))
+        )
+    # Fresh stats so the report (latency quantiles, flush-phase timing)
+    # describes the timed run, not the warmup's compilation.
+    from repro.runtime import EngineStats
+
+    engine.stats = EngineStats()
 
     if args.use_async:
         front = AsyncDeliveryEngine(
@@ -99,22 +127,24 @@ def run_delivery(args) -> dict:
             max_inflight_rows=args.max_inflight_rows, admission=args.admission,
         )
         t0 = time.time()
-        futures = [(r, front.submit(t, d)) for r, (t, d) in enumerate(requests)]
-        feats = {r: f.result(timeout=120) for r, f in futures}
+        futures = [(r, front.submit(q)) for r, q in enumerate(requests)]
+        feats = {r: f.result(timeout=120).payload for r, f in futures}
         dt_engine = time.time() - t0
         rids = [r for r, _ in futures]
         front.close()
     else:
         t0 = time.time()
-        rids = [engine.submit(t, d) for t, d in requests]
+        rids = [engine.submit(q) for q in requests]
         engine.flush()
         feats = {r: engine.take(r) for r in rids}
         dt_engine = time.time() - t0
 
     t0 = time.time()
     base = [
-        np.asarray(registry.session(t).deliver(jnp.asarray(d)))
-        for t, d in requests
+        np.asarray(
+            registry.session(q.tenant_id).deliver(jnp.asarray(q.payload))
+        )
+        for q in requests
     ]
     dt_per_request = time.time() - t0
 
@@ -170,7 +200,9 @@ def run_lm(args) -> np.ndarray:
     bit-identical to the pre-engine single-``TokenMorpher`` path.
     """
     from repro.core.lm import LMSessionRegistry
-    from repro.runtime import AsyncDeliveryEngine, MoLeDeliveryEngine
+    from repro.runtime import (
+        AsyncDeliveryEngine, DeliveryRequest, MoLeDeliveryEngine,
+    )
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     use_mole = args.mole != "off"
@@ -197,11 +229,14 @@ def run_lm(args) -> np.ndarray:
         registry = LMSessionRegistry(
             cfg.vocab, embed.shape[1], capacity=capacity
         )
+        weights = _weights_of(args, tenants)
         for i in range(tenants):
             # Tenant lm-0 draws the same secret as the pre-engine single-
             # morpher path (seed = cfg.mole.seed), so --tenants 1 reproduces
             # it bit-for-bit; other tenants offset the seed.
-            registry.register(f"lm-{i}", embed, seed=cfg.mole.seed + i)
+            registry.register(
+                f"lm-{i}", embed, seed=cfg.mole.seed + i, weight=weights[i]
+            )
         engine = MoLeDeliveryEngine(
             lm_registry=registry, backend=args.backend or None,
             # Make --prompt-len itself a seq bucket: any prompt length is
@@ -211,6 +246,14 @@ def run_lm(args) -> np.ndarray:
                 sorted({8, 16, 32, 64, 128, 256, 512, args.prompt_len})
             ),
         )
+        priorities = _priorities_of(args, args.requests)
+        prompt_reqs = [
+            DeliveryRequest(
+                tenant_of[r], raw_prompts[r : r + 1], lane="tokens",
+                priority=priorities[r], deadline_ms=args.deadline_ms,
+            )
+            for r in range(args.requests)
+        ]
         t0 = time.time()
         if args.use_async:
             front = AsyncDeliveryEngine(
@@ -218,19 +261,13 @@ def run_lm(args) -> np.ndarray:
                 max_inflight_rows=args.max_inflight_rows,
                 admission=args.admission,
             )
-            futures = [
-                front.submit_tokens(tenant_of[r], raw_prompts[r : r + 1])
-                for r in range(args.requests)
-            ]
+            futures = [front.submit(q) for q in prompt_reqs]
             served_prompts = np.concatenate(
-                [f.result(timeout=120) for f in futures], axis=0
+                [f.result(timeout=120).payload for f in futures], axis=0
             )
             front.close()
         else:
-            rids = [
-                engine.submit_tokens(tenant_of[r], raw_prompts[r : r + 1])
-                for r in range(args.requests)
-            ]
+            rids = [engine.submit(q) for q in prompt_reqs]
             engine.flush()
             served_prompts = np.concatenate(
                 [engine.take(r) for r in rids], axis=0
@@ -340,6 +377,9 @@ _ENGINE_ONLY = {
     "--admission": ("admission", "block"),
     "--capacity": ("capacity", None),
     "--stats": ("stats", False),
+    "--weights": ("weights", "1"),
+    "--priority": ("priority", "0"),
+    "--deadline-ms": ("deadline_ms", None),
 }
 
 
@@ -371,7 +411,21 @@ def main(argv=None):
                          "same cost)")
     ap.add_argument("--stats", action="store_true", default=None,
                     help="print the engine stats summary after the run "
-                         "(flush-phase p50/p95, submit stalls, latency)")
+                         "(flush-phase p50/p95, per-priority latency, "
+                         "admission accounting, WFQ lag, submit stalls)")
+    ap.add_argument("--weights", default=None, metavar="W0,W1,...",
+                    help="per-tenant WFQ weights, cycled over the tenant "
+                         "count (default: every tenant weight 1); a weight-2 "
+                         "tenant receives ~2x a weight-1 tenant's rows "
+                         "under saturation")
+    ap.add_argument("--priority", default=None, metavar="P0,P1,...",
+                    help="per-request priorities, cycled over the request "
+                         "count (default 0; higher dequeues first within a "
+                         "tenant) — --stats splits latency per priority")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline put on every DeliveryRequest "
+                         "(overrides --max-delay-ms per request; requires "
+                         "--async)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     # vision-delivery-only options (error under --mode lm)
@@ -417,6 +471,10 @@ def main(argv=None):
                     f"{flag} requires the delivery engine, which --mole off "
                     f"disables"
                 )
+    # --deadline-ms arms the async flusher's per-request deadlines; without
+    # --async nothing ever reads it — error, not a silent no-op.
+    if args.deadline_ms is not None and not args.use_async:
+        ap.error("--deadline-ms requires --async (the deadline flusher)")
     for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY):
         for dest, default in table.values():
             if getattr(args, dest) is None:

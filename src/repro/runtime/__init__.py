@@ -1,23 +1,27 @@
 """Serving/fault-tolerance runtime.
 
+  api           typed front door: DeliveryRequest / DeliveryResult descriptors
   engine        batched multi-tenant MoLe delivery engine (morph + Aug-Conv)
   async_engine  async front door: deadline flusher, latency SLOs, admission
-  queue         request queue + padded-microbatch coalescing
+  queue         weighted-fair request queues + padded-microbatch coalescing
   resilience    resilient loop, failure injection, stragglers
 """
+from .api import DeliveryRequest, DeliveryResult
 from .async_engine import AdmissionError, AsyncDeliveryEngine
 from .engine import EngineStats, MoLeDeliveryEngine, delivery_trace_count
-from .queue import DeliveryRequest, Microbatch, RequestQueue, TokenQueue
+from .queue import Microbatch, QueuedRequest, RequestQueue, TokenQueue
 from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
 
 __all__ = [
     "AdmissionError",
     "AsyncDeliveryEngine",
+    "DeliveryRequest",
+    "DeliveryResult",
     "EngineStats",
     "MoLeDeliveryEngine",
     "delivery_trace_count",
-    "DeliveryRequest",
     "Microbatch",
+    "QueuedRequest",
     "RequestQueue",
     "TokenQueue",
     "FailureInjector",

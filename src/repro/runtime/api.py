@@ -1,0 +1,246 @@
+"""Typed delivery front door: request/response descriptors for the engine.
+
+Every lane of the delivery plane — vision rows, LM tokens, continuous LM
+features — is addressed through one request type:
+
+  * :class:`DeliveryRequest` — a frozen descriptor (tenant, payload, lane,
+    delivery mode, priority, optional per-request deadline, metadata) that is
+    **validated and normalized exactly once**, here, before it reaches a
+    queue.  The engine front doors (``MoLeDeliveryEngine.submit`` /
+    ``AsyncDeliveryEngine.submit``) accept it directly; the legacy
+    lane-specific trio (``submit``/``submit_tokens``/``submit_features`` with
+    positional tenant+payload) remains as deprecated shims that build one of
+    these.
+  * :class:`DeliveryResult` — the response: the delivered payload plus the
+    per-request trace (submit/complete timestamps, queue depth at admission,
+    priority) that the scheduling layer accounts against.
+
+Scheduling semantics carried by the descriptor:
+
+  * ``priority`` orders requests **within** a tenant (higher first, FIFO
+    within a priority level) when the weighted-fair-queueing coalescer builds
+    microbatches (``repro.runtime.queue``).
+  * ``deadline_ms`` overrides the async front door's engine-wide
+    ``max_delay_ms`` for this request only: a tighter deadline pulls the
+    background flush forward, a looser one lets this request wait longer
+    (the sync engine flushes on demand and ignores it).
+  * Cross-tenant shares come from per-tenant *weights* on the registry
+    (``SlotRegistry.set_weight`` / ``register(..., weight=)``), not from the
+    request — a tenant must not be able to grant itself more of the fleet.
+
+This module owns descriptor validation so the engines never grow back a
+per-lane method cross-product; it deliberately imports nothing from
+``repro.runtime.engine`` (the engine imports *us*).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.d2r import unroll_batch
+
+__all__ = ["DeliveryRequest", "DeliveryResult", "LANES", "DELIVER_MODES"]
+
+
+def warn_deprecated_shim(owner: str, old: str, new: str) -> None:
+    """One deprecation warning per legacy front-door call site (shared by the
+    sync and async engines so the wording/stacklevel cannot drift)."""
+    warnings.warn(
+        f"{owner}.{old} is deprecated; build a typed "
+        f"repro.runtime.DeliveryRequest and call {new}",
+        DeprecationWarning,
+        # here (1) -> the module-local _warn_shim (2) -> the shim method (3)
+        # -> the user's deprecated call site (4)
+        stacklevel=4,
+    )
+
+LANES = ("rows", "tokens", "features")
+DELIVER_MODES = ("tokens", "embed")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DeliveryRequest:
+    """One tenant's typed ask against the delivery plane.
+
+    Parameters
+    ----------
+    tenant_id:
+        Registered tenant the payload belongs to (its secrets morph it).
+    payload:
+        ``lane="rows"``: images ``(b, alpha, m, m)`` or rows ``(b, F_in)``;
+        ``lane="tokens"``: int token sequences ``(b, L)``;
+        ``lane="features"``: per-position features ``(b, L, d_in)`` or rows
+        ``(n, d_in)``.
+    lane:
+        Which delivery lane serves the payload: ``"rows"`` (vision),
+        ``"tokens"`` (LM discrete), ``"features"`` (LM continuous).
+    deliver:
+        Tokens lane only — ``"tokens"`` redeems the morphed tokens,
+        ``"embed"`` additionally runs the developer-side Aug-Embedding.
+    priority:
+        Within-tenant scheduling priority (higher dequeues first; FIFO
+        within a level).  Does **not** buy share across tenants.
+    deadline_ms:
+        Per-request completion-deadline budget for the async front door; None
+        defers to the engine-wide ``max_delay_ms``.
+    metadata:
+        Opaque caller annotations, carried through to the
+        :class:`DeliveryResult` untouched.
+    """
+
+    tenant_id: str
+    payload: Any
+    lane: str = "rows"
+    deliver: str = "tokens"
+    priority: int = 0
+    deadline_ms: float | None = None
+    metadata: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.lane not in LANES:
+            raise ValueError(f"lane must be one of {LANES}, got {self.lane!r}")
+        if self.deliver not in DELIVER_MODES:
+            raise ValueError(
+                f"deliver must be one of {DELIVER_MODES}, got {self.deliver!r}"
+            )
+        if self.lane != "tokens" and self.deliver != "tokens":
+            raise ValueError(
+                f"deliver={self.deliver!r} only applies to lane='tokens' "
+                f"(got lane={self.lane!r})"
+            )
+        if isinstance(self.priority, bool) or not isinstance(self.priority, int):
+            raise ValueError(f"priority must be an int, got {self.priority!r}")
+        if self.deadline_ms is not None:
+            dl = float(self.deadline_ms)
+            if not dl > 0:
+                raise ValueError(
+                    f"deadline_ms must be positive (or None), got {dl}"
+                )
+            object.__setattr__(self, "deadline_ms", dl)
+        # Snapshot the caller's mapping: the descriptor is frozen, its
+        # metadata should be too (a shared mutable dict would alias state
+        # across the trust boundary of the queue).
+        object.__setattr__(self, "metadata", dict(self.metadata))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DeliveryResult:
+    """A completed request: the delivered payload + its scheduling trace."""
+
+    request_id: int
+    tenant_id: str
+    lane: str
+    deliver: str
+    priority: int
+    payload: np.ndarray
+    submitted_at: float          # time.monotonic() at admission
+    completed_at: float          # time.monotonic() when a flush published it
+    queue_depth_at_submit: int   # engine-wide pending rows just before enqueue
+    metadata: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def latency_ms(self) -> float:
+        """Admission-to-publication latency of this request."""
+        return (self.completed_at - self.submitted_at) * 1e3
+
+
+# ---------------------------------------------------------------------------
+# normalization: one validation point for every lane
+# ---------------------------------------------------------------------------
+
+def _normalize_rows(engine, req: DeliveryRequest) -> np.ndarray:
+    reg = engine.registry
+    if reg is None:
+        raise ValueError("engine has no vision registry")
+    if req.tenant_id not in reg:
+        raise KeyError(f"unknown tenant {req.tenant_id!r}")
+    data = np.asarray(req.payload, np.float32)
+    g = reg.geom
+    if data.ndim == 4:
+        if data.shape[1:] != (g.alpha, g.m, g.m):
+            raise ValueError(
+                f"expected images (b, {g.alpha}, {g.m}, {g.m}), got {data.shape}"
+            )
+        return np.asarray(unroll_batch(data))
+    if data.ndim == 2:
+        return data
+    raise ValueError(f"expected rank-2 rows or rank-4 images, got {data.shape}")
+
+
+def _normalize_tokens(engine, req: DeliveryRequest) -> np.ndarray:
+    reg = engine.lm_registry
+    if reg is None:
+        raise ValueError("engine has no LM registry")
+    if req.tenant_id not in reg:
+        raise KeyError(f"unknown LM tenant {req.tenant_id!r}")
+    tokens = np.asarray(req.payload)
+    if tokens.ndim != 2 or not np.issubdtype(tokens.dtype, np.integer):
+        raise ValueError(
+            f"expected int tokens of shape (b, L), got {tokens.dtype} "
+            f"{tokens.shape}"
+        )
+    max_seq = engine.seq_buckets[-1]
+    if tokens.shape[1] > max_seq:
+        raise ValueError(
+            f"sequence length {tokens.shape[1]} exceeds the largest "
+            f"seq bucket {max_seq}; construct the engine with larger "
+            f"seq_buckets (or split the request)"
+        )
+    v = reg.vocab
+    if tokens.size and (tokens.min() < 0 or tokens.max() >= v):
+        raise ValueError(f"token ids out of range [0, {v})")
+    return tokens.astype(np.int32)
+
+
+def _normalize_features(engine, req: DeliveryRequest) -> np.ndarray:
+    if engine.embed_queue is None:
+        raise ValueError("engine's LM registry has no continuous lane")
+    if req.tenant_id not in engine.lm_registry:
+        raise KeyError(f"unknown LM tenant {req.tenant_id!r}")
+    data = np.asarray(req.payload, np.float32)
+    d_in = engine.lm_registry.d_in
+    if data.ndim not in (2, 3) or data.shape[-1] != d_in:
+        raise ValueError(
+            f"expected (..., {d_in}) features with rank 2 or 3, got {data.shape}"
+        )
+    return data
+
+
+_NORMALIZERS = {
+    "rows": _normalize_rows,
+    "tokens": _normalize_tokens,
+    "features": _normalize_features,
+}
+
+
+def normalize(request: DeliveryRequest, engine) -> DeliveryRequest:
+    """Validate ``request`` against ``engine``'s registries and return a copy
+    whose payload is the canonical ndarray its lane's queue stores.
+
+    Pure per-request work with no engine-state mutation — the async front
+    door runs it **outside** its lock so payload conversion never serializes
+    submitters.  Lane/deliver/priority/deadline fields were already checked
+    by the descriptor itself; this adds the engine-dependent payload checks
+    (registry present, tenant known, shape/dtype/range valid).
+    """
+    if not isinstance(request, DeliveryRequest):
+        raise TypeError(
+            f"expected a DeliveryRequest, got {type(request).__name__} "
+            f"(the tenant_id+payload calling convention is served by the "
+            f"deprecated submit(tenant_id, data) shims)"
+        )
+    payload = _NORMALIZERS[request.lane](engine, request)
+    return dataclasses.replace(request, payload=payload)
+
+
+def admission_rows(request: DeliveryRequest) -> int:
+    """Rows a *normalized* request occupies for admission/quota accounting
+    (images for rows, sequences for tokens, positions for features)."""
+    if request.lane == "features":
+        return int(
+            request.payload.reshape(-1, request.payload.shape[-1]).shape[0]
+        )
+    return int(request.payload.shape[0])

@@ -5,17 +5,24 @@ drains everything, so one slow tenant (or a caller that simply hasn't called
 ``flush`` yet) stalls the microbatch clock for everyone.  This module puts a
 latency-SLO'd, admission-controlled front door over it:
 
-  * **Background flusher** — a daemon thread owns all engine access; callers
-    get a ``concurrent.futures.Future`` per request and never touch jax.
-  * **Deadline-driven flushing** — a flush fires when the *oldest* pending
-    request has waited ``max_delay_ms`` (the latency SLO knob), or earlier
-    when enough rows have accumulated to fill a microbatch
-    (``flush_rows``) — throughput batching with a bounded wait.
+  * **Typed front door** — :meth:`AsyncDeliveryEngine.submit` takes the same
+    :class:`repro.runtime.DeliveryRequest` as the sync engine (any lane) and
+    returns a ``concurrent.futures.Future`` resolving to a
+    :class:`repro.runtime.DeliveryResult`; callers never touch jax.  The
+    legacy lane-specific trio remains as deprecated shims whose futures
+    resolve to the bare payload (bit-identical to before).
+  * **Background flusher** — a daemon thread owns all engine access.
+  * **Deadline-driven flushing** — a flush fires when any pending request
+    reaches its deadline: per-request ``DeliveryRequest.deadline_ms`` when
+    given, the engine-wide ``max_delay_ms`` SLO otherwise — or earlier when
+    enough rows have accumulated to fill a microbatch (``flush_rows``).
   * **Per-tenant admission control** — at most ``max_inflight_rows`` rows per
     tenant may be in flight (submitted, not yet completed).  Beyond quota,
     ``admission="block"`` applies backpressure (the submitting thread waits),
     ``admission="reject"`` raises :class:`AdmissionError` immediately — a
     misbehaving tenant is throttled without stalling anyone else's clock.
+    Both outcomes land in ``EngineStats`` per tenant
+    (``rejected_by_tenant`` / ``blocked_by_tenant``).
   * **Double-buffered flushing** — a flush is three engine phases
     (``begin_flush`` coalesce / ``execute_flush`` device / ``publish_flush``
     scatter) and the flusher holds ``self._cv`` only for the first and last:
@@ -24,15 +31,17 @@ latency-SLO'd, admission-controlled front door over it:
     into the now-empty queues.  Submit latency no longer scales with flush
     duration (``EngineStats.submit_stalls`` + submit-wait quantiles make
     that observable).
-  * **Latency accounting** — submit→result completion latency lands in
-    ``EngineStats`` (``p50_ms`` / ``p95_ms`` over a sliding window), along
-    with per-phase flush timing (coalesce/device/publish p50/p95).
+  * **Latency accounting** — submit→publish completion latency lands in
+    ``EngineStats`` (``p50_ms`` / ``p95_ms`` over a sliding window, split per
+    request priority), along with per-phase flush timing
+    (coalesce/device/publish p50/p95).
 
 Thread-safety contract: the wrapped engine/queue/registry are only ever
-touched while ``self._cv`` is held (by submitters for ``engine.submit``, by
-the flusher for ``begin_flush``/``publish_flush``/``take``) — except
+touched while ``self._cv`` is held (by submitters for the engine enqueue, by
+the flusher for ``begin_flush``/``publish_flush``/``take_result``) — except
 ``execute_flush``, which by design touches only its work items and immutable
-plan snapshots.  Future callbacks fire outside the lock.
+plan snapshots.  Request normalization (payload validation/conversion) runs
+*outside* the lock.  Future callbacks fire outside the lock.
 """
 from __future__ import annotations
 
@@ -43,6 +52,8 @@ from concurrent.futures import Future
 
 from repro.core.protocol import SlotRegistry
 
+from . import api
+from .api import DeliveryRequest
 from .engine import MoLeDeliveryEngine
 
 __all__ = ["AdmissionError", "AsyncDeliveryEngine"]
@@ -50,6 +61,10 @@ __all__ = ["AdmissionError", "AsyncDeliveryEngine"]
 
 class AdmissionError(RuntimeError):
     """A tenant exceeded its in-flight row quota under ``admission="reject"``."""
+
+
+def _warn_shim(old: str, new: str) -> None:
+    api.warn_deprecated_shim("AsyncDeliveryEngine", old, new)
 
 
 class AsyncDeliveryEngine:
@@ -61,15 +76,14 @@ class AsyncDeliveryEngine:
         A :class:`MoLeDeliveryEngine` or any :class:`SlotRegistry` —
         vision ``SessionRegistry`` or ``LMSessionRegistry`` (a default
         engine is built around a bare registry; extra ``engine_kwargs``
-        pass through).  Vision and LM
-        tenants share the one front door: :meth:`submit` takes image
-        payloads, :meth:`submit_tokens` / :meth:`submit_features` take LM
-        payloads, and all three share the deadline flusher and the
-        per-tenant admission quota.
+        pass through).  Vision and LM tenants share the one front door:
+        :meth:`submit` takes a :class:`DeliveryRequest` for any lane, and
+        every lane shares the deadline flusher and the per-tenant admission
+        quota.
     max_delay_ms:
-        Latency SLO: the flusher guarantees a flush starts within this long
-        of any request's submission, so completion latency is bounded by
-        ``max_delay_ms`` + one flush's compute time.
+        Engine-wide latency SLO: a flush starts within this long of any
+        request's submission unless that request carried its own (tighter or
+        looser) ``deadline_ms``.
     flush_rows:
         Flush early once this many rows are pending (default: one full
         microbatch, ``max_rows * largest group bucket``).
@@ -113,10 +127,13 @@ class AsyncDeliveryEngine:
         self._cv = threading.Condition()
         self._resolving = 0  # futures popped by the flusher, not yet resolved
         self._futures: dict[int, Future] = {}
+        self._unwrap: dict[int, bool] = {}  # rid -> resolve to bare payload?
         self._submitted_at: dict[int, float] = {}
-        # Min-heap of (submit_time, rid): the oldest pending deadline is a
-        # peek instead of an O(n) scan on every flusher wake.  Entries whose
-        # rid left _submitted_at are stale and lazily popped.
+        # Min-heap of (deadline, rid): the next due deadline is a peek
+        # instead of an O(n) scan on every flusher wake.  Deadlines are
+        # absolute times — per-request ``deadline_ms`` when the descriptor
+        # carried one, submit time + ``max_delay_ms`` otherwise.  Entries
+        # whose rid left _submitted_at are stale and lazily popped.
         self._deadline_heap: list[tuple[float, int]] = []
         self._rid_tenant: dict[int, tuple[str, int]] = {}  # rid -> (tenant, rows)
         self._inflight_rows: dict[str, int] = {}
@@ -141,13 +158,30 @@ class AsyncDeliveryEngine:
         with self._cv:
             return len(self._futures)
 
-    def _admit(self, tenant_id: str, n_rows: int, enqueue) -> Future:
-        """Shared admission path: quota-gate ``enqueue()`` under the lock.
+    def prefetch(self, tenant_ids) -> dict[str, int]:
+        """Activate tenants' slots + stage their secrets now (see
+        :meth:`MoLeDeliveryEngine.prefetch`).
 
-        ``enqueue`` performs the actual (lane-specific) engine submit and
-        returns a request id; rows are the admission unit in every lane
-        (images for vision, sequences for tokens, positions for features).
+        Runs under the front-door lock: slot assignment and the plan patch
+        mutate engine state the flusher also touches.  The win is moving the
+        host->device copy out of the *flush deadline path* (where it would
+        add to every coalesced request's latency) to a moment the caller
+        chose — submitters do block for the staging itself, so prefetch in
+        traffic lulls; a fully off-lock staging pipeline would need
+        double-buffered plans and is not worth it until profiles say so.
         """
+        with self._cv:
+            return self.engine.prefetch(tenant_ids)
+
+    def _admit(self, req: DeliveryRequest, *, unwrap: bool) -> Future:
+        """Admission path: quota-gate the engine enqueue under the lock.
+
+        ``req`` is already normalized (outside the lock); rows are the
+        admission unit in every lane (images for vision, sequences for
+        tokens, positions for features).
+        """
+        tenant_id = req.tenant_id
+        n_rows = api.admission_rows(req)
         t_req = time.monotonic()
         with self._cv:
             # Lock-acquisition wait is the submit-stall observable: with the
@@ -163,32 +197,44 @@ class AsyncDeliveryEngine:
                 # Larger than the quota itself: no amount of flushing can
                 # ever admit it — blocking would deadlock, so always reject.
                 self.engine.stats.rejected += 1
+                self.engine.stats.rejected_by_tenant[tenant_id] += 1
                 raise AdmissionError(
                     f"request of {n_rows} rows exceeds the per-tenant quota "
                     f"of {self.max_inflight_rows} outright; split it"
                 )
+            blocked = False
             while (
                 self._inflight_rows.get(tenant_id, 0) + n_rows
                 > self.max_inflight_rows
             ):
                 if self.admission == "reject":
                     self.engine.stats.rejected += 1
+                    self.engine.stats.rejected_by_tenant[tenant_id] += 1
                     raise AdmissionError(
                         f"tenant {tenant_id!r} over quota: "
                         f"{self._inflight_rows.get(tenant_id, 0)} rows in "
                         f"flight + {n_rows} submitted > "
                         f"{self.max_inflight_rows} allowed"
                     )
+                if not blocked:
+                    blocked = True
+                    self.engine.stats.blocked += 1
+                    self.engine.stats.blocked_by_tenant[tenant_id] += 1
                 self._cv.wait()
                 if self._closed:
                     raise RuntimeError("AsyncDeliveryEngine is closed")
-            rid = enqueue()
+            rid = self.engine._enqueue_normalized(req)
             fut: Future = Future()
             fut.request_id = rid  # engine request id, for tracing/tests
             self._futures[rid] = fut
+            self._unwrap[rid] = unwrap
             now = time.monotonic()
             self._submitted_at[rid] = now
-            heapq.heappush(self._deadline_heap, (now, rid))
+            delay_s = (
+                req.deadline_ms if req.deadline_ms is not None
+                else self.max_delay_ms
+            ) / 1e3
+            heapq.heappush(self._deadline_heap, (now + delay_s, rid))
             self._rid_tenant[rid] = (tenant_id, n_rows)
             self._inflight_rows[tenant_id] = (
                 self._inflight_rows.get(tenant_id, 0) + n_rows
@@ -196,49 +242,73 @@ class AsyncDeliveryEngine:
             self._cv.notify_all()  # wake the flusher: new deadline / bucket
             return fut
 
-    def submit(self, tenant_id: str, data) -> Future:
-        """Enqueue one vision tenant request; the Future resolves to features
-        ``(b, beta, n, n)`` once a deadline/bucket flush completes it."""
-        # Payload validation/unrolling is pure per-request work — do it
-        # before taking the lock so data prep never serializes submitters.
-        rows = self.engine.prepare_rows(tenant_id, data)
-        return self._admit(
-            tenant_id, rows.shape[0],
-            lambda: self.engine._enqueue_rows(tenant_id, rows),
-        )
+    def _submit_request(self, request: DeliveryRequest, *,
+                        unwrap: bool = False) -> Future:
+        # Normalization (payload validation/conversion) is pure per-request
+        # work — run it before taking the lock so it never serializes
+        # submitters.
+        return self._admit(api.normalize(request, self.engine), unwrap=unwrap)
+
+    def submit(self, request: DeliveryRequest | str, data=None) -> Future:
+        """Enqueue one :class:`DeliveryRequest` (any lane); the Future
+        resolves to a :class:`repro.runtime.DeliveryResult` once a
+        deadline/bucket flush completes it.
+
+        The legacy ``submit(tenant_id, data)`` spelling still works as a
+        deprecated vision-lane shim whose future resolves to the bare
+        payload, exactly as before.
+        """
+        if isinstance(request, DeliveryRequest):
+            if data is not None:
+                raise TypeError(
+                    "submit(request) takes no second argument — put the "
+                    "payload on the DeliveryRequest"
+                )
+            return self._submit_request(request)
+        _warn_shim("submit(tenant_id, data)", "submit(request)")
+        return self._submit_request(DeliveryRequest(request, data), unwrap=True)
 
     def submit_tokens(
         self, tenant_id: str, tokens, *, deliver: str = "tokens"
     ) -> Future:
-        """Enqueue one LM token request ``(b, L)``; the Future resolves to
-        morphed tokens (``deliver="tokens"``) or Aug-embedded features
-        (``deliver="embed"``) — same semantics as the sync engine."""
-        if deliver not in ("tokens", "embed"):
-            raise ValueError(f"deliver must be 'tokens' or 'embed', got {deliver!r}")
-        toks = self.engine.prepare_tokens(tenant_id, tokens)
-        return self._admit(
-            tenant_id, toks.shape[0],
-            lambda: self.engine._enqueue_tokens(tenant_id, toks, deliver),
+        """Deprecated: submit a ``DeliveryRequest(lane="tokens")`` instead."""
+        _warn_shim("submit_tokens", "submit(request)")
+        return self._submit_request(
+            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver),
+            unwrap=True,
         )
 
     def submit_features(self, tenant_id: str, data) -> Future:
-        """Enqueue one continuous-LM request (per-position feature rows)."""
-        rows = self.engine.prepare_features(tenant_id, data)
-        n_rows = rows.reshape(-1, rows.shape[-1]).shape[0]
-        return self._admit(
-            tenant_id, n_rows,
-            lambda: self.engine._enqueue_features(tenant_id, rows),
+        """Deprecated: submit a ``DeliveryRequest(lane="features")`` instead."""
+        _warn_shim("submit_features", "submit(request)")
+        return self._submit_request(
+            DeliveryRequest(tenant_id, data, lane="features"), unwrap=True
         )
 
-    def deliver(self, tenant_id: str, data, timeout: float | None = None):
-        """Synchronous convenience: submit and wait for the features."""
-        return self.submit(tenant_id, data).result(timeout=timeout)
+    def deliver(self, request: DeliveryRequest | str, data=None,
+                timeout: float | None = None):
+        """Synchronous convenience: submit and wait for the
+        :class:`DeliveryResult` (legacy tenant+payload spelling: the bare
+        payload, deprecated)."""
+        if isinstance(request, DeliveryRequest):
+            if data is not None:
+                raise TypeError(
+                    "deliver(request) takes no second argument — put the "
+                    "payload on the DeliveryRequest"
+                )
+            return self._submit_request(request).result(timeout=timeout)
+        _warn_shim("deliver(tenant_id, data)", "deliver(request)")
+        return self._submit_request(
+            DeliveryRequest(request, data), unwrap=True
+        ).result(timeout=timeout)
 
     def deliver_tokens(self, tenant_id: str, tokens, *,
                        deliver: str = "tokens", timeout: float | None = None):
-        """Synchronous convenience: submit tokens and wait for the result."""
-        return self.submit_tokens(
-            tenant_id, tokens, deliver=deliver
+        """Deprecated: ``deliver(DeliveryRequest(lane="tokens"))`` instead."""
+        _warn_shim("deliver_tokens", "deliver(request)")
+        return self._submit_request(
+            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver),
+            unwrap=True,
         ).result(timeout=timeout)
 
     def flush_now(self) -> None:
@@ -288,13 +358,16 @@ class AsyncDeliveryEngine:
     def _oldest_deadline(self) -> float | None:
         # Peek the deadline heap, lazily discarding entries whose request
         # already completed (rid no longer in _submitted_at) — amortized
-        # O(log n) per request instead of an O(n) min-scan per wake.
+        # O(log n) per request instead of an O(n) min-scan per wake.  The
+        # heap holds absolute per-request deadlines, so a request submitted
+        # with a tight ``deadline_ms`` surfaces ahead of older requests
+        # running on the engine-wide SLO.
         heap = self._deadline_heap
         while heap and heap[0][1] not in self._submitted_at:
             heapq.heappop(heap)
         if not heap:
             return None
-        return heap[0][0] + self.max_delay_ms / 1e3
+        return heap[0][0]
 
     def _should_flush(self, now: float) -> bool:
         if not self._futures:
@@ -357,13 +430,13 @@ class AsyncDeliveryEngine:
                     # into the failed work items.)
                     failed = [(f, error) for f in self._futures.values()]
                     self._futures.clear()
+                    self._unwrap.clear()
                     self._submitted_at.clear()
                     self._deadline_heap.clear()
                     self._rid_tenant.clear()
                     self._inflight_rows.clear()
                     self.engine.reset_pending()
                 else:
-                    now = time.monotonic()
                     for rid in done:
                         # A rid submitted to the sync engine directly (mixed
                         # API use) completes here too but is not ours to
@@ -371,13 +444,18 @@ class AsyncDeliveryEngine:
                         fut = self._futures.pop(rid, None)
                         if fut is None:
                             continue
-                        t0 = self._submitted_at.pop(rid)
+                        self._submitted_at.pop(rid)
                         tenant, n_rows = self._rid_tenant.pop(rid)
                         self._inflight_rows[tenant] -= n_rows
                         if not self._inflight_rows[tenant]:
                             del self._inflight_rows[tenant]
-                        self.engine.stats.record_latency_ms((now - t0) * 1e3)
-                        resolved.append((fut, self.engine.take(rid)))
+                        # Completion latency (p50/p95, split per priority)
+                        # was recorded by the engine at publish time.
+                        result = self.engine.take_result(rid)
+                        resolved.append((
+                            fut,
+                            result.payload if self._unwrap.pop(rid) else result,
+                        ))
                 self._resolving += len(resolved) + len(failed)
             # Resolve outside the lock: user callbacks must not deadlock us.
             # set_running_or_notify_cancel() guards against futures the

@@ -59,6 +59,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import logging
 import time
 from functools import partial
 from typing import Callable
@@ -67,7 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.d2r import reroll_batch, unroll_batch
+from repro.core.d2r import reroll_batch
 from repro.core.lm import LMSessionRegistry
 from repro.core.protocol import SessionRegistry
 from repro.kernels.dispatch import resolve_backend
@@ -79,7 +80,16 @@ from repro.kernels.ops import (
 )
 from repro.sharding.hints import hint
 
+from . import api
+from .api import DeliveryRequest, DeliveryResult
+
 __all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
+
+_log = logging.getLogger(__name__)
+
+
+def _warn_shim(old: str, new: str) -> None:
+    api.warn_deprecated_shim("MoLeDeliveryEngine", old, new)
 
 
 def _window_quantile(xs, q: float) -> float:
@@ -88,6 +98,17 @@ def _window_quantile(xs, q: float) -> float:
     xs = sorted(xs)
     idx = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
     return xs[idx]
+
+
+def _fmt_num(x: float, nd: int = 2) -> str:
+    """Quantile for summary(): 'n/a' instead of 'nan' when nothing was
+    recorded, so an idle engine's stats dump stays readable."""
+    return "n/a" if x != x else f"{x:.{nd}f}"
+
+
+def _fmt_ms(x: float) -> str:
+    v = _fmt_num(x)
+    return v if v == "n/a" else v + "ms"
 
 
 # Flush phases timed by the engine; EngineStats keeps one reservoir each.
@@ -102,24 +123,45 @@ class EngineStats:
     microbatches: int = 0
     flushes: int = 0
     rejected: int = 0           # requests refused by admission control
+    blocked: int = 0            # submits that waited on quota backpressure
+    # Padding groups whose slot index hit the clamp bound during coalescing:
+    # such groups read a real tenant's secrets with all-zero rows (harmless,
+    # sliced away) but signal a sparse-table layout CPU serving pays for.
+    padding_clamp_count: int = 0
     # Submits whose front-door lock wait exceeded stall_threshold_ms: the
     # observable for "the flusher holds the lock across device execution".
     submit_stalls: int = 0
     stall_threshold_ms: float = 1.0
     bucket_shapes: set = dataclasses.field(default_factory=set)
-    # Completion latencies (ms), submit -> result, recorded by the async
-    # front door.  Bounded reservoir: keeps the most recent window so p50/p95
-    # reflect current traffic, not the whole process lifetime.
+    # Per-tenant admission accounting: how often each tenant was refused
+    # (admission="reject") or backpressured (admission="block").
+    rejected_by_tenant: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
+    blocked_by_tenant: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
+    # Completion latencies (ms), submit -> publish, recorded by the engine at
+    # publish_flush (and split per request priority when one was given).
+    # Bounded reservoir: keeps the most recent window so p50/p95 reflect
+    # current traffic, not the whole process lifetime.
     latency_window: int = 4096
     _latencies_ms: collections.deque = dataclasses.field(default=None)
+    _latencies_by_priority: dict = dataclasses.field(default=None)
     # Per-flush phase durations (FLUSH_PHASES) + per-submit lock waits, same
     # sliding-window reservoirs.
     _phases_ms: dict = dataclasses.field(default=None)
     _submit_wait_ms: collections.deque = dataclasses.field(default=None)
+    # WFQ virtual-time lag (max - min across backlogged tenants) sampled at
+    # every begin_flush: persistent lag means some tenant is being served far
+    # ahead of another relative to its weighted share.
+    _wfq_lag: collections.deque = dataclasses.field(default=None)
 
     def __post_init__(self):
         if self._latencies_ms is None:
             self._latencies_ms = collections.deque(maxlen=self.latency_window)
+        if self._latencies_by_priority is None:
+            self._latencies_by_priority = {}
         if self._phases_ms is None:
             self._phases_ms = {
                 p: collections.deque(maxlen=self.latency_window)
@@ -129,19 +171,38 @@ class EngineStats:
             self._submit_wait_ms = collections.deque(
                 maxlen=self.latency_window
             )
+        if self._wfq_lag is None:
+            self._wfq_lag = collections.deque(maxlen=self.latency_window)
 
     @property
     def padding_fraction(self) -> float:
         total = self.rows_in + self.rows_padded
         return self.rows_padded / total if total else 0.0
 
-    def record_latency_ms(self, ms: float) -> None:
+    def record_latency_ms(self, ms: float, priority: int | None = None) -> None:
         self._latencies_ms.append(float(ms))
+        if priority is not None:
+            bucket = self._latencies_by_priority.get(priority)
+            if bucket is None:
+                bucket = self._latencies_by_priority[priority] = (
+                    collections.deque(maxlen=self.latency_window)
+                )
+            bucket.append(float(ms))
 
-    def latency_quantile_ms(self, q: float) -> float:
+    def latency_quantile_ms(self, q: float, priority: int | None = None) -> float:
         """Empirical latency quantile in ms over the recent window (nan if
-        nothing has been recorded)."""
+        nothing has been recorded); ``priority`` restricts to requests
+        submitted at that priority level."""
+        if priority is not None:
+            return _window_quantile(
+                self._latencies_by_priority.get(priority, ()), q
+            )
         return _window_quantile(self._latencies_ms, q)
+
+    @property
+    def priorities_seen(self) -> tuple[int, ...]:
+        """Priority levels with recorded completion latencies (descending)."""
+        return tuple(sorted(self._latencies_by_priority, reverse=True))
 
     @property
     def p50_ms(self) -> float:
@@ -171,24 +232,52 @@ class EngineStats:
     def submit_wait_quantile_ms(self, q: float) -> float:
         return _window_quantile(self._submit_wait_ms, q)
 
+    # -- WFQ accounting -------------------------------------------------------
+    def record_wfq_lag(self, lag: float) -> None:
+        """Virtual-time spread across backlogged tenants, sampled per flush."""
+        self._wfq_lag.append(float(lag))
+
+    def wfq_lag_quantile(self, q: float) -> float:
+        return _window_quantile(self._wfq_lag, q)
+
     def summary(self) -> str:
-        """Multi-line human-readable dump (serve.py --stats)."""
+        """Multi-line human-readable dump (serve.py --stats).  Degrades
+        gracefully — quantiles with no samples print 'n/a', never 'nan'."""
         lines = [
             f"requests={self.requests} rows_in={self.rows_in} "
             f"microbatches={self.microbatches} flushes={self.flushes} "
-            f"rejected={self.rejected} padding={self.padding_fraction:.0%}",
-            f"completion latency: p50={self.p50_ms:.2f}ms "
-            f"p95={self.p95_ms:.2f}ms",
+            f"padding={self.padding_fraction:.0%} "
+            f"padding_clamps={self.padding_clamp_count}",
+            f"completion latency: p50={_fmt_ms(self.p50_ms)} "
+            f"p95={_fmt_ms(self.p95_ms)}",
         ]
+        for pr in self.priorities_seen:
+            lines.append(
+                f"  priority {pr:>3}: "
+                f"p50={_fmt_ms(self.latency_quantile_ms(0.5, priority=pr))} "
+                f"p95={_fmt_ms(self.latency_quantile_ms(0.95, priority=pr))}"
+            )
         for p in FLUSH_PHASES:
             lines.append(
-                f"flush {p:>8}: p50={self.phase_quantile_ms(p, 0.5):.2f}ms "
-                f"p95={self.phase_quantile_ms(p, 0.95):.2f}ms"
+                f"flush {p:>8}: p50={_fmt_ms(self.phase_quantile_ms(p, 0.5))} "
+                f"p95={_fmt_ms(self.phase_quantile_ms(p, 0.95))}"
             )
         lines.append(
-            f"submit wait: p50={self.submit_wait_quantile_ms(0.5):.3f}ms "
-            f"p95={self.submit_wait_quantile_ms(0.95):.3f}ms "
+            f"submit wait: p50={_fmt_ms(self.submit_wait_quantile_ms(0.5))} "
+            f"p95={_fmt_ms(self.submit_wait_quantile_ms(0.95))} "
             f"stalls(>{self.stall_threshold_ms:g}ms)={self.submit_stalls}"
+        )
+        admission = (
+            f"admission: rejected={self.rejected} blocked={self.blocked}"
+        )
+        if self.rejected_by_tenant:
+            admission += f" rejects_by_tenant={dict(self.rejected_by_tenant)}"
+        if self.blocked_by_tenant:
+            admission += f" blocks_by_tenant={dict(self.blocked_by_tenant)}"
+        lines.append(admission)
+        lines.append(
+            f"wfq virtual-time lag: p50={_fmt_num(self.wfq_lag_quantile(0.5))} "
+            f"p95={_fmt_num(self.wfq_lag_quantile(0.95))} rows/weight"
         )
         return "\n".join(lines)
 
@@ -265,6 +354,16 @@ class _WorkItem:
 
 
 @dataclasses.dataclass
+class _ReqInfo:
+    """Per-request scheduling trace, kept from admission to take_result."""
+
+    request: DeliveryRequest        # normalized descriptor
+    submitted_at: float             # time.monotonic() at enqueue
+    queue_depth_at_submit: int      # engine-wide pending rows before enqueue
+    completed_at: float | None = None   # set when a flush publishes the last row
+
+
+@dataclasses.dataclass
 class _FlushWork:
     """The coalesced work items one flush hands from phase to phase; holds
     everything execute_flush needs so it never touches mutable engine or
@@ -294,6 +393,17 @@ class MoLeDeliveryEngine:
     engine can serve either kind or a mixed fleet.  Passing an
     ``LMSessionRegistry`` as the positional ``registry`` is accepted and
     routed to the LM lane, so single-kind callers need not know two names.
+
+    **One typed front door.**  Every lane is addressed through
+    :meth:`submit`/:meth:`deliver` with a
+    :class:`repro.runtime.DeliveryRequest` (validated/normalized once in
+    ``runtime.api``); results redeem as bare payloads (:meth:`take`) or full
+    :class:`DeliveryResult` traces (:meth:`take_result`).  Scheduling is
+    weighted fair queueing: registry weights set cross-tenant shares,
+    ``DeliveryRequest.priority`` orders within a tenant, and
+    ``DeliveryRequest.deadline_ms`` drives the async flusher.  The legacy
+    ``submit_tokens``/``submit_features``/``prepare_*``/``deliver_*`` trio
+    survives as deprecated shims.
     """
 
     def __init__(
@@ -372,6 +482,7 @@ class MoLeDeliveryEngine:
         self._request_shape: dict[int, tuple[int, ...]] = {}
         self._token_deliver: dict[int, str] = {}   # rid -> "tokens" | "embed"
         self._embed_shape: dict[int, tuple[int, ...]] = {}
+        self._req_info: dict[int, _ReqInfo] = {}
         self._done: set[int] = set()
 
     @property
@@ -381,6 +492,38 @@ class MoLeDeliveryEngine:
         return sum(q.pending_rows for q in lanes if q is not None)
 
     # -- secrets ------------------------------------------------------------
+    def prefetch(self, tenant_ids) -> dict[str, int]:
+        """Activate tenants' slots and stage their secrets on device **now**,
+        off the serving critical path (ROADMAP "slot prefetch").
+
+        ``slot_for`` activates an evicted tenant lazily — but then the
+        host->device copy of its secrets lands inside the next flush's
+        coalesce phase.  Prefetching soon-to-be-active tenants moves that
+        copy to whenever the caller has slack.  Tenants are looked up in the
+        vision registry first, then the LM registry; activation order is the
+        given order, so prefetching more tenants than a registry has slots
+        keeps the **last** ``capacity`` of them resident (plain LRU).
+        Returns {tenant_id: slot}.
+        """
+        slots: dict[str, int] = {}
+        touched_vision = touched_lm = False
+        for t in tenant_ids:
+            if self.registry is not None and t in self.registry:
+                slots[t] = self.registry.slot_for(t)
+                touched_vision = True
+            elif self.lm_registry is not None and t in self.lm_registry:
+                slots[t] = self.lm_registry.slot_for(t)
+                touched_lm = True
+            else:
+                raise KeyError(f"unknown tenant {t!r}")
+        # Stage the patched slots to the device immediately: the next flush's
+        # plan re-sync then finds version already current and copies nothing.
+        if touched_vision:
+            self._refresh_plan()
+        if touched_lm:
+            self._refresh_lm_plan()
+        return slots
+
     def _refresh_plan(self) -> _Plan:
         reg = self.registry
         plan = _sync_plan(
@@ -418,137 +561,107 @@ class MoLeDeliveryEngine:
                     q.ensure_group_bucket(reg.capacity)
         return plan
 
-    # -- request intake ------------------------------------------------------
-    def prepare_rows(self, tenant_id: str, data) -> np.ndarray:
-        """Validate a vision request payload and unroll it to ``(b, F_in)``.
+    # -- request intake: the typed front door --------------------------------
+    def submit(self, request: DeliveryRequest | str, data=None) -> int:
+        """Enqueue one :class:`~repro.runtime.DeliveryRequest` (any lane).
 
-        Pure per-request data prep with no engine-state mutation — the async
-        front door runs it outside its lock so payload conversion never
-        serializes submitters.
+        Returns a request id redeemable after :meth:`flush` via
+        :meth:`take` / :meth:`take_result`.  The legacy
+        ``submit(tenant_id, data)`` calling convention still works as a
+        deprecated shim for the vision rows lane.
         """
-        if self.registry is None:
-            raise ValueError("engine has no vision registry")
-        if tenant_id not in self.registry:
-            raise KeyError(f"unknown tenant {tenant_id!r}")
-        data = np.asarray(data, np.float32)
-        g = self.registry.geom
-        if data.ndim == 4:
-            if data.shape[1:] != (g.alpha, g.m, g.m):
-                raise ValueError(
-                    f"expected images (b, {g.alpha}, {g.m}, {g.m}), got {data.shape}"
+        if isinstance(request, DeliveryRequest):
+            if data is not None:
+                raise TypeError(
+                    "submit(request) takes no second argument — put the "
+                    "payload on the DeliveryRequest"
                 )
-            return np.asarray(unroll_batch(data))
-        if data.ndim == 2:
-            return data
-        raise ValueError(f"expected rank-2 rows or rank-4 images, got {data.shape}")
+            return self._submit_request(request)
+        _warn_shim("submit(tenant_id, data)", "submit(request)")
+        return self._submit_request(DeliveryRequest(request, data))
+
+    def _submit_request(self, request: DeliveryRequest) -> int:
+        return self._enqueue_normalized(api.normalize(request, self))
+
+    def _enqueue_normalized(self, req: DeliveryRequest) -> int:
+        """Queue an already-:func:`api.normalize`-d request — the async front
+        door normalizes outside its lock and calls this under it."""
+        depth = self.pending_rows
+        if req.lane == "rows":
+            reg, g = self.registry, self.registry.geom
+            rid = self.queue.submit(
+                req.tenant_id, req.payload,
+                priority=req.priority, weight=reg.weight_of(req.tenant_id),
+            )
+            self._request_shape[rid] = (req.payload.shape[0], g.beta, g.n, g.n)
+            n_rows = req.payload.shape[0]
+        elif req.lane == "tokens":
+            reg = self.lm_registry
+            rid = self.token_queue.submit(
+                req.tenant_id, req.payload,
+                priority=req.priority, weight=reg.weight_of(req.tenant_id),
+            )
+            b, L = req.payload.shape
+            if req.deliver == "embed":
+                self._embed_tables_needed = True
+            self._token_deliver[rid] = req.deliver
+            self._request_shape[rid] = (
+                (b, L) if req.deliver == "tokens" else (b, L, reg.d_model)
+            )
+            n_rows = b
+        else:  # features
+            reg = self.lm_registry
+            rows = req.payload.reshape(-1, reg.d_in)
+            rid = self.embed_queue.submit(
+                req.tenant_id, rows,
+                priority=req.priority, weight=reg.weight_of(req.tenant_id),
+            )
+            self._request_shape[rid] = (rows.shape[0], reg.d_out)
+            self._embed_shape[rid] = req.payload.shape[:-1] + (reg.d_out,)
+            n_rows = rows.shape[0]
+        self._req_info[rid] = _ReqInfo(
+            request=req, submitted_at=time.monotonic(),
+            queue_depth_at_submit=depth,
+        )
+        self.stats.requests += 1
+        self.stats.rows_in += n_rows
+        return rid
+
+    # -- deprecated lane-specific shims (kept for callers of the old trio) ---
+    def prepare_rows(self, tenant_id: str, data) -> np.ndarray:
+        """Deprecated: use ``repro.runtime.api.normalize`` on a request."""
+        _warn_shim("prepare_rows", "api.normalize(request, engine)")
+        return api.normalize(DeliveryRequest(tenant_id, data), self).payload
 
     def prepare_tokens(self, tenant_id: str, tokens) -> np.ndarray:
-        """Validate an LM token payload to ``(b, L)`` int32 (lock-free prep)."""
-        if self.lm_registry is None:
-            raise ValueError("engine has no LM registry")
-        if tenant_id not in self.lm_registry:
-            raise KeyError(f"unknown LM tenant {tenant_id!r}")
-        tokens = np.asarray(tokens)
-        if tokens.ndim != 2 or not np.issubdtype(tokens.dtype, np.integer):
-            raise ValueError(
-                f"expected int tokens of shape (b, L), got {tokens.dtype} "
-                f"{tokens.shape}"
-            )
-        max_seq = self.seq_buckets[-1]
-        if tokens.shape[1] > max_seq:
-            raise ValueError(
-                f"sequence length {tokens.shape[1]} exceeds the largest "
-                f"seq bucket {max_seq}; construct the engine with larger "
-                f"seq_buckets (or split the request)"
-            )
-        v = self.lm_registry.vocab
-        if tokens.size and (tokens.min() < 0 or tokens.max() >= v):
-            raise ValueError(f"token ids out of range [0, {v})")
-        return tokens.astype(np.int32)
+        """Deprecated: use ``repro.runtime.api.normalize`` on a request."""
+        _warn_shim("prepare_tokens", "api.normalize(request, engine)")
+        return api.normalize(
+            DeliveryRequest(tenant_id, tokens, lane="tokens"), self
+        ).payload
 
     def prepare_features(self, tenant_id: str, data) -> np.ndarray:
-        """Validate a continuous LM payload: (b, L, d_in) or (n, d_in) rows."""
-        if self.embed_queue is None:
-            raise ValueError("engine's LM registry has no continuous lane")
-        if tenant_id not in self.lm_registry:
-            raise KeyError(f"unknown LM tenant {tenant_id!r}")
-        data = np.asarray(data, np.float32)
-        if data.ndim not in (2, 3) or data.shape[-1] != self.lm_registry.d_in:
-            raise ValueError(
-                f"expected (..., {self.lm_registry.d_in}) features with rank "
-                f"2 or 3, got {data.shape}"
-            )
-        return data
-
-    def submit(self, tenant_id: str, data) -> int:
-        """Enqueue one vision tenant request.
-
-        ``data`` is either images ``(b, alpha, m, m)`` or pre-unrolled rows
-        ``(b, F_in)``; returns a request id redeemable after :meth:`flush`.
-        """
-        return self._enqueue_rows(tenant_id, self.prepare_rows(tenant_id, data))
-
-    def _enqueue_rows(self, tenant_id: str, rows: np.ndarray) -> int:
-        """Queue rows already validated by :meth:`prepare_rows` — the async
-        front door calls this under its lock so validation cost stays outside."""
-        rid = self.queue.submit(tenant_id, rows)
-        g = self.registry.geom
-        self._request_shape[rid] = (rows.shape[0], g.beta, g.n, g.n)
-        self.stats.requests += 1
-        self.stats.rows_in += rows.shape[0]
-        return rid
+        """Deprecated: use ``repro.runtime.api.normalize`` on a request."""
+        _warn_shim("prepare_features", "api.normalize(request, engine)")
+        return api.normalize(
+            DeliveryRequest(tenant_id, data, lane="features"), self
+        ).payload
 
     def submit_tokens(
         self, tenant_id: str, tokens, *, deliver: str = "tokens"
     ) -> int:
-        """Enqueue one LM tenant request of ``(b, L)`` token sequences.
-
-        ``deliver="tokens"`` redeems the provider-side morphed tokens
-        ``pi(tokens)`` (what crosses the trust boundary to the developer);
-        ``deliver="embed"`` additionally runs the developer-side
-        Aug-Embedding and redeems features ``(b, L, d_model)`` — exactly
-        ``E[tokens]``, the LM analogue of the vision lane's delivered
-        feature maps.
-        """
-        if deliver not in ("tokens", "embed"):
-            raise ValueError(f"deliver must be 'tokens' or 'embed', got {deliver!r}")
-        return self._enqueue_tokens(
-            tenant_id, self.prepare_tokens(tenant_id, tokens), deliver
+        """Deprecated: submit a ``DeliveryRequest(lane="tokens")`` instead."""
+        _warn_shim("submit_tokens", "submit(request)")
+        return self._submit_request(
+            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver)
         )
-
-    def _enqueue_tokens(self, tenant_id: str, toks: np.ndarray,
-                        deliver: str) -> int:
-        """Queue tokens already validated by :meth:`prepare_tokens` (skips
-        the O(b*L) range scan — the async front door holds its lock here)."""
-        rid = self.token_queue.submit(tenant_id, toks)
-        b, L = toks.shape
-        if deliver == "embed":
-            self._embed_tables_needed = True
-        self._token_deliver[rid] = deliver
-        self._request_shape[rid] = (
-            (b, L) if deliver == "tokens" else (b, L, self.lm_registry.d_model)
-        )
-        self.stats.requests += 1
-        self.stats.rows_in += b
-        return rid
 
     def submit_features(self, tenant_id: str, data) -> int:
-        """Enqueue one continuous-LM request: per-position features
-        ``(b, L, d_in)`` (or pre-flattened ``(n, d_in)`` rows), delivered as
-        ``x @ W_in`` through the tenant's morph core + fused projection."""
-        return self._enqueue_features(
-            tenant_id, self.prepare_features(tenant_id, data)
+        """Deprecated: submit a ``DeliveryRequest(lane="features")`` instead."""
+        _warn_shim("submit_features", "submit(request)")
+        return self._submit_request(
+            DeliveryRequest(tenant_id, data, lane="features")
         )
-
-    def _enqueue_features(self, tenant_id: str, data: np.ndarray) -> int:
-        """Queue features already validated by :meth:`prepare_features`."""
-        rows = data.reshape(-1, self.lm_registry.d_in)
-        rid = self.embed_queue.submit(tenant_id, rows)
-        self._request_shape[rid] = (rows.shape[0], self.lm_registry.d_out)
-        self._embed_shape[rid] = data.shape[:-1] + (self.lm_registry.d_out,)
-        self.stats.requests += 1
-        self.stats.rows_in += rows.shape[0]
-        return rid
 
     # -- the jitted hot paths ------------------------------------------------
     def _execute(self, x: np.ndarray, gidx: np.ndarray,
@@ -583,6 +696,7 @@ class MoLeDeliveryEngine:
         self.stats.microbatches += 1
         self.stats.rows_padded += mb.n_padded_rows
         self.stats.bucket_shapes.add(mb.x.shape[:2])
+        self.stats.padding_clamp_count += mb.n_clamped_padding
 
     def begin_flush(self) -> _FlushWork | None:
         """Phase 1 (cheap, engine-state-mutating): coalesce pending rows
@@ -618,18 +732,33 @@ class MoLeDeliveryEngine:
                     ("features", self.embed_queue, self.lm_registry,
                      self._refresh_lm_plan)
                 )
-        for lane, queue, reg, refresh in lanes:
-            # slot_for activates (and LRU-touches) each tenant on lookup, so
-            # evicted tenants transparently regain a slot; max_groups caps a
-            # microbatch at `capacity` distinct tenants so activations within
-            # one coalesce round can never evict each other.  The plan
-            # re-sync after each coalesce pins the slots that microbatch's
-            # gidx was built against (see _WorkItem).
-            while len(work.items) < cap:
+        clamped = 0
+        for _, queue, _, _ in lanes:
+            # WFQ lag sampled pre-coalesce: the spread the scheduler is about
+            # to work off.  (Post-coalesce everything served is near-level.)
+            self.stats.record_wfq_lag(queue.wfq_lag())
+        # Round-robin the microbatch cap across the live lanes: one lane's
+        # saturating backlog must not consume the whole round and starve the
+        # others' deadlines (the async flusher's double-buffering refills
+        # queues mid-flush, so a drained-in-fixed-order lane could otherwise
+        # starve forever).  slot_for activates (and LRU-touches) each tenant
+        # on lookup, so evicted tenants transparently regain a slot;
+        # max_groups caps a microbatch at `capacity` distinct tenants so
+        # activations within one coalesce round can never evict each other.
+        # The plan re-sync after each coalesce pins the slots that
+        # microbatch's gidx was built against (see _WorkItem).
+        live = list(lanes)
+        while live and len(work.items) < cap:
+            for entry in list(live):
+                if len(work.items) >= cap:
+                    break
+                lane, queue, reg, refresh = entry
                 mb = queue.coalesce(reg.slot_for, max_groups=reg.capacity)
                 if mb is None:
-                    break
+                    live.remove(entry)
+                    continue
                 self._note_microbatch(mb)
+                clamped += mb.n_clamped_padding
                 # One token microbatch may mix "tokens" and "embed"
                 # requests; the Aug-Embedding gather runs only when someone
                 # asked for features (a static flag — at most two traces
@@ -641,6 +770,14 @@ class MoLeDeliveryEngine:
                 work.items.append(_WorkItem(lane, mb, refresh(), want_embed))
         if not work.items:
             return None
+        if clamped:
+            # Once per flush, not per microbatch: enough to make a sparse-
+            # table layout regression observable without log spam.
+            _log.warning(
+                "coalesce clamped %d out-of-range padding slot indices this "
+                "flush (total %d); see EngineStats.padding_clamp_count",
+                clamped, self.stats.padding_clamp_count,
+            )
         self.stats.flushes += 1
         self.stats.record_phase_ms("coalesce", (time.monotonic() - t0) * 1e3)
         return work
@@ -696,6 +833,19 @@ class MoLeDeliveryEngine:
         self.stats.record_phase_ms("publish", (time.monotonic() - t0) * 1e3)
         return done
 
+    def _mark_done(self, rid: int) -> None:
+        """Stamp completion: the request's latency (with its priority) lands
+        in the stats the moment its last row is published, sync and async
+        alike."""
+        self._done.add(rid)
+        info = self._req_info.get(rid)
+        if info is not None and info.completed_at is None:
+            info.completed_at = time.monotonic()
+            self.stats.record_latency_ms(
+                (info.completed_at - info.submitted_at) * 1e3,
+                priority=info.request.priority,
+            )
+
     def _finish_vision(self, rid: int, buf: np.ndarray) -> np.ndarray:
         shape = self._request_shape[rid]
         return np.asarray(reroll_batch(buf, shape[1], shape[2]))
@@ -718,7 +868,7 @@ class MoLeDeliveryEngine:
             if s.req_offset + s.n_rows == shape[0]:
                 done[s.request_id] = finish(s.request_id, buf)
                 self._results[s.request_id] = done[s.request_id]
-                self._done.add(s.request_id)
+                self._mark_done(s.request_id)
 
     def _publish_tokens(self, item: _WorkItem,
                         done: dict[int, np.ndarray]) -> None:
@@ -742,7 +892,7 @@ class MoLeDeliveryEngine:
                 # Strip the sequence padding back to the true length.
                 done[rid] = np.ascontiguousarray(buf[:, : shape[1]])
                 self._results[rid] = done[rid]
-                self._done.add(rid)
+                self._mark_done(rid)
 
     def flush(self) -> dict[int, np.ndarray]:
         """Run every pending request (all lanes) through padded microbatches.
@@ -764,8 +914,9 @@ class MoLeDeliveryEngine:
             self.execute_flush(work)
             done.update(self.publish_flush(work))
 
-    def take(self, request_id: int) -> np.ndarray:
-        """Redeem a completed request's result (pops it), any lane."""
+    def take_result(self, request_id: int) -> DeliveryResult:
+        """Redeem a completed request as a :class:`DeliveryResult` (pops it):
+        the delivered payload plus the per-request scheduling trace."""
         if request_id not in self._done:
             if request_id in self._request_shape:
                 n_rows = self._request_shape[request_id][0]
@@ -787,23 +938,60 @@ class MoLeDeliveryEngine:
         self._token_deliver.pop(request_id, None)
         self._embed_shape.pop(request_id, None)
         self._done.discard(request_id)
-        return out
+        info = self._req_info.pop(request_id)
+        req = info.request
+        return DeliveryResult(
+            request_id=request_id, tenant_id=req.tenant_id, lane=req.lane,
+            deliver=req.deliver, priority=req.priority, payload=out,
+            submitted_at=info.submitted_at, completed_at=info.completed_at,
+            queue_depth_at_submit=info.queue_depth_at_submit,
+            metadata=req.metadata,
+        )
 
-    def deliver(self, tenant_id: str, data) -> np.ndarray:
-        """Convenience: submit one vision request, flush, return its features."""
-        rid = self.submit(tenant_id, data)
+    def take(self, request_id: int) -> np.ndarray:
+        """Redeem a completed request's payload (pops it), any lane.
+
+        :meth:`take_result` additionally returns the scheduling trace; this
+        stays the payload-only spelling (it is not deprecated — the rid it
+        redeems comes from ``submit(request)``).
+        """
+        return self.take_result(request_id).payload
+
+    def deliver(self, request: DeliveryRequest | str, data=None):
+        """Submit one request, flush, and return its :class:`DeliveryResult`.
+
+        The legacy ``deliver(tenant_id, data)`` spelling still works as a
+        deprecated vision-lane shim returning the bare payload.
+        """
+        if isinstance(request, DeliveryRequest):
+            if data is not None:
+                raise TypeError(
+                    "deliver(request) takes no second argument — put the "
+                    "payload on the DeliveryRequest"
+                )
+            rid = self._submit_request(request)
+            self.flush()
+            return self.take_result(rid)
+        _warn_shim("deliver(tenant_id, data)", "deliver(request)")
+        rid = self._submit_request(DeliveryRequest(request, data))
         self.flush()
         return self.take(rid)
 
     def deliver_tokens(self, tenant_id: str, tokens, *, deliver: str = "tokens"):
-        """Convenience: submit one token request, flush, return its result."""
-        rid = self.submit_tokens(tenant_id, tokens, deliver=deliver)
+        """Deprecated: ``deliver(DeliveryRequest(lane="tokens"))`` instead."""
+        _warn_shim("deliver_tokens", "deliver(request)")
+        rid = self._submit_request(
+            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver)
+        )
         self.flush()
         return self.take(rid)
 
     def deliver_features(self, tenant_id: str, data) -> np.ndarray:
-        """Convenience: submit one continuous request, flush, return features."""
-        rid = self.submit_features(tenant_id, data)
+        """Deprecated: ``deliver(DeliveryRequest(lane="features"))`` instead."""
+        _warn_shim("deliver_features", "deliver(request)")
+        rid = self._submit_request(
+            DeliveryRequest(tenant_id, data, lane="features")
+        )
         self.flush()
         return self.take(rid)
 
@@ -849,6 +1037,7 @@ class MoLeDeliveryEngine:
         self._request_shape.clear()
         self._token_deliver.clear()
         self._embed_shape.clear()
+        self._req_info.clear()
         self._done.clear()
 
 

@@ -1,25 +1,36 @@
-"""Request queue + padded-microbatch coalescing for the delivery engine.
+"""Weighted-fair request queues + padded-microbatch coalescing.
 
-Requests arrive as (tenant, rows) in FIFO order; tenants are many, batches
-are small.  The coalescer packs pending rows into a *padded microbatch*:
+Requests arrive as (tenant, rows) with a per-request priority; tenants are
+many, batches are small.  The coalescer packs pending rows into a *padded
+microbatch*:
 
-  * rows are grouped by tenant (a tenant's pending rows are concatenated in
-    arrival order, then chopped into chunks of at most ``max_rows``);
+  * rows are grouped by tenant (a tenant's pending rows are chopped into
+    chunks of at most ``max_rows``);
   * every chunk becomes one *group* of the microbatch tensor ``(G, B, F)``;
   * ``B`` is the smallest bucket that fits the largest chunk and ``G`` is
     bucket-rounded too, so the jitted engine path compiles once per
     ``(G, B)`` bucket pair instead of once per traffic pattern;
   * groups are **slot-sorted**: chunks are ordered by their registry slot
-    index (stable, so a tenant's overflow chunks stay FIFO-adjacent), and a
-    tenant's interleaved arrivals merge into its open chunk during packing —
-    so the engine's grouped kernels see monotone slot indices (duplicates
-    only where a tenant overflows ``max_rows``; adjacent groups sharing a
-    slot reuse the resident secret tile) and the steady-state full-table
-    microbatch degenerates to ``gidx == arange(S)`` for free;
+    index (stable, so a tenant's overflow chunks stay adjacent) — the
+    engine's grouped kernels see monotone slot indices and the steady-state
+    full-table microbatch degenerates to ``gidx == arange(S)`` for free;
   * padding rows are zeros and padding *groups* carry their own group index
-    clamped to the slot-table bound — they flow through the grouped GEMMs
-    (zero in, zero out), are sliced away on reassembly, and a dense prefix
-    of active slots plus padding keeps ``gidx == arange``.
+    clamped to the slot-table bound — clamps are counted on the microbatch
+    (``n_clamped_padding``) so the engine can surface them in its stats.
+
+**Scheduling** is weighted fair queueing (start-time fair queueing flavour):
+
+  * each tenant lane carries a *virtual time* that advances by
+    ``rows_served / weight`` whenever one of its chunks is scheduled; the
+    coalescer always serves the backlogged lane with the smallest virtual
+    time, so under saturation a weight-2 tenant receives ~2x the rows of a
+    weight-1 tenant regardless of arrival interleaving;
+  * a lane going idle keeps its virtual time but re-enters at
+    ``max(own, global)`` when it becomes backlogged again — idling banks no
+    credit;
+  * **within** a tenant, requests dequeue by priority (higher first), FIFO
+    within a priority level; only the head request of a lane may be
+    partially scheduled, and a request's own rows always flow in order.
 
 LM token traffic coalesces through :class:`TokenQueue`: the same packing,
 but requests are int32 token sequences and microbatches are additionally
@@ -34,14 +45,16 @@ admission control on top.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 from typing import Callable, Iterable, Mapping
 
 import numpy as np
 
 __all__ = [
-    "DeliveryRequest",
     "GroupSlice",
     "Microbatch",
+    "QueuedRequest",
     "RequestQueue",
     "TokenQueue",
 ]
@@ -56,12 +69,14 @@ def bucketize(n: int, buckets: Iterable[int]) -> int:
 
 
 @dataclasses.dataclass
-class DeliveryRequest:
-    """One tenant's ask: morph-and-deliver ``rows`` (b, F) of private data."""
+class QueuedRequest:
+    """One tenant's pending ask: morph-and-deliver ``rows`` (b, F)."""
 
     request_id: int
     tenant_id: str
     rows: np.ndarray            # (b, F) unrolled private data
+    priority: int = 0           # within-tenant: higher dequeues first
+    seq: int = 0                # arrival order (FIFO within a priority)
     delivered: int = 0          # rows already scheduled into microbatches
 
 
@@ -87,14 +102,28 @@ class Microbatch:
     slices: list[GroupSlice]
     n_real_groups: int
     n_real_rows: int
+    n_clamped_padding: int = 0  # padding groups whose index hit the clamp
 
     @property
     def n_padded_rows(self) -> int:
         return self.x.shape[0] * self.x.shape[1] - self.n_real_rows
 
 
+@dataclasses.dataclass
+class _TenantLane:
+    """One tenant's WFQ state: a priority-ordered backlog + virtual time."""
+
+    tenant_id: str
+    # Min-heap of (-priority, seq, request): the head is the next request to
+    # dequeue (highest priority, FIFO within a level).
+    heap: list = dataclasses.field(default_factory=list)
+    vtime: float = 0.0
+    weight: float = 1.0
+
+
 class RequestQueue:
-    """FIFO delivery queue with tenant-grouped, bucket-padded coalescing."""
+    """Weighted-fair delivery queue with tenant-grouped, bucket-padded
+    coalescing (priority-then-FIFO within a tenant, WFQ across tenants)."""
 
     def __init__(
         self,
@@ -116,29 +145,51 @@ class RequestQueue:
         # request id is unique engine-wide (take() is lane-agnostic); a
         # stand-alone queue falls back to its own counter.
         self._id_alloc = id_alloc
-        self._pending: list[DeliveryRequest] = []
         self._next_id = 0
+        self._seq = itertools.count()
+        self._lanes: dict[str, _TenantLane] = {}
+        self._live: dict[int, QueuedRequest] = {}   # rid -> pending request
+        # Lazy min-heap over live rids: oldest_pending_id is an amortized
+        # O(log n) peek instead of an O(n) min-scan (TokenQueue reads it per
+        # bucket per coalesce).  Entries whose rid left _live are stale.
+        self._id_heap: list[int] = []
+        self._pending_rows = 0                      # running unscheduled rows
+        self._vnow = 0.0                            # global virtual time
+        # Explicit (non-default) WFQ shares; survives idle-lane pruning so a
+        # weight set at submit time persists across a tenant's idle spells.
+        self._weights: dict[str, float] = {}
 
     def __len__(self) -> int:
-        return len(self._pending)
+        return len(self._live)
 
     @property
     def pending_rows(self) -> int:
-        return sum(r.rows.shape[0] - r.delivered for r in self._pending)
+        return self._pending_rows
 
     @property
     def oldest_pending_id(self) -> int | None:
-        """Request id of the oldest pending request (None when empty)."""
-        return self._pending[0].request_id if self._pending else None
+        """Smallest pending request id — ids are allocated monotonically, so
+        this is the oldest arrival (None when empty)."""
+        heap = self._id_heap
+        while heap and heap[0] not in self._live:
+            heapq.heappop(heap)
+        return heap[0] if heap else None
 
     def pending_rows_by_tenant(self) -> dict[str, int]:
         """Unscheduled row counts keyed by tenant (observability/debugging)."""
         out: dict[str, int] = {}
-        for r in self._pending:
+        for r in self._live.values():
             left = r.rows.shape[0] - r.delivered
             if left:
                 out[r.tenant_id] = out.get(r.tenant_id, 0) + left
         return out
+
+    def wfq_lag(self) -> float:
+        """Virtual-time spread (max - min) across backlogged tenants: how far
+        the scheduler is from perfectly proportional service right now (0
+        with fewer than two backlogged tenants)."""
+        vts = [lane.vtime for lane in self._lanes.values() if lane.heap]
+        return max(vts) - min(vts) if len(vts) > 1 else 0.0
 
     def ensure_group_bucket(self, n: int) -> None:
         """Add ``n`` to the group buckets (steady-state "all tenants active"
@@ -148,7 +199,23 @@ class RequestQueue:
         if 0 < n <= self.group_buckets[-1]:
             self.group_buckets = tuple(sorted({*self.group_buckets, n}))
 
-    def submit(self, tenant_id: str, rows: np.ndarray) -> int:
+    def submit(
+        self,
+        tenant_id: str,
+        rows: np.ndarray,
+        *,
+        priority: int = 0,
+        weight: float | None = None,
+    ) -> int:
+        """Enqueue ``rows`` for ``tenant_id``.
+
+        ``priority`` orders this request within its tenant (higher first,
+        FIFO within a level); ``weight`` sets the tenant's WFQ share — it
+        persists across the tenant's idle spells (and the idle-lane prune)
+        until overwritten, and the engine re-resolves it from the registry
+        on every submit so weight changes take effect without draining the
+        queue.
+        """
         rows = np.asarray(rows, self.dtype)
         if rows.ndim != 2 or rows.shape[1] != self.feature_dim:
             raise ValueError(
@@ -159,25 +226,87 @@ class RequestQueue:
         else:
             rid = self._next_id
             self._next_id += 1
-        self._pending.append(DeliveryRequest(rid, tenant_id, rows))
+        if weight is not None:
+            if not weight > 0:
+                raise ValueError(f"weight must be positive, got {weight}")
+            if weight != 1.0:
+                self._weights[tenant_id] = float(weight)
+            else:
+                self._weights.pop(tenant_id, None)
+        lane = self._lanes.get(tenant_id)
+        if lane is None:
+            lane = self._lanes[tenant_id] = _TenantLane(
+                tenant_id, weight=self._weights.get(tenant_id, 1.0)
+            )
+        elif weight is not None:
+            lane.weight = float(weight)
+        if not lane.heap:
+            # Idle -> backlogged: re-enter at the global virtual time so a
+            # long-idle tenant cannot bank credit and starve the others.
+            lane.vtime = max(lane.vtime, self._vnow)
+        req = QueuedRequest(
+            rid, tenant_id, rows, priority=int(priority), seq=next(self._seq)
+        )
+        heapq.heappush(lane.heap, (-req.priority, req.seq, req))
+        self._live[rid] = req
+        heapq.heappush(self._id_heap, rid)
+        self._pending_rows += rows.shape[0]
         return rid
+
+    # -- WFQ chunk selection -------------------------------------------------
+    def _pick_lane(self) -> _TenantLane | None:
+        """Backlogged lane with the smallest virtual time (ties broken by the
+        arrival order of the lane's head request, for determinism)."""
+        best = None
+        for lane in self._lanes.values():
+            if not lane.heap:
+                continue
+            key = (lane.vtime, lane.heap[0][1])
+            if best is None or key < best[0]:
+                best = (key, lane)
+        return best[1] if best else None
+
+    def _take_chunk(
+        self, lane: _TenantLane
+    ) -> tuple[list[tuple[QueuedRequest, int, int]], int]:
+        """Dequeue up to ``max_rows`` rows from ``lane`` in priority-then-FIFO
+        order, committing ``delivered`` offsets; returns (runs, n_rows)."""
+        runs: list[tuple[QueuedRequest, int, int]] = []
+        used = 0
+        while lane.heap and used < self.max_rows:
+            req = lane.heap[0][2]
+            remaining = req.rows.shape[0] - req.delivered
+            take = min(remaining, self.max_rows - used)
+            runs.append((req, req.delivered, take))
+            req.delivered += take
+            used += take
+            if req.delivered == req.rows.shape[0]:
+                heapq.heappop(lane.heap)
+                del self._live[req.request_id]
+        self._pending_rows -= used
+        return runs, used
 
     def coalesce(
         self,
         tenant_index: Mapping[str, int] | Callable[[str], int],
         max_groups: int | None = None,
     ) -> Microbatch | None:
-        """Pack as many pending rows as fit into one padded microbatch.
+        """Pack pending rows into one padded microbatch, WFQ-fairly.
 
         ``tenant_index`` maps tenant id -> slot index into the registry's
         stacked secret arrays (a callable lookup may activate the tenant as a
         side effect — see ``SessionRegistry.slot_for``).  ``max_groups`` caps
-        the number of *distinct-tenant* groups below the largest group bucket
-        — the engine passes its registry capacity so one microbatch never
-        asks for more resident tenants than there are slots.  Returns None
-        when the queue is empty.
+        the number of groups below the largest group bucket — the engine
+        passes its registry capacity so one microbatch never asks for more
+        resident tenants than there are slots.  Returns None when the queue
+        is empty.
+
+        Group selection order is the WFQ order: repeatedly serve one
+        ``max_rows``-chunk from the backlogged tenant with the smallest
+        virtual time, charging ``rows / weight`` — so a saturated microbatch
+        splits its groups across tenants in proportion to their weights.
         """
-        if not self._pending:
+        if not self._live:
             return None
         lookup = tenant_index if callable(tenant_index) else tenant_index.__getitem__
 
@@ -185,33 +314,30 @@ class RequestQueue:
             self.group_buckets[-1],
             max_groups if max_groups is not None else self.group_buckets[-1],
         )
-        # Gather per-tenant runs in FIFO order: (tenant, [(request, offset, n)]).
-        chunks: list[tuple[str, list[tuple[DeliveryRequest, int, int]]]] = []
-        open_chunk: dict[str, int] = {}  # tenant -> index into `chunks` of a
-        # chunk that still has spare row capacity
-        for req in self._pending:
-            remaining = req.rows.shape[0] - req.delivered
-            offset = req.delivered
-            while remaining > 0:
-                idx = open_chunk.get(req.tenant_id)
-                if idx is None:
-                    if len(chunks) >= max_groups:
-                        break
-                    chunks.append((req.tenant_id, []))
-                    idx = len(chunks) - 1
-                    open_chunk[req.tenant_id] = idx
-                used = sum(n for _, _, n in chunks[idx][1])
-                take = min(remaining, self.max_rows - used)
-                if take == 0:
-                    del open_chunk[req.tenant_id]
-                    continue
-                chunks[idx][1].append((req, offset, take))
-                offset += take
-                remaining -= take
-                if used + take == self.max_rows:
-                    del open_chunk[req.tenant_id]
-            if remaining > 0 and len(chunks) >= max_groups and not open_chunk:
+        chunks: list[tuple[str, list[tuple[QueuedRequest, int, int]]]] = []
+        while len(chunks) < max_groups:
+            lane = self._pick_lane()
+            if lane is None:
                 break
+            # The served chunk's start tag is the global virtual time: lanes
+            # waking from idle resume here instead of at 0.
+            self._vnow = max(self._vnow, lane.vtime)
+            runs, n = self._take_chunk(lane)
+            lane.vtime += n / lane.weight
+            chunks.append((lane.tenant_id, runs))
+
+        # Prune idle lane records whose virtual time the global clock has
+        # caught up with: re-entry at ``max(own, global)`` would resolve to
+        # ``global`` anyway, so dropping them is semantically invisible —
+        # explicit weights live in ``_weights`` and survive the prune — and
+        # it bounds ``_lanes`` (and the ``_pick_lane`` scan) by the set
+        # of *recently* active tenants instead of every tenant ever seen.
+        # Lanes still carrying debt (vtime > global) survive until served
+        # traffic advances the clock past them.
+        self._lanes = {
+            t: lane for t, lane in self._lanes.items()
+            if lane.heap or lane.vtime > self._vnow
+        }
 
         if not chunks:
             return None
@@ -220,18 +346,14 @@ class RequestQueue:
         # grouped kernels see monotone indices (adjacent groups sharing a
         # slot reuse the resident secret tile, and the full-table microbatch
         # degenerates to gidx == arange).  Slot lookups happen once per
-        # tenant, in FIFO chunk order, *before* sorting — slot_for may
-        # activate an evicted tenant, and that must follow arrival order.
+        # tenant, in WFQ service order, *before* sorting — slot_for may
+        # activate an evicted tenant, and that must follow the order the
+        # scheduler actually granted service in.
         slot_of: dict[str, int] = {}
         for tenant, _ in chunks:
             if tenant not in slot_of:
                 slot_of[tenant] = lookup(tenant)
-        chunks.sort(key=lambda c: slot_of[c[0]])  # stable: FIFO within a slot
-        # Duplicate-slot groups are already merged as far as they can be:
-        # chunk building appends a tenant's later arrivals to its open chunk
-        # and only closes a chunk when it is exactly max_rows full, so two
-        # same-slot chunks always sum past max_rows (a genuine overflow) —
-        # the sort just guarantees they come out adjacent.
+        chunks.sort(key=lambda c: slot_of[c[0]])  # stable: WFQ order in a slot
 
         largest = max(sum(n for _, _, n in runs) for _, runs in chunks)
         B = bucketize(largest, self.row_buckets)
@@ -247,7 +369,6 @@ class RequestQueue:
             for req, off, n in runs:
                 x[g, cursor : cursor + n] = req.rows[off : off + n]
                 slices.append(GroupSlice(req.request_id, off, g, cursor, n))
-                req.delivered = off + n
                 cursor += n
                 n_real_rows += n
         # Padding groups carry their own group index, clamped to the slot
@@ -255,28 +376,30 @@ class RequestQueue:
         # all-zero rows make their output zeros regardless of whose secrets
         # they hit, and a dense prefix of active slots plus padding
         # degenerates to gidx == arange — the in-place fast case on the jnp
-        # backend (the grouped kernels cost the same either way).
+        # backend (the grouped kernels cost the same either way).  Clamps
+        # are counted so the engine can surface them (padding_clamp_count):
+        # a clamped group reads a real tenant's secrets with zero rows —
+        # harmless, but a sparse-table CPU serving regression worth seeing.
         pad = np.arange(len(chunks), G, dtype=np.int32)
         gidx[len(chunks):] = np.minimum(pad, max_groups - 1)
+        n_clamped = int(np.count_nonzero(pad > max_groups - 1))
 
-        self._pending = [
-            r for r in self._pending if r.delivered < r.rows.shape[0]
-        ]
         return Microbatch(
             x=x, group_tenant=gidx, slices=slices,
             n_real_groups=len(chunks), n_real_rows=n_real_rows,
+            n_clamped_padding=n_clamped,
         )
 
 
 class TokenQueue:
-    """Length-bucketed delivery queue for LM token requests.
+    """Length-bucketed weighted-fair delivery queue for LM token requests.
 
     A token request is a ``(b, L)`` int32 batch of sequences; ``L`` is padded
     up to the smallest ``seq_buckets`` entry at submission (pad id 0 — the
     padded positions are sliced away on reassembly, so the id only has to be
     a valid gather index).  Internally one :class:`RequestQueue` runs per
     sequence bucket (rows of width ``L_bucket``), so every microbatch is
-    ``(G, B, L_bucket)`` with the exact same tenant-grouping, slot-sorted
+    ``(G, B, L_bucket)`` with the exact same WFQ scheduling, slot-sorted
     row/group bucketing, and padding-group behavior as the vision rows
     lane; ``coalesce`` serves the bucket holding the oldest
     pending request, which keeps cross-bucket traffic FIFO-fair.
@@ -298,8 +421,6 @@ class TokenQueue:
         if id_alloc is None:
             # All per-bucket queues must share one id space (rids order the
             # cross-bucket FIFO and key the engine's result table).
-            import itertools
-
             counter = itertools.count()
             id_alloc = lambda: next(counter)
         self._id_alloc = id_alloc
@@ -320,6 +441,10 @@ class TokenQueue:
                 out[t] = out.get(t, 0) + n
         return out
 
+    def wfq_lag(self) -> float:
+        """Largest virtual-time spread across the per-bucket queues."""
+        return max((q.wfq_lag() for q in self._queues.values()), default=0.0)
+
     def ensure_group_bucket(self, n: int) -> None:
         self._ensured_groups.add(n)
         for q in self._queues.values():
@@ -329,7 +454,14 @@ class TokenQueue:
         """Padded sequence length a request of ``seq_len`` coalesces at."""
         return bucketize(seq_len, self.seq_buckets)
 
-    def submit(self, tenant_id: str, tokens: np.ndarray) -> int:
+    def submit(
+        self,
+        tenant_id: str,
+        tokens: np.ndarray,
+        *,
+        priority: int = 0,
+        weight: float | None = None,
+    ) -> int:
         tokens = np.asarray(tokens)
         if tokens.ndim != 2:
             raise ValueError(f"expected tokens (b, L), got {tokens.shape}")
@@ -347,7 +479,7 @@ class TokenQueue:
             self._queues[Lb] = lane
         padded = np.zeros((b, Lb), np.int32)
         padded[:, :L] = tokens
-        return lane.submit(tenant_id, padded)
+        return lane.submit(tenant_id, padded, priority=priority, weight=weight)
 
     def coalesce(
         self,

@@ -9,13 +9,22 @@ import numpy as np
 import pytest
 
 from repro.core import ConvGeometry, LMSessionRegistry, SessionRegistry
-from repro.runtime import AdmissionError, AsyncDeliveryEngine, MoLeDeliveryEngine
+from repro.runtime import (
+    AdmissionError,
+    AsyncDeliveryEngine,
+    DeliveryRequest,
+    MoLeDeliveryEngine,
+)
 
 GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
 
 # Generous CI slack on top of the SLO: a deadline flush's completion latency
 # is max_delay_ms + one flush's compute, and shared CI boxes stall threads.
 SLACK_MS = 750.0
+
+
+def _rq(tenant, data, **kw):
+    return DeliveryRequest(tenant, data, **kw)
 
 
 def _registry(rng, tenants=3, kappa=2, capacity=None):
@@ -54,7 +63,7 @@ def test_async_matches_sync_under_concurrent_load(rng):
             try:
                 for j in range(per_thread):
                     t = f"t{(wid + j) % tenants}"
-                    futures[wid].append((t, front.submit(t, datas[t])))
+                    futures[wid].append((t, front.submit(_rq(t, datas[t]))))
             except BaseException as e:  # pragma: no cover - surfaced below
                 errors.append(e)
 
@@ -76,7 +85,7 @@ def test_async_matches_sync_under_concurrent_load(rng):
 
         for t, f in flat:
             got = f.result(timeout=60)
-            np.testing.assert_allclose(got, want[t], atol=1e-5)
+            np.testing.assert_allclose(got.payload, want[t], atol=1e-5)
 
     assert front.pending() == 0
     assert front.stats.requests >= n_threads * per_thread
@@ -123,12 +132,12 @@ def test_mixed_fleet_vision_and_lm_concurrent(rng):
                     if (wid + j) % 2:
                         t = f"lm{(wid + j) % lm_tenants}"
                         futures[wid].append(
-                            ("lm", t, front.submit_tokens(t, tokens[t]))
+                            ("lm", t, front.submit(_rq(t, tokens[t], lane="tokens")))
                         )
                     else:
                         t = f"t{(wid + j) % vision_tenants}"
                         futures[wid].append(
-                            ("img", t, front.submit(t, images[t]))
+                            ("img", t, front.submit(_rq(t, images[t])))
                         )
             except BaseException as e:  # pragma: no cover - surfaced below
                 errors.append(e)
@@ -149,7 +158,7 @@ def test_mixed_fleet_vision_and_lm_concurrent(rng):
         assert len(set(rids)) == len(rids)
 
         for kind, t, f in flat:
-            got = f.result(timeout=60)
+            got = f.result(timeout=60).payload
             if kind == "img":
                 np.testing.assert_allclose(got, want_img[t], atol=1e-5)
             else:
@@ -168,10 +177,10 @@ def test_deadline_flusher_meets_max_delay(rng):
         # Warm the (G, B) buckets so the timed requests measure the flusher,
         # not XLA compilation.
         for t in reg.tenant_ids:
-            front.deliver(t, d, timeout=60)
+            front.deliver(_rq(t, d), timeout=60)
 
         t0 = time.monotonic()
-        futs = [front.submit(t, d) for t in reg.tenant_ids]
+        futs = [front.submit(_rq(t, d)) for t in reg.tenant_ids]
         for f in futs:
             f.result(timeout=60)
         wall_ms = (time.monotonic() - t0) * 1e3
@@ -193,8 +202,8 @@ def test_bucket_full_flushes_before_deadline(rng):
     )
     try:
         d = rng.standard_normal((4, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        fut = front.submit("t0", d)  # 4 rows >= flush_rows
-        feats = fut.result(timeout=60)
+        fut = front.submit(_rq("t0", d))  # 4 rows >= flush_rows
+        feats = fut.result(timeout=60).payload
         want = np.asarray(reg.session("t0").deliver(jnp.asarray(d)))
         np.testing.assert_allclose(feats, want, atol=1e-5)
     finally:
@@ -208,15 +217,15 @@ def test_admission_reject_over_quota(rng):
     )
     try:
         d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        f0 = front.submit("t0", d)  # 2 rows in flight
+        f0 = front.submit(_rq("t0", d))  # 2 rows in flight
         with pytest.raises(AdmissionError, match="t0.*over quota"):
-            front.submit("t0", d)   # 2 + 2 > 3
+            front.submit(_rq("t0", d))   # 2 + 2 > 3
         assert front.stats.rejected == 1
         # an under-quota tenant is unaffected by its neighbour's throttling
-        f1 = front.submit("t1", d)
+        f1 = front.submit(_rq("t1", d))
         front.flush_now()
-        assert f0.result(timeout=60).shape == (2, GEOM.beta, GEOM.n, GEOM.n)
-        assert f1.result(timeout=60).shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+        assert f0.result(timeout=60).payload.shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+        assert f1.result(timeout=60).payload.shape == (2, GEOM.beta, GEOM.n, GEOM.n)
     finally:
         front.close()
 
@@ -230,7 +239,7 @@ def test_oversized_request_rejected_even_when_blocking(rng):
     ) as front:
         d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
         with pytest.raises(AdmissionError, match="exceeds the per-tenant quota"):
-            front.submit("t0", d)
+            front.submit(_rq("t0", d))
         assert front.stats.rejected == 1
 
 
@@ -239,11 +248,11 @@ def test_drain_leaves_futures_resolved(rng):
     reg = _registry(rng, tenants=2)
     with AsyncDeliveryEngine(reg, max_delay_ms=10_000.0) as front:
         d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        futs = [front.submit(t, d) for t in reg.tenant_ids for _ in range(3)]
+        futs = [front.submit(_rq(t, d)) for t in reg.tenant_ids for _ in range(3)]
         front.drain(timeout=60)
         assert all(f.done() for f in futs)
         for f in futs:
-            assert f.result(timeout=0).shape == (1, GEOM.beta, GEOM.n, GEOM.n)
+            assert f.result(timeout=0).payload.shape == (1, GEOM.beta, GEOM.n, GEOM.n)
 
 
 def test_mixed_sync_submissions_are_left_for_take(rng):
@@ -252,11 +261,11 @@ def test_mixed_sync_submissions_are_left_for_take(rng):
     reg = _registry(rng, tenants=1)
     with AsyncDeliveryEngine(reg, max_delay_ms=10_000.0) as front:
         d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        rid = front.engine.submit("t0", d)   # bypasses the front door
-        fut = front.submit("t0", d)
+        rid = front.engine.submit(_rq("t0", d))   # bypasses the front door
+        fut = front.submit(_rq("t0", d))
         front.flush_now()
         np.testing.assert_allclose(
-            fut.result(timeout=60),
+            fut.result(timeout=60).payload,
             np.asarray(reg.session("t0").deliver(jnp.asarray(d))), atol=1e-5,
         )
         front.drain(timeout=60)
@@ -271,12 +280,12 @@ def test_admission_block_applies_backpressure(rng):
     )
     try:
         d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        front.submit("t0", d)
+        front.submit(_rq("t0", d))
         blocked_for: list[float] = []
 
         def blocked_submit():
             t0 = time.monotonic()
-            fut = front.submit("t0", d)
+            fut = front.submit(_rq("t0", d))
             blocked_for.append(time.monotonic() - t0)
             fut.result(timeout=60)
 
@@ -293,11 +302,11 @@ def test_closed_engine_rejects_submissions(rng):
     reg = _registry(rng, tenants=1)
     front = AsyncDeliveryEngine(reg, max_delay_ms=5.0)
     d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    fut = front.submit("t0", d)
+    fut = front.submit(_rq("t0", d))
     front.close()
     assert fut.done()  # close() drains in-flight work first
     with pytest.raises(RuntimeError, match="closed"):
-        front.submit("t0", d)
+        front.submit(_rq("t0", d))
     front.close()  # idempotent
 
 
@@ -305,7 +314,7 @@ def test_async_rejects_unknown_tenant(rng):
     reg = _registry(rng, tenants=1)
     with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
         with pytest.raises(KeyError):
-            front.submit("nobody", np.zeros((1, GEOM.alpha, GEOM.m, GEOM.m)))
+            front.submit(_rq("nobody", np.zeros((1, GEOM.alpha, GEOM.m, GEOM.m))))
 
 
 def test_wrapping_an_existing_engine(rng):
@@ -318,7 +327,7 @@ def test_wrapping_an_existing_engine(rng):
         assert front.engine is eng
         d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
         want = np.asarray(reg.session("t0").deliver(jnp.asarray(d)))
-        np.testing.assert_allclose(front.deliver("t0", d, timeout=60), want,
+        np.testing.assert_allclose(front.deliver(_rq("t0", d), timeout=60).payload, want,
                                    atol=1e-5)
     with pytest.raises(TypeError):
         AsyncDeliveryEngine(eng, max_rows=8)
@@ -332,15 +341,15 @@ def test_cancelled_future_does_not_kill_the_flusher(rng):
     reg = _registry(rng, tenants=1)
     with AsyncDeliveryEngine(reg, max_delay_ms=10_000.0) as front:
         d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        doomed = front.submit("t0", d)
+        doomed = front.submit(_rq("t0", d))
         assert doomed.cancel()  # deterministic: the 10s deadline is far away
         front.flush_now()
         front.drain(timeout=60)
         # the flusher survived: a fresh request completes normally
-        fresh = front.submit("t0", d)
+        fresh = front.submit(_rq("t0", d))
         front.flush_now()
         np.testing.assert_allclose(
-            fresh.result(timeout=60),
+            fresh.result(timeout=60).payload,
             np.asarray(reg.session("t0").deliver(jnp.asarray(d))), atol=1e-5,
         )
         assert doomed.cancelled()
@@ -350,13 +359,13 @@ def test_engine_reset_pending_drops_queued_state(rng):
     reg = _registry(rng, tenants=1)
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    rid = eng.submit("t0", d)
+    rid = eng.submit(_rq("t0", d))
     eng.reset_pending()
     assert len(eng.queue) == 0
     with pytest.raises(KeyError, match="unknown request id"):
         eng.take(rid)
-    rid2 = eng.deliver("t0", d)  # engine still serves, ids stay unique
-    assert rid2.shape == (2, GEOM.beta, GEOM.n, GEOM.n)
+    out2 = eng.deliver(_rq("t0", d)).payload  # engine still serves
+    assert out2.shape == (2, GEOM.beta, GEOM.n, GEOM.n)
 
 
 class _HeldExecuteEngine(MoLeDeliveryEngine):
@@ -385,20 +394,20 @@ def test_submitters_progress_while_device_step_in_flight(rng):
         d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(
             np.float32
         )
-        f0 = front.submit("t0", d)
+        f0 = front.submit(_rq("t0", d))
         assert eng.in_device.wait(timeout=30)   # flush 1's device step is live
         assert not f0.done()
         t0 = time.monotonic()
-        f1 = front.submit("t1", d)              # held device step, free lock
+        f1 = front.submit(_rq("t1", d))              # held device step, free lock
         submit_s = time.monotonic() - t0
         assert not f0.done()                    # ...the flush is still open
         eng.release.set()
         np.testing.assert_allclose(
-            f0.result(timeout=60),
+            f0.result(timeout=60).payload,
             np.asarray(reg.session("t0").deliver(jnp.asarray(d))), atol=1e-5,
         )
         np.testing.assert_allclose(
-            f1.result(timeout=60),
+            f1.result(timeout=60).payload,
             np.asarray(reg.session("t1").deliver(jnp.asarray(d))), atol=1e-5,
         )
         # The mid-flight submit never waited on the device step (generous CI
@@ -418,7 +427,7 @@ def test_submit_wait_stats_recorded(rng):
         d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(
             np.float32
         )
-        futs = [front.submit(t, d) for t in reg.tenant_ids for _ in range(4)]
+        futs = [front.submit(_rq(t, d)) for t in reg.tenant_ids for _ in range(4)]
         for f in futs:
             f.result(timeout=60)
         stats = front.stats
@@ -435,7 +444,7 @@ def test_deadline_heap_prunes_completed_requests(rng):
         d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(
             np.float32
         )
-        futs = [front.submit("t0", d) for _ in range(5)]
+        futs = [front.submit(_rq("t0", d)) for _ in range(5)]
         for f in futs:
             f.result(timeout=60)
         front.drain(timeout=60)
@@ -449,7 +458,7 @@ def test_drain_waits_for_inflight(rng):
     front = AsyncDeliveryEngine(reg, max_delay_ms=10_000.0)
     try:
         d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-        fut = front.submit("t0", d)
+        fut = front.submit(_rq("t0", d))
         front.drain(timeout=60)
         assert fut.done() and front.pending() == 0
     finally:

@@ -108,7 +108,7 @@ def test_delivery_engine_shards_group_axis_across_devices():
         from jax.sharding import PartitionSpec as P
         from repro.core import ConvGeometry, SessionRegistry
         from repro.launch.mesh import make_debug_mesh, mesh_context
-        from repro.runtime import MoLeDeliveryEngine
+        from repro.runtime import DeliveryRequest, MoLeDeliveryEngine
 
         rng = np.random.default_rng(0)
         geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
@@ -130,7 +130,7 @@ def test_delivery_engine_shards_group_axis_across_devices():
             # one microbatch with all 8 tenants: inspect the jitted step's
             # output placement directly
             for t, d in datas.items():
-                eng.submit(t, d)
+                eng.submit(DeliveryRequest(t, d))
             mb = eng.queue.coalesce(reg.slot_for, max_groups=reg.capacity)
             assert mb.x.shape[0] == 8, mb.x.shape
             out = eng._execute(mb.x, mb.group_tenant, eng._refresh_plan())
@@ -144,12 +144,12 @@ def test_delivery_engine_shards_group_axis_across_devices():
             ))
             # and the full engine path (flush + reassembly) stays exact
             for t, d in datas.items():
-                eng.submit(t, d)
+                eng.submit(DeliveryRequest(t, d))
             eng.flush()
         err = 0.0
         for t, d in datas.items():
             want = np.asarray(reg.session(t).deliver(jnp.asarray(d)))
-            got = eng.deliver(t, d)
+            got = eng.deliver(DeliveryRequest(t, d)).payload
             err = max(err, float(np.max(np.abs(got - want))))
         print(json.dumps({
             "spec0": str(spec[0]) if len(spec) else None,

@@ -8,10 +8,25 @@ from repro.core import ConvGeometry, SessionRegistry, morph
 from repro.core.morphing import unmorph
 from repro.kernels import morph_rows_batched, aug_conv_forward_batched, ref
 from repro.kernels.dispatch import resolve_backend
-from repro.runtime import MoLeDeliveryEngine, RequestQueue, delivery_trace_count
+from repro.runtime import (
+    DeliveryRequest,
+    MoLeDeliveryEngine,
+    RequestQueue,
+    delivery_trace_count,
+)
 
 
 GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+
+
+def _sub(eng, tenant, data, **kw):
+    """Typed-front-door submit (the shim spelling is covered in
+    tests/test_delivery_api.py)."""
+    return eng.submit(DeliveryRequest(tenant, data, **kw))
+
+
+def _del(eng, tenant, data, **kw):
+    return eng.deliver(DeliveryRequest(tenant, data, **kw)).payload
 
 
 def _registry(rng, tenants=3, kappa=2, capacity=None):
@@ -39,7 +54,7 @@ def test_engine_matches_per_request_deliver(rng):
         d = rng.standard_normal((1 + i % 4, GEOM.alpha, GEOM.m, GEOM.m)).astype(
             np.float32
         )
-        reqs.append((eng.submit(t, d), t, d))
+        reqs.append((_sub(eng, t, d), t, d))
     done = eng.flush()
     assert sorted(done) == sorted(r for r, _, _ in reqs)
     for rid, t, d in reqs:
@@ -54,7 +69,7 @@ def test_large_request_spans_microbatches(rng):
     eng = MoLeDeliveryEngine(reg, max_rows=4,
                              row_buckets=(1, 2, 4), group_buckets=(1, 2))
     d = rng.standard_normal((19, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    feats = eng.deliver("t0", d)
+    feats = _del(eng, "t0", d)
     want = np.asarray(reg.session("t0").deliver(jnp.asarray(d)))
     np.testing.assert_allclose(feats, want, atol=1e-5)
     assert eng.stats.microbatches >= 3  # 19 rows / (2 groups x 4 rows)
@@ -66,7 +81,7 @@ def test_engine_delivers_prerolled_rows(rng):
     d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
     rows = d.reshape(3, -1)
     np.testing.assert_allclose(
-        eng.deliver("t1", rows), eng.deliver("t1", d), atol=0
+        _del(eng, "t1", rows), _del(eng, "t1", d), atol=0
     )
 
 
@@ -84,7 +99,7 @@ def test_tenant_rows_use_only_their_own_secrets(rng):
         t: rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
         for t in reg.tenant_ids
     }
-    rids = {t: eng.submit(t, d) for t, d in datas.items()}  # one microbatch
+    rids = {t: _sub(eng, t, d) for t, d in datas.items()}  # one microbatch
     eng.flush()
     for t, d in datas.items():
         feats = eng.take(rids[t])
@@ -139,19 +154,19 @@ def test_registry_rejects_duplicates_and_unknown_tenants(rng):
         reg.register("t0", np.zeros((2, 4, 3, 3), np.float32))
     eng = MoLeDeliveryEngine(reg)
     with pytest.raises(KeyError):
-        eng.submit("nobody", np.zeros((1, GEOM.alpha, GEOM.m, GEOM.m)))
+        _sub(eng, "nobody", np.zeros((1, GEOM.alpha, GEOM.m, GEOM.m)))
 
 
 def test_late_registration_refreshes_plan(rng):
     reg = _registry(rng, tenants=1)
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    eng.deliver("t0", d)
+    _del(eng, "t0", d)
     k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
         np.float32
     )
     reg.register("late", k)
-    got = eng.deliver("late", d)
+    got = _del(eng, "late", d)
     want = np.asarray(reg.session("late").deliver(jnp.asarray(d)))
     np.testing.assert_allclose(got, want, atol=1e-5)
 
@@ -208,15 +223,15 @@ def test_registration_into_free_slot_does_not_retrace(rng):
     reg = _registry(rng, tenants=1, kappa=2, capacity=4)
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    eng.deliver("t0", d)            # compiles the (G=1, B=4) bucket
+    _del(eng, "t0", d)            # compiles the (G=1, B=4) bucket
     n0 = delivery_trace_count()
-    eng.deliver("t0", d)            # warm bucket: cache hit
+    _del(eng, "t0", d)            # warm bucket: cache hit
     assert delivery_trace_count() == n0
     k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
         np.float32
     )
     reg.register("late", k)         # free slot: in-place plan patch
-    got = eng.deliver("late", d)
+    got = _del(eng, "late", d)
     want = np.asarray(reg.session("late").deliver(jnp.asarray(d)))
     np.testing.assert_allclose(got, want, atol=1e-5)
     assert delivery_trace_count() == n0
@@ -228,17 +243,17 @@ def test_eviction_churn_traces_at_most_once_per_bucket(rng):
     reg = _registry(rng, tenants=4, kappa=2, capacity=4)
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    eng.deliver("t0", d)            # one trace for the (G=1, B=4) bucket
+    _del(eng, "t0", d)            # one trace for the (G=1, B=4) bucket
     n0 = delivery_trace_count()
     k = lambda: rng.standard_normal(
         (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
     ).astype(np.float32)
     for i in range(4, 10):          # every registration now evicts someone
         reg.register(f"t{i}", k())
-        got = eng.deliver(f"t{i}", d)
+        got = _del(eng, f"t{i}", d)
         want = np.asarray(reg.session(f"t{i}").deliver(jnp.asarray(d)))
         np.testing.assert_allclose(got, want, atol=1e-5)
-    eng.deliver("t0", d)            # re-activate an evicted tenant
+    _del(eng, "t0", d)            # re-activate an evicted tenant
     assert reg.evictions >= 6
     assert delivery_trace_count() == n0  # same bucket throughout: zero traces
 
@@ -259,7 +274,7 @@ def test_non_identity_gather_matches_and_does_not_retrace(rng):
 
     def roundtrip():
         # Reverse registration order -> gidx != arange(G): the general path.
-        rids = {t: eng.submit(t, datas[t]) for t in reversed(tenants)}
+        rids = {t: _sub(eng, t, datas[t]) for t in reversed(tenants)}
         eng.flush()
         for t, rid in rids.items():
             want = np.asarray(reg.session(t).deliver(jnp.asarray(datas[t])))
@@ -283,13 +298,13 @@ def test_capacity_growth_rebuilds_plan(rng):
     reg = _registry(rng, tenants=1, kappa=2)       # capacity starts at 1
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    eng.deliver("t0", d)
+    _del(eng, "t0", d)
     k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
         np.float32
     )
     reg.register("t1", k)                          # grows 1 -> 2
     assert reg.capacity == 2
-    got = eng.deliver("t1", d)
+    got = _del(eng, "t1", d)
     want = np.asarray(reg.session("t1").deliver(jnp.asarray(d)))
     np.testing.assert_allclose(got, want, atol=1e-5)
 
@@ -313,7 +328,7 @@ def test_engine_sorts_out_of_order_traffic_into_slot_order(rng):
         )
         for t in reg.tenant_ids
     }
-    rids = {t: eng.submit(t, datas[t]) for t in reversed(reg.tenant_ids)}
+    rids = {t: _sub(eng, t, datas[t]) for t in reversed(reg.tenant_ids)}
     work = eng.begin_flush()
     assert len(work.items) == 1
     gidx = work.items[0].mb.group_tenant
@@ -334,7 +349,7 @@ def test_flush_rounds_bound_working_set(rng):
         max_flush_microbatches=1,
     )
     d = rng.standard_normal((19, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    rid = eng.submit("t0", d)       # 19 rows -> 3+ microbatches
+    rid = _sub(eng, "t0", d)       # 19 rows -> 3+ microbatches
     work = eng.begin_flush()
     assert len(work.items) == 1     # the cap, not the whole backlog
     eng.execute_flush(work)
@@ -354,7 +369,7 @@ def test_flush_phase_stats_recorded(rng):
     reg = _registry(rng, tenants=2)
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((2, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    eng.deliver("t0", d)
+    _del(eng, "t0", d)
     for phase in ("coalesce", "device", "publish"):
         p50 = eng.stats.phase_quantile_ms(phase, 0.5)
         p95 = eng.stats.phase_quantile_ms(phase, 0.95)
@@ -378,7 +393,7 @@ def test_take_unflushed_request_id_raises_pending_context(rng):
     reg = _registry(rng, tenants=1)
     eng = MoLeDeliveryEngine(reg)
     d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(np.float32)
-    rid = eng.submit("t0", d)
+    rid = _sub(eng, "t0", d)
     with pytest.raises(KeyError, match=r"still pending \(3 rows.*flush"):
         eng.take(rid)
     eng.flush()

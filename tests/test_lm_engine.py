@@ -10,11 +10,24 @@ from repro.core import LMSessionRegistry
 from repro.launch import serve as serve_mod
 from repro.runtime import (
     AsyncDeliveryEngine,
+    DeliveryRequest,
     MoLeDeliveryEngine,
     delivery_trace_count,
 )
 
 VOCAB, DMODEL = 131, 8
+
+
+def _sub_tokens(eng, tenant, toks, **kw):
+    return eng.submit(DeliveryRequest(tenant, toks, lane="tokens", **kw))
+
+
+def _del_tokens(eng, tenant, toks, **kw):
+    return eng.deliver(DeliveryRequest(tenant, toks, lane="tokens", **kw)).payload
+
+
+def _del_features(eng, tenant, x, **kw):
+    return eng.deliver(DeliveryRequest(tenant, x, lane="features", **kw)).payload
 
 
 def _lm_registry(rng, tenants=3, capacity=None, d_in=None, d_out=None, kappa=1):
@@ -44,7 +57,7 @@ def test_token_lane_matches_per_session_morph(rng):
     for i in range(9):  # ragged batch sizes -> row padding in microbatches
         t = f"t{i % 3}"
         toks = rng.integers(0, VOCAB, (1 + i % 3, 5 + i % 4))
-        reqs.append((eng.submit_tokens(t, toks), t, toks))
+        reqs.append((_sub_tokens(eng, t, toks), t, toks))
     done = eng.flush()
     assert sorted(done) == sorted(r for r, _, _ in reqs)
     for rid, t, toks in reqs:
@@ -65,7 +78,7 @@ def test_token_embed_deliver_bit_matches_plain_forward(rng):
     }  # AugE[pi(v)] == E[v]: recover each tenant's plain table for the oracle
     for t in reg.tenant_ids:
         toks = rng.integers(0, VOCAB, (3, 7))
-        feats = eng.deliver_tokens(t, toks, deliver="embed")
+        feats = _del_tokens(eng, t, toks, deliver="embed")
         assert feats.shape == (3, 7, DMODEL)
         np.testing.assert_array_equal(feats, embeds[t][toks])
 
@@ -74,8 +87,8 @@ def test_mixed_deliver_modes_share_one_flush(rng):
     reg = _lm_registry(rng, tenants=2)
     eng = MoLeDeliveryEngine(lm_registry=reg)
     toks = rng.integers(0, VOCAB, (2, 6))
-    r_tok = eng.submit_tokens("t0", toks)
-    r_emb = eng.submit_tokens("t1", toks, deliver="embed")
+    r_tok = _sub_tokens(eng, "t0", toks)
+    r_emb = _sub_tokens(eng, "t1", toks, deliver="embed")
     done = eng.flush()
     assert set(done) == {r_tok, r_emb}
     assert eng.take(r_tok).shape == (2, 6)
@@ -89,8 +102,8 @@ def test_token_requests_are_length_bucketed(rng):
     eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8, 64))
     short = rng.integers(0, VOCAB, (2, 5))     # -> bucket 8
     long = rng.integers(0, VOCAB, (2, 33))     # -> bucket 64
-    r0 = eng.submit_tokens("t0", short)
-    r1 = eng.submit_tokens("t0", long)
+    r0 = _sub_tokens(eng, "t0", short)
+    r1 = _sub_tokens(eng, "t0", long)
     n0 = eng.stats.microbatches
     eng.flush()
     assert eng.stats.microbatches - n0 == 2
@@ -110,7 +123,7 @@ def test_large_token_request_spans_microbatches(rng):
                              row_buckets=(1, 2, 4), group_buckets=(1, 2),
                              seq_buckets=(8,))
     toks = rng.integers(0, VOCAB, (11, 8))
-    got = eng.deliver_tokens("t0", toks)
+    got = _del_tokens(eng, "t0", toks)
     np.testing.assert_array_equal(
         got, np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks)))
     )
@@ -126,13 +139,13 @@ def test_continuous_lane_matches_per_session(rng):
     eng = MoLeDeliveryEngine(lm_registry=reg)
     for t in reg.tenant_ids:
         x = rng.standard_normal((2, 5, 12)).astype(np.float32)
-        got = eng.deliver_features(t, x)
+        got = _del_features(eng, t, x)
         want = np.asarray(reg.session(t).deliver_features(jnp.asarray(x)))
         assert got.shape == (2, 5, 8)
         np.testing.assert_allclose(got, want, atol=1e-5)
     # pre-flattened rows work too and reshape back to rank 2
     rows = rng.standard_normal((6, 12)).astype(np.float32)
-    got = eng.deliver_features("t0", rows)
+    got = _del_features(eng, "t0", rows)
     want = np.asarray(reg.session("t0").deliver_features(jnp.asarray(rows)))
     assert got.shape == (6, 8)
     np.testing.assert_allclose(got, want, atol=1e-5)
@@ -147,7 +160,7 @@ def test_continuous_lane_equals_plain_projection(rng):
     reg.register("t0", E, W, seed=5)
     eng = MoLeDeliveryEngine(lm_registry=reg)
     x = rng2.standard_normal((4, 16)).astype(np.float32)
-    np.testing.assert_allclose(eng.deliver_features("t0", x), x @ W, atol=1e-4)
+    np.testing.assert_allclose(_del_features(eng, "t0", x), x @ W, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -160,13 +173,13 @@ def test_lm_registration_churn_does_not_retrace(rng):
     reg = _lm_registry(rng, tenants=1, capacity=4)
     eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
     toks = rng.integers(0, VOCAB, (3, 8))
-    eng.deliver_tokens("t0", toks)          # compiles the (G=1, B=4) bucket
+    _del_tokens(eng, "t0", toks)          # compiles the (G=1, B=4) bucket
     n0 = delivery_trace_count()
-    eng.deliver_tokens("t0", toks)          # warm bucket: cache hit
+    _del_tokens(eng, "t0", toks)          # warm bucket: cache hit
     assert delivery_trace_count() == n0
     E = rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
     reg.register("late", E)                 # free slot: in-place plan patch
-    got = eng.deliver_tokens("late", toks)
+    got = _del_tokens(eng, "late", toks)
     np.testing.assert_array_equal(
         got, np.asarray(reg.session("late").morph_tokens(jnp.asarray(toks)))
     )
@@ -177,16 +190,16 @@ def test_lm_eviction_churn_traces_at_most_once_per_bucket(rng):
     reg = _lm_registry(rng, tenants=4, capacity=4)
     eng = MoLeDeliveryEngine(lm_registry=reg, seq_buckets=(8,))
     toks = rng.integers(0, VOCAB, (3, 8))
-    eng.deliver_tokens("t0", toks)
+    _del_tokens(eng, "t0", toks)
     n0 = delivery_trace_count()
     for i in range(4, 10):                  # every registration now evicts
         reg.register(
             f"t{i}", rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
         )
-        got = eng.deliver_tokens(f"t{i}", toks)
+        got = _del_tokens(eng, f"t{i}", toks)
         want = np.asarray(reg.session(f"t{i}").morph_tokens(jnp.asarray(toks)))
         np.testing.assert_array_equal(got, want)
-    eng.deliver_tokens("t0", toks)          # re-activate an evicted tenant
+    _del_tokens(eng, "t0", toks)          # re-activate an evicted tenant
     assert reg.evictions >= 6
     assert delivery_trace_count() == n0     # same bucket throughout
 
@@ -201,7 +214,7 @@ def test_lm_non_identity_gather_matches_and_stays_flat(rng):
 
     def roundtrip():
         # Reverse registration order -> gidx != arange: the general path.
-        rids = {t: eng.submit_tokens(t, toks[t]) for t in reversed(tenants)}
+        rids = {t: _sub_tokens(eng, t, toks[t]) for t in reversed(tenants)}
         eng.flush()
         for t, rid in rids.items():
             np.testing.assert_array_equal(
@@ -226,9 +239,9 @@ def test_aug_embedding_stacks_stage_lazily(rng):
     reg = _lm_registry(rng, tenants=2)
     eng = MoLeDeliveryEngine(lm_registry=reg)
     toks = rng.integers(0, VOCAB, (2, 6))
-    eng.deliver_tokens("t0", toks)
+    _del_tokens(eng, "t0", toks)
     assert "aug_embeds" not in eng._lm_plan.arrays
-    feats = eng.deliver_tokens("t1", toks, deliver="embed")
+    feats = _del_tokens(eng, "t1", toks, deliver="embed")
     assert "aug_embeds" in eng._lm_plan.arrays
     want = np.asarray(reg.session("t1").aug_embedding)[
         reg.session("t1").morpher.perm
@@ -236,7 +249,7 @@ def test_aug_embedding_stacks_stage_lazily(rng):
     np.testing.assert_array_equal(feats, want)
     # and the token-only path still serves exactly after the lane appeared
     np.testing.assert_array_equal(
-        eng.deliver_tokens("t0", toks),
+        _del_tokens(eng, "t0", toks),
         np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks))),
     )
 
@@ -250,7 +263,7 @@ def test_reset_pending_keeps_token_lane_fast_path(rng):
     toks = {t: rng.integers(0, VOCAB, (2, 8)) for t in reg.tenant_ids}
 
     def roundtrip():
-        rids = {t: eng.submit_tokens(t, toks[t]) for t in reg.tenant_ids}
+        rids = {t: _sub_tokens(eng, t, toks[t]) for t in reg.tenant_ids}
         eng.flush()
         for t, rid in rids.items():
             np.testing.assert_array_equal(
@@ -275,7 +288,7 @@ def test_engine_accepts_lm_registry_positionally(rng):
     assert eng.lm_registry is reg and eng.registry is None
     toks = rng.integers(0, VOCAB, (1, 4))
     np.testing.assert_array_equal(
-        eng.deliver_tokens("t0", toks),
+        _del_tokens(eng, "t0", toks),
         np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks))),
     )
     with pytest.raises(ValueError, match="two LM registries"):
@@ -288,17 +301,19 @@ def test_token_intake_validation(rng):
     reg = _lm_registry(rng, tenants=1)
     eng = MoLeDeliveryEngine(lm_registry=reg)
     with pytest.raises(KeyError):
-        eng.submit_tokens("nobody", np.zeros((1, 4), np.int32))
+        _sub_tokens(eng, "nobody", np.zeros((1, 4), np.int32))
     with pytest.raises(ValueError, match="out of range"):
-        eng.submit_tokens("t0", np.full((1, 4), VOCAB, np.int64))
+        _sub_tokens(eng, "t0", np.full((1, 4), VOCAB, np.int64))
     with pytest.raises(ValueError, match="int tokens"):
-        eng.submit_tokens("t0", np.zeros((1, 4), np.float32))
+        _sub_tokens(eng, "t0", np.zeros((1, 4), np.float32))
     with pytest.raises(ValueError, match="deliver"):
-        eng.submit_tokens("t0", np.zeros((1, 4), np.int32), deliver="logits")
+        _sub_tokens(eng, "t0", np.zeros((1, 4), np.int32), deliver="logits")
     with pytest.raises(ValueError, match="no vision registry"):
-        eng.submit("t0", np.zeros((1, 3, 4, 4), np.float32))
+        eng.submit(DeliveryRequest("t0", np.zeros((1, 3, 4, 4), np.float32)))
     with pytest.raises(ValueError, match="no continuous lane"):
-        eng.submit_features("t0", np.zeros((2, 4), np.float32))
+        eng.submit(
+            DeliveryRequest("t0", np.zeros((2, 4), np.float32), lane="features")
+        )
 
 
 def test_registry_construction_validation(rng):
@@ -322,16 +337,18 @@ def test_async_front_door_serves_lm_lanes(rng):
     with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
         toks = rng.integers(0, VOCAB, (2, 6))
         x = rng.standard_normal((1, 3, 12)).astype(np.float32)
-        f_tok = front.submit_tokens("t0", toks)
-        f_emb = front.submit_tokens("t1", toks, deliver="embed")
-        f_feat = front.submit_features("t0", x)
+        f_tok = front.submit(DeliveryRequest("t0", toks, lane="tokens"))
+        f_emb = front.submit(
+            DeliveryRequest("t1", toks, lane="tokens", deliver="embed")
+        )
+        f_feat = front.submit(DeliveryRequest("t0", x, lane="features"))
         np.testing.assert_array_equal(
-            f_tok.result(timeout=60),
+            f_tok.result(timeout=60).payload,
             np.asarray(reg.session("t0").morph_tokens(jnp.asarray(toks))),
         )
-        assert f_emb.result(timeout=60).shape == (2, 6, DMODEL)
+        assert f_emb.result(timeout=60).payload.shape == (2, 6, DMODEL)
         np.testing.assert_allclose(
-            f_feat.result(timeout=60),
+            f_feat.result(timeout=60).payload,
             np.asarray(reg.session("t0").deliver_features(jnp.asarray(x))),
             atol=1e-5,
         )

@@ -24,7 +24,7 @@ from repro.core import (
     SessionRegistry,
     conv_reference,
 )
-from repro.runtime import MoLeDeliveryEngine
+from repro.runtime import DeliveryRequest, MoLeDeliveryEngine
 
 BACKENDS = ("jnp", "interpret")
 
@@ -49,9 +49,17 @@ def _check_roundtrip(alpha, beta, m, p, kappa, seed, batch):
 
 
 def _check_engine_matches_per_request(
-    tenants, kappa, batches, seed, backend, capacity=None
+    tenants, kappa, batches, seed, backend, capacity=None, priorities=None,
+    weights=None,
 ):
-    """Engine batched output == per-request deliver, any backend/traffic."""
+    """Engine batched output == per-request deliver, any backend/traffic.
+
+    With ``priorities``/``weights`` this doubles as the WFQ "permutation of
+    submissions" invariant: whatever the scheduler's service order under
+    mixed priorities, weighted shares, and slot churn, every submission
+    completes exactly once with the exact per-request result — no loss, no
+    duplication.
+    """
     geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
     g = np.random.default_rng(seed)
     reg = SessionRegistry(geom, kappa=kappa, capacity=capacity)
@@ -60,17 +68,75 @@ def _check_engine_matches_per_request(
         k = g.standard_normal(
             (geom.alpha, geom.beta, geom.p, geom.p)
         ).astype(np.float32) / np.sqrt(fan_in)
-        reg.register(f"t{i}", k)
+        reg.register(
+            f"t{i}", k,
+            weight=weights[i % len(weights)] if weights else 1.0,
+        )
     eng = MoLeDeliveryEngine(reg, backend=backend)
     reqs = []
     for i, b in enumerate(batches):
         t = f"t{i % tenants}"
         d = g.standard_normal((b, geom.alpha, geom.m, geom.m)).astype(np.float32)
-        reqs.append((eng.submit(t, d), t, d))
-    eng.flush()
+        prio = priorities[i % len(priorities)] if priorities else 0
+        reqs.append((eng.submit(DeliveryRequest(t, d, priority=prio)), t, d))
+    done = eng.flush()
+    assert sorted(done) == sorted(r for r, _, _ in reqs)  # permutation
     for rid, t, d in reqs:
         want = np.asarray(reg.session(t).deliver(jnp.asarray(d)))
         np.testing.assert_allclose(eng.take(rid), want, atol=1e-5)
+
+
+def _check_priority_dequeue_order(priorities, rows_each, seed):
+    """WFQ invariant: within a tenant, requests dequeue by priority (higher
+    first), FIFO within a level — a higher-priority request submitted before
+    a lower-priority one never dequeues after it."""
+    from repro.runtime import RequestQueue
+
+    g = np.random.default_rng(seed)
+    q = RequestQueue(4, max_rows=4, row_buckets=(1, 2, 4),
+                     group_buckets=(1, 2, 4))
+    rids = []
+    for i, p in enumerate(priorities):
+        n = rows_each[i % len(rows_each)]
+        rids.append(
+            q.submit("a", g.standard_normal((n, 4)).astype(np.float32),
+                     priority=p)
+        )
+    order = []
+    while True:
+        mb = q.coalesce({"a": 0})
+        if mb is None:
+            break
+        for s in mb.slices:
+            if s.request_id not in order:
+                order.append(s.request_id)
+    assert sorted(order) == sorted(rids)       # nothing lost or duplicated
+    by_rid = dict(zip(rids, priorities))
+    want = sorted(rids, key=lambda r: (-by_rid[r], r))
+    assert order == want, (order, want, priorities)
+
+
+def _check_shims_bit_identical(seed, batches):
+    """The deprecated trio must produce *bit-identical* results to direct
+    DeliveryRequest submission (same secrets via explicit seeds)."""
+    geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+    g = np.random.default_rng(seed)
+    k = g.standard_normal((geom.alpha, geom.beta, geom.p, geom.p)).astype(
+        np.float32
+    )
+    engines = []
+    for _ in range(2):
+        reg = SessionRegistry(geom, kappa=2)
+        reg.register("t0", k, seed=seed & 0xFFFF)
+        engines.append(MoLeDeliveryEngine(reg, backend="jnp"))
+    for b in batches:
+        d = g.standard_normal((b, geom.alpha, geom.m, geom.m)).astype(
+            np.float32
+        )
+        new = engines[0].deliver(DeliveryRequest("t0", d)).payload
+        with pytest.warns(DeprecationWarning):
+            old = engines[1].deliver("t0", d)
+        np.testing.assert_array_equal(old, new)
 
 
 def _check_lm_roundtrip(vocab, tenants, seq_lens, seed, backend, capacity=None):
@@ -96,8 +162,10 @@ def _check_lm_roundtrip(vocab, tenants, seq_lens, seed, backend, capacity=None):
         t = f"t{i % tenants}"
         toks = g.integers(0, vocab, (1 + i % 3, L))
         reqs.append((
-            eng.submit_tokens(t, toks),
-            eng.submit_tokens(t, toks, deliver="embed"),
+            eng.submit(DeliveryRequest(t, toks, lane="tokens")),
+            eng.submit(
+                DeliveryRequest(t, toks, lane="tokens", deliver="embed")
+            ),
             t, toks,
         ))
     eng.flush()
@@ -152,6 +220,46 @@ def test_lm_roundtrip_property(vocab, tenants, seq_lens, seed, backend, capacity
     _check_lm_roundtrip(vocab, tenants, seq_lens, seed, backend, capacity)
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    priorities=st.lists(st.integers(-3, 3), min_size=1, max_size=10),
+    rows_each=st.lists(st.integers(1, 6), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_priority_dequeue_order_property(priorities, rows_each, seed):
+    _check_priority_dequeue_order(priorities, rows_each, seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tenants=st.integers(1, 5),
+    batches=st.lists(st.integers(1, 6), min_size=1, max_size=8),
+    priorities=st.lists(st.integers(-2, 2), min_size=1, max_size=4),
+    weights=st.lists(st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+                     min_size=1, max_size=3),
+    seed=st.integers(0, 2**31 - 1),
+    capacity=st.sampled_from([None, 2]),
+)
+def test_wfq_permutation_property(
+    tenants, batches, priorities, weights, seed, capacity
+):
+    """No submission is lost or duplicated under mixed priorities, weighted
+    shares, and eviction churn — and every result stays exact."""
+    _check_engine_matches_per_request(
+        tenants, 2, batches, seed, "jnp", capacity=capacity,
+        priorities=priorities, weights=weights,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batches=st.lists(st.integers(1, 5), min_size=1, max_size=3),
+)
+def test_shims_bit_identical_property(seed, batches):
+    _check_shims_bit_identical(seed, batches)
+
+
 # ---------------------------------------------------------------------------
 # deterministic tier-1 slice of the same properties
 # ---------------------------------------------------------------------------
@@ -201,3 +309,27 @@ def test_lm_roundtrip_case_with_eviction():
     _check_lm_roundtrip(
         123, 4, (6, 14, 9, 30, 5, 8), seed=17, backend="jnp", capacity=2
     )
+
+
+@pytest.mark.parametrize("priorities,rows_each", [
+    ((0, 5, 0, 5), (3,)),               # alternating levels
+    ((2, 1, 0, -1, -2), (1, 6)),        # strictly descending
+    ((-1, -1, 3, 3, 0), (4, 2, 5)),     # duplicates: FIFO within a level
+])
+def test_priority_dequeue_order_cases(priorities, rows_each):
+    _check_priority_dequeue_order(priorities, rows_each, seed=23)
+
+
+@pytest.mark.parametrize("tenants,batches,priorities,weights,capacity", [
+    (3, (1, 4, 2, 5, 3), (1, 0, -1), (2.0, 1.0), None),
+    (5, (2, 2, 6, 1, 3, 2, 4), (0, 3), (1.0, 4.0, 0.5), 2),
+])
+def test_wfq_permutation_cases(tenants, batches, priorities, weights, capacity):
+    _check_engine_matches_per_request(
+        tenants, 2, batches, 29, "jnp", capacity=capacity,
+        priorities=priorities, weights=weights,
+    )
+
+
+def test_shims_bit_identical_case():
+    _check_shims_bit_identical(seed=31, batches=(3, 1, 4))
