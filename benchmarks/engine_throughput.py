@@ -28,6 +28,15 @@ deterministic scheduler arithmetic, not wall-clock, so the gate also runs in
 ``--smoke``), with every completed result still exactly equal to per-request
 delivery.
 
+A **decode sweep** times end-to-end generation: the per-tenant fallback loop
+(fuse Aug params, prefill + greedy-decode one tenant at a time — tenants*gen
+single-row dispatches) vs ``repro.runtime.ContinuousDecodeLane`` batching all
+tenants into one shared decode step against the registry's stacked AugE
+tables and Aug-heads.  Outputs are unmorphed token ids and must be
+bit-identical; the full run gates the lane at >= 4x with 16 tenants, and the
+``engine/b8_*_t16`` small-batch rows are gated at >= 1.0x (the historical
+0.25x dispatch-overhead regression).
+
 A fourth sweep measures the **gather cost** the slot-indexed grouped kernels
 exist to kill: the same 16-tenant traffic served (a) with capacity == T in
 slot order (the old identity-gather fast path), (b) with out-of-order
@@ -50,6 +59,8 @@ CSV rows:
   engine_latency/n{N}/async_deadline,<p95 us>,p50=<ms> p95=<ms> SLO=<ms>
   engine_lm/b{B}_s{L}_t{T}/per_request,<us>,<prompts/s>
   engine_lm/b{B}_s{L}_t{T}/engine,<us>,<prompts/s> speedup=<x>
+  engine_decode/t{T}_g{G}/per_tenant,<us>,<tok/s>
+  engine_decode/t{T}_g{G}/lane,<us>,<tok/s> speedup=<x> bit_identical
 
 ``--json PATH`` additionally writes every row to a machine-readable file
 (the committed ``BENCH_delivery.json`` trajectory point); ``--smoke`` runs a
@@ -95,7 +106,10 @@ def _build(tenants: int, kappa: int, seed: int = 0):
     return geom, registry, engine, rng
 
 
-def _sweep_point(batch: int, kappa: int, tenants: int) -> None:
+def _sweep_point(
+    batch: int, kappa: int, tenants: int,
+    min_speedup: float | None = None,
+) -> None:
     geom, registry, engine, rng = _build(tenants, kappa)
     requests = [
         (f"tenant-{i % tenants}",
@@ -130,13 +144,21 @@ def _sweep_point(batch: int, kappa: int, tenants: int) -> None:
     err = max(float(np.max(np.abs(f - b))) for f, b in zip(feats, base))
     assert err < 1e-5, f"engine/per-request mismatch: {err}"
 
+    speedup = dt_req / dt_eng
     tag = f"engine/b{batch}_k{kappa}_t{tenants}"
     emit(f"{tag}/per_request", dt_req * 1e6, f"{batch / dt_req:.1f} images/s")
     emit(
         f"{tag}/engine", dt_eng * 1e6,
-        f"{batch / dt_eng:.1f} images/s speedup={dt_req / dt_eng:.2f}x "
+        f"{batch / dt_eng:.1f} images/s speedup={speedup:.2f}x "
         f"err={err:.1e}",
     )
+    if min_speedup is not None:
+        # Small-batch rows used to lose to per-request delivery (0.25x at
+        # b8_k1_t16) before the unrolled per-slot dispatch path; gate so the
+        # regression can't silently return.
+        assert speedup >= min_speedup, (
+            f"{tag}: engine speedup {speedup:.2f}x < {min_speedup:.2f}x"
+        )
 
 
 def _time_engine(engine, requests, iters: int = 5) -> tuple[float, list]:
@@ -392,11 +414,16 @@ def _latency_point(
 
     # Warm every bucket the two runs may hit (compile outside the timers):
     # the deadline flusher lands on small (G, B) buckets that depend on how
-    # many requests arrive per SLO window, so sweep group-count x rows-per-
-    # tenant combinations, then the sync burst bucket, then replay the async
-    # arrival pattern once (the _delivery_step jit cache is process-global).
+    # many requests arrive per SLO window — anywhere from one request to the
+    # whole open-loop backlog if a flush runs long — so sweep group-count x
+    # rows-per-tenant up to n_requests//tenants, then the sync burst bucket,
+    # then replay the async arrival pattern once (the _delivery_step jit
+    # cache is process-global).
+    per_tenant_lattice = sorted(
+        {1, 2, 3, 4, 8, 16, 32, 64} & set(range(1, n_requests // tenants + 1))
+    )
     for n_tenants in (1, 2, 4):
-        for per_tenant in (1, 2, 3, 4):
+        for per_tenant in per_tenant_lattice:
             rids = [
                 engine.submit(_req(t, d))
                 for t, d in datas[: n_tenants * per_tenant]
@@ -459,17 +486,139 @@ def _latency_point(
     )
 
 
+def _decode_sweep_point(
+    tenants: int = 16, gen: int = 16, prompt_len: int = 16,
+    min_speedup: float | None = 4.0, iters: int = 3,
+) -> None:
+    """Continuous-batched cross-tenant decode vs the per-tenant loop.
+
+    One generation request per tenant on a smoke LM.  Baseline is the
+    pre-lane serving path (``launch.serve``'s fallback branch): fuse each
+    tenant's Aug params, then prefill + greedy-decode that tenant alone —
+    ``tenants * gen`` single-row device dispatches.  The lane runs the same
+    traffic as one ``ContinuousDecodeLane``: per-row prefills, then ``gen``
+    shared batched decode steps against the registry's stacked AugE tables
+    and Aug-heads.  Both sides unmorph to the provider view and must be
+    bit-identical (conjugation by the vocab permutation moves bits).
+    """
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.core.deploy import fuse_lm_params
+    from repro.core.lm import LMSessionRegistry
+    from repro.launch.steps import make_decode_step, make_prefill_step
+    from repro.models.api import Model
+    from repro.models.base import MoLeCfg
+    from repro.runtime import ContinuousDecodeLane
+
+    cfg = dataclasses.replace(
+        get_smoke_config("deepseek_7b"),   # untied head, no frontend, fp32
+        mole=MoLeCfg(enabled=True, mode="token"),
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    embed = np.asarray(params["embed"], np.float32)
+    head = np.asarray(params["head"], np.float32)
+    registry = LMSessionRegistry(cfg.vocab, cfg.d_model, capacity=tenants)
+    for i in range(tenants):
+        registry.register(f"lm-{i}", embed, seed=cfg.mole.seed + i, head=head)
+
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+        for _ in range(tenants)
+    ]
+    max_len = prompt_len + gen + 1
+
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+
+    def per_tenant_loop() -> list[np.ndarray]:
+        outs = []
+        for i in range(tenants):
+            sess = registry.session(f"lm-{i}")
+            dev = fuse_lm_params(params, cfg, token_morpher=sess.morpher)
+            served = np.asarray(sess.morpher.perm)[prompts[i]][None, :]
+            caches = model.init_cache(1, max_len)
+            logits, caches = prefill(
+                dev, {"tokens": jnp.asarray(served, jnp.int32)}, caches
+            )
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+            toks = [tok]
+            for s in range(gen - 1):
+                logits, caches = decode(
+                    dev, tok, jnp.asarray(prompt_len + s, jnp.int32), caches
+                )
+                tok = jnp.argmax(logits[:, 0], axis=-1).astype(
+                    jnp.int32
+                )[:, None]
+                toks.append(tok)
+            served_out = np.concatenate(
+                [np.asarray(t) for t in toks], axis=1
+            )[0]
+            outs.append(
+                np.asarray(sess.morpher.inv_perm)[served_out].astype(np.int32)
+            )
+        return outs
+
+    # One lane reused across replays: rows all retire at the end of run(),
+    # so each replay is a fresh join/decode/leave cycle on the same compiled
+    # step (building a new lane per replay would re-jit the closures).
+    lane = ContinuousDecodeLane(
+        model, params, registry, rows=tenants, max_len=max_len
+    )
+
+    def lane_run() -> list[np.ndarray]:
+        sids = [
+            lane.submit(f"lm-{i}", prompts[i], gen) for i in range(tenants)
+        ]
+        lane.run()
+        return [lane.take(s) for s in sids]
+
+    base = per_tenant_loop()   # warm + reference
+    got = lane_run()           # warm (compiles the batched step once)
+    for b, g in zip(base, got):
+        np.testing.assert_array_equal(b, g)
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        per_tenant_loop()
+    dt_loop = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        lane_run()
+    dt_lane = (time.perf_counter() - t0) / iters
+
+    toks = tenants * gen
+    speedup = dt_loop / dt_lane
+    tag = f"engine_decode/t{tenants}_g{gen}"
+    emit(f"{tag}/per_tenant", dt_loop * 1e6, f"{toks / dt_loop:.1f} tok/s")
+    emit(
+        f"{tag}/lane", dt_lane * 1e6,
+        f"{toks / dt_lane:.1f} tok/s speedup={speedup:.2f}x bit_identical",
+    )
+    if min_speedup is not None:
+        assert speedup >= min_speedup, (
+            f"{tag}: decode lane {speedup:.2f}x < {min_speedup:.2f}x "
+            f"vs the per-tenant loop"
+        )
+
+
 def run() -> None:
     for batch in (8, 64):
         for kappa in (1, 4):
             for tenants in (1, 4, 16):
-                _sweep_point(batch, kappa, tenants)
+                # The b8/t16 rows are the historical small-batch regression
+                # (0.25x before the unrolled per-slot path); gate them.
+                gate = 1.0 if batch == 8 and tenants == 16 else None
+                _sweep_point(batch, kappa, tenants, min_speedup=gate)
     _fairness_sweep_point()
     _gather_sweep_point(batch=64, tenants=16)
     for batch in (8, 64):
         for seq in (16, 128):
             for tenants in (1, 4, 16):
                 _token_sweep_point(batch, seq, tenants)
+    _decode_sweep_point(tenants=16, gen=16)
     for n in (16, 64, 256):
         _latency_point(n)
 
@@ -481,13 +630,18 @@ def run_smoke() -> None:
     2-core CI runners flake; the local/nightly ``run()`` asserts the real
     bounds — the ratios are still emitted for the uploaded artifact.  The
     fairness sweep's weight-ratio gate *does* run here: WFQ row allocation
-    is deterministic scheduler arithmetic, not wall-clock."""
+    is deterministic scheduler arithmetic, not wall-clock.  The decode
+    point likewise keeps only its bit-equality assert (batched lane decode
+    == per-tenant loop after unmorphing)."""
     _sweep_point(8, 1, 4)
     _fairness_sweep_point(requests_per_tenant=24, rounds=4)
     _gather_sweep_point(
         batch=16, tenants=4, max_ratio=None, sparse_max_ratio=None, iters=3
     )
     _token_sweep_point(8, 16, 4)
+    _decode_sweep_point(
+        tenants=4, gen=4, prompt_len=8, min_speedup=None, iters=1
+    )
     _latency_point(16)
 
 

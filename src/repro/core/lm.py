@@ -38,6 +38,7 @@ __all__ = [
     "LMSession",
     "LMSessionRegistry",
     "fuse_aug_embedding",
+    "fuse_aug_head",
     "fuse_aug_projection",
 ]
 
@@ -150,7 +151,11 @@ class LMSession:
     embedding: np.ndarray                          # (V, d_model) dev table
     embed_morpher: EmbeddingMorpher | None = None
     aug_projection: np.ndarray | None = None       # (d_in, d_out)
+    head: np.ndarray | None = None                 # (d_model, V) untied head
     _aug_embedding: np.ndarray | None = dataclasses.field(
+        default=None, repr=False
+    )
+    _aug_head: np.ndarray | None = dataclasses.field(
         default=None, repr=False
     )
 
@@ -162,6 +167,26 @@ class LMSession:
                 fuse_aug_embedding(self.embedding, self.morpher)
             )
         return self._aug_embedding
+
+    @property
+    def aug_head(self) -> np.ndarray:
+        """(d_model, V) fused LM head emitting *morphed-order* logits.
+
+        Untied checkpoints fuse their ``head`` through the vocab morph;
+        tied ones reuse the AugE table transposed — exactly what a
+        developer running ``w = AugE.T`` computes, so the engine's batched
+        decode bit-matches the per-tenant loop.  Lazy like
+        :attr:`aug_embedding` and for the same reason: only the decode
+        lane ever needs the (d_model, V) copy.
+        """
+        if self._aug_head is None:
+            if self.head is not None:
+                self._aug_head = np.asarray(
+                    fuse_aug_head(self.head, self.morpher)
+                )
+            else:
+                self._aug_head = np.ascontiguousarray(self.aug_embedding.T)
+        return self._aug_head
 
     def morph_tokens(self, tokens: jax.Array) -> jax.Array:
         return self.morpher.morph_tokens(tokens)
@@ -193,6 +218,7 @@ class LMSessionRegistry(SlotRegistry):
 
       * ``stacked_perms``            (S, V) int32    per-slot token morphs
       * ``stacked_aug_embeddings``   (S, V, d_model) per-slot AugE tables
+      * ``stacked_aug_heads``        (S, d_model, V) per-slot fused LM heads
       * ``stacked_embed_cores``      (S, q, q)       continuous morph cores
       * ``stacked_aug_projections``  (S, d_in, d_out) fused input projections
 
@@ -237,6 +263,7 @@ class LMSessionRegistry(SlotRegistry):
         w_in: np.ndarray | None = None,
         seed: int | None = None,
         weight: float = 1.0,
+        head: np.ndarray | None = None,
     ) -> LMSession:
         """Create an LM tenant: draw a fresh vocab permutation (and, with a
         continuous lane, a fresh morph core), fuse the developer artifacts.
@@ -244,8 +271,10 @@ class LMSessionRegistry(SlotRegistry):
         ``embedding`` is the developer's (V, d_model) table — the LM "first
         layer" shipped across the trust boundary, like the vision protocol's
         ``dev_kernels``; ``w_in`` (d_in, d_out) is its continuous-lane analogue.
-        ``weight`` is the tenant's weighted-fair-queueing share in the
-        delivery engine (see :meth:`SlotRegistry.set_weight`).
+        ``head`` is the (d_model, V) output projection of an *untied*
+        checkpoint; omitted, the tenant serves decode with the tied head
+        ``AugE.T``.  ``weight`` is the tenant's weighted-fair-queueing
+        share in the delivery engine (see :meth:`SlotRegistry.set_weight`).
         """
         embedding = np.asarray(embedding, np.float32)
         if embedding.shape != (self.vocab, self.d_model):
@@ -253,6 +282,13 @@ class LMSessionRegistry(SlotRegistry):
                 f"expected embedding ({self.vocab}, {self.d_model}), "
                 f"got {embedding.shape}"
             )
+        if head is not None:
+            head = np.asarray(head, np.float32)
+            if head.shape != (self.d_model, self.vocab):
+                raise ValueError(
+                    f"expected head ({self.d_model}, {self.vocab}), "
+                    f"got {head.shape}"
+                )
         seed = self._resolve_seed(seed)
         morpher = TokenMorpher.create(seed, self.vocab)
         embed_morpher = aug_projection = None
@@ -288,6 +324,7 @@ class LMSessionRegistry(SlotRegistry):
         sess = LMSession(
             morpher=morpher, embedding=embedding,
             embed_morpher=embed_morpher, aug_projection=aug_projection,
+            head=head,
         )
         self._adopt(tenant_id, sess)
         if weight != 1.0:
@@ -321,6 +358,13 @@ class LMSessionRegistry(SlotRegistry):
             return np.zeros((self.vocab, self.d_model), np.float32)
         return self._sessions[t].aug_embedding
 
+    def slot_aug_head(self, slot: int) -> np.ndarray:
+        """(d_model, V) fused LM head in ``slot`` (zeros when free)."""
+        t = self._slot_tenant[slot]
+        if t is None:
+            return np.zeros((self.d_model, self.vocab), np.float32)
+        return self._sessions[t].aug_head
+
     def slot_embed_core(self, slot: int) -> np.ndarray:
         """(q, q) continuous morph core in ``slot`` (zeros when free)."""
         t = self._slot_tenant[slot]
@@ -341,6 +385,11 @@ class LMSessionRegistry(SlotRegistry):
     def stacked_aug_embeddings(self) -> np.ndarray:
         return np.stack(
             [self.slot_aug_embedding(s) for s in range(self.capacity)]
+        )
+
+    def stacked_aug_heads(self) -> np.ndarray:
+        return np.stack(
+            [self.slot_aug_head(s) for s in range(self.capacity)]
         )
 
     def stacked_embed_cores(self) -> np.ndarray:

@@ -38,7 +38,11 @@ try:  # TPU-specific helpers are import-safe on CPU
 except ImportError:  # pragma: no cover
     pltpu = None
 
-__all__ = ["grouped_block_diag_matmul", "grouped_aug_gemm"]
+__all__ = [
+    "grouped_block_diag_matmul",
+    "grouped_aug_gemm",
+    "grouped_row_gemm",
+]
 
 
 def _require_pltpu():
@@ -197,3 +201,30 @@ def grouped_aug_gemm(
         interpret=interpret,
         **_grid_kwargs(("arbitrary", "parallel", "parallel", "arbitrary")),
     )(gidx, t, c_acs)
+
+
+def grouped_row_gemm(
+    h: jax.Array,        # (R, K) one decode row per group
+    gidx: jax.Array,     # (R,) int32 slot index per row
+    tables: jax.Array,   # (S, K, N) stacked per-slot matrices (e.g. LM heads)
+    *,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode-shaped grouped GEMM: ``h[r] @ tables[gidx[r]]`` -> (R, N).
+
+    Batched cross-tenant decode is a ``(G, d)``-row grouped GEMM — G groups
+    of exactly one row each — so this is :func:`grouped_aug_gemm` at
+    ``B = bm = 1``: the scalar-prefetched index_map still DMAs each row's
+    slot matrix straight out of the stacked array, and the 1-row block is
+    padded up to the fp32 (8, 128) min tile by Mosaic.  The ~8x row-pad
+    waste is noise next to the gather it avoids (each slot table is
+    ``K x N``, the row is ``K``).
+    """
+    R, K = h.shape
+    assert gidx.shape == (R,), (h.shape, gidx.shape)
+    out = grouped_aug_gemm(
+        h[:, None, :], gidx, tables, bm=1, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:, 0, :]

@@ -26,7 +26,11 @@ from . import ref
 from .aug_gemm import aug_gemm
 from .block_diag import block_diag_matmul
 from .dispatch import pallas_interpret, resolve_backend
-from .grouped import grouped_aug_gemm, grouped_block_diag_matmul
+from .grouped import (
+    grouped_aug_gemm,
+    grouped_block_diag_matmul,
+    grouped_row_gemm,
+)
 
 __all__ = [
     "morph_rows",
@@ -39,6 +43,8 @@ __all__ = [
     "aug_embed_batched",
     "token_morph_grouped",
     "aug_embed_grouped",
+    "aug_embed_rows_grouped",
+    "lm_head_rows_grouped",
 ]
 
 
@@ -316,4 +322,70 @@ def _aug_embed_grouped(tokens, gidx, tables):
         lambda t_, g_: ref.aug_embed_batched_ref(t_, tables),
         lambda t_, g_: ref.aug_embed_grouped_ref(t_, g_, tables),
         tokens, gidx,
+    )
+
+
+def aug_embed_rows_grouped(
+    tokens: jax.Array, gidx: jax.Array, tables: jax.Array,
+    backend: str | None = None,
+) -> jax.Array:
+    """Per-row slot-indexed AugE gather — the batched-decode embedding step.
+
+    tokens (R,) int (one *morphed* token per decode row), gidx (R,),
+    tables (S, V, d) -> (R, d).  A gather stays a gather: like
+    :func:`token_morph_grouped`, every backend routes to the XLA
+    formulation (no MACs to win back on the MXU), with the identity
+    arrangement — the continuous-batching steady state where row ``r``
+    serves slot ``r`` — reading the stacked tables fully in place.
+    """
+    resolve_backend(backend)
+    return _aug_embed_rows_grouped(tokens, gidx, tables)
+
+
+@jax.jit
+def _aug_embed_rows_grouped(tokens, gidx, tables):
+    gidx = _safe_gidx(gidx, tables.shape[0])
+    return _with_arange_fast_case(
+        gidx, tables.shape[0],
+        lambda t_, g_: ref.aug_embed_rows_batched_ref(t_, tables),
+        lambda t_, g_: ref.aug_embed_rows_grouped_ref(t_, g_, tables),
+        tokens, gidx,
+    )
+
+
+def lm_head_rows_grouped(
+    h: jax.Array, gidx: jax.Array, heads: jax.Array,
+    backend: str | None = None,
+) -> jax.Array:
+    """Slot-indexed per-row LM-head GEMM — the batched-decode logits step.
+
+    h (R, d) final hidden states (one per decode row), gidx (R,), heads
+    (S, d, V) fused per-slot Aug-heads -> (R, V) morphed-order logits.
+    Decode *is* a (R, d)-row grouped GEMM against the stacked heads: Pallas
+    backends run :func:`repro.kernels.grouped.grouped_row_gemm` (scalar-
+    prefetched in-place reads, rows padded to the min tile); the jnp
+    backend mirrors ``models.stack.lm_head``'s dtype semantics exactly
+    (contraction in ``h.dtype``) so batched decode emits bit-identical
+    logits, with the identity arrangement contracting against the stack in
+    place as one batched einsum.
+    """
+    return _lm_head_rows_grouped(h, gidx, heads, resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _lm_head_rows_grouped(h, gidx, heads, backend):
+    R, K = h.shape
+    N = heads.shape[-1]
+    gidx = _safe_gidx(gidx, heads.shape[0])
+    bn, bk = min(128, N), min(512, K)
+    if backend != "jnp" and N % bn == 0 and K % bk == 0:
+        return grouped_row_gemm(
+            h, gidx, heads, bn=bn, bk=bk,
+            interpret=pallas_interpret(backend),
+        )
+    return _with_arange_fast_case(
+        gidx, heads.shape[0],
+        lambda h_, g_: ref.lm_head_rows_batched_ref(h_, heads),
+        lambda h_, g_: ref.lm_head_rows_grouped_ref(h_, g_, heads),
+        h, gidx,
     )

@@ -135,6 +135,55 @@ def aug_embed_batched_ref(tokens: jax.Array, tables: jax.Array) -> jax.Array:
     return jax.vmap(lambda e, t: e[t])(tables, tokens)
 
 
+def aug_embed_rows_grouped_ref(
+    tokens: jax.Array, gidx: jax.Array, tables: jax.Array
+) -> jax.Array:
+    """Per-row slot-indexed AugE gather (batched decode: one token per row).
+
+    tokens: (R,) int, gidx: (R,), tables: (S, V, d) -> (R, d).
+    """
+
+    def step(_, inp):
+        t, i = inp
+        e = jax.lax.dynamic_index_in_dim(tables, i, 0, keepdims=False)
+        return None, e[t]
+
+    _, out = jax.lax.scan(step, None, (tokens, gidx))
+    return out
+
+
+def aug_embed_rows_batched_ref(tokens: jax.Array, tables: jax.Array) -> jax.Array:
+    """Per-row AugE gather, one resident table per row (the identity-order
+    fast case): tokens (R,), tables (R, V, d) -> (R, d)."""
+    return jax.vmap(lambda e, t: e[t])(tables, tokens)
+
+
+def lm_head_rows_grouped_ref(
+    h: jax.Array, gidx: jax.Array, heads: jax.Array
+) -> jax.Array:
+    """Per-row slot-indexed LM-head GEMM: h (R, d), gidx (R,),
+    heads (S, d, V) -> (R, V) logits.
+
+    Contracts in ``h.dtype`` (weights cast to it), matching
+    ``models.stack.lm_head`` — batched decode must emit bit-identical
+    logits to the per-tenant loop.
+    """
+
+    def step(_, inp):
+        hr, i = inp
+        w = jax.lax.dynamic_index_in_dim(heads, i, 0, keepdims=False)
+        return None, jnp.dot(hr, w.astype(hr.dtype))
+
+    _, out = jax.lax.scan(step, None, (h, gidx))
+    return out
+
+
+def lm_head_rows_batched_ref(h: jax.Array, heads: jax.Array) -> jax.Array:
+    """Per-row LM-head GEMM, one resident head per row (fast case):
+    h (R, d), heads (R, d, V) -> (R, V), contraction in ``h.dtype``."""
+    return jnp.einsum("rd,rdv->rv", h, heads.astype(h.dtype))
+
+
 def wkv6_ref(
     r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     u: jax.Array, s0: jax.Array,

@@ -193,15 +193,20 @@ def run_lm(args) -> np.ndarray:
     vocab permutation in the shared ``LMSessionRegistry``; prompt requests
     coalesce into length-bucketed token microbatches and morph as one jitted
     multi-tenant gather — sync flush or the async deadline flusher.
-    Developer side: prefill + greedy decode per tenant, with that tenant's
-    Aug-fused params.  Provider unmorphs the sampled tokens.
+    Developer side: plain LMs decode through the continuous-batched
+    cross-tenant :class:`~repro.runtime.decode.ContinuousDecodeLane` (one
+    shared batched step over all tenants' rows, fed by the registry's
+    stacked AugE tables / Aug-heads); frontend/audio models fall back to
+    per-tenant Aug-fused prefill + decode.  Provider unmorphs the sampled
+    tokens.
 
     Returns the unmorphed generations, request-ordered — with ``--tenants 1``
     bit-identical to the pre-engine single-``TokenMorpher`` path.
     """
     from repro.core.lm import LMSessionRegistry
     from repro.runtime import (
-        AsyncDeliveryEngine, DeliveryRequest, MoLeDeliveryEngine,
+        AsyncDeliveryEngine, ContinuousDecodeLane, DeliveryRequest,
+        MoLeDeliveryEngine,
     )
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -230,12 +235,18 @@ def run_lm(args) -> np.ndarray:
             cfg.vocab, embed.shape[1], capacity=capacity
         )
         weights = _weights_of(args, tenants)
+        head = (
+            None
+            if cfg.tie_embeddings or cfg.family == "audio"
+            else np.asarray(params["head"], np.float32)
+        )
         for i in range(tenants):
             # Tenant lm-0 draws the same secret as the pre-engine single-
             # morpher path (seed = cfg.mole.seed), so --tenants 1 reproduces
             # it bit-for-bit; other tenants offset the seed.
             registry.register(
-                f"lm-{i}", embed, seed=cfg.mole.seed + i, weight=weights[i]
+                f"lm-{i}", embed, seed=cfg.mole.seed + i, weight=weights[i],
+                head=head,
             )
         engine = MoLeDeliveryEngine(
             lm_registry=registry, backend=args.backend or None,
@@ -278,47 +289,76 @@ def run_lm(args) -> np.ndarray:
         served_prompts = raw_prompts
         dt_morph = 0.0
 
-    # ---- developer side: Aug-fused params, prefill + decode per tenant ---
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model), donate_argnums=(3,))
+    # ---- developer side ---------------------------------------------------
     max_len = args.prompt_len + args.gen + 1
-    by_tenant: dict[str, list[int]] = {}
-    for r, t in enumerate(tenant_of):
-        by_tenant.setdefault(t if use_mole else "all", []).append(r)
-
     final = np.zeros((args.requests, args.gen), np.int64)
-    t0 = time.time()
-    for t, ridx in by_tenant.items():
-        sess = registry.session(t) if use_mole else None
-        dev_params = (
-            fuse_lm_params(params, cfg, token_morpher=sess.morpher)
-            if use_mole else params
+    use_lane = use_mole and cfg.frontend is None and cfg.family != "audio"
+    if use_lane:
+        # Continuous-batched cross-tenant decode: every request becomes a
+        # lane row; all tenants decode in one shared batched step against
+        # the registry's stacked AugE tables / Aug-heads, and finished rows
+        # hand their slot to the next queued request between steps.  The
+        # lane unmorphs on take(), so `final` is already the provider view.
+        t0 = time.time()
+        lane = ContinuousDecodeLane(
+            model, params, registry,
+            rows=min(args.requests, registry.capacity),
+            max_len=max_len, backend=args.backend or None,
         )
-        batch = {"tokens": jnp.asarray(served_prompts[ridx], jnp.int32)}
-        if cfg.frontend is not None:
-            key = "frames" if cfg.frontend.kind == "audio" else "patches"
-            batch[key] = jnp.zeros(
-                (len(ridx), cfg.frontend.n_tokens, cfg.frontend.d_in),
-                jnp.bfloat16,
+        sids = [
+            lane.submit(
+                tenant_of[r], served_prompts[r], args.gen,
+                priority=priorities[r], premorphed=True,
             )
-        caches = model.init_cache(len(ridx), max_len)
-        logits, caches = prefill(dev_params, batch, caches)
-        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens = [tok]
-        for i in range(args.gen - 1):
-            step_t = jnp.asarray(args.prompt_len + i, jnp.int32)
-            logits, caches = decode(dev_params, tok, step_t, caches)
+            for r in range(args.requests)
+        ]
+        lane.run()
+        for r, sid in enumerate(sids):
+            final[r] = lane.take(sid)
+        dt = time.time() - t0
+    else:
+        # Frontend/audio (or mole=off) fallback: Aug-fused params, prefill
+        # + greedy decode one tenant group at a time.
+        prefill = jax.jit(make_prefill_step(model))
+        decode = jax.jit(make_decode_step(model), donate_argnums=(3,))
+        by_tenant: dict[str, list[int]] = {}
+        for r, t in enumerate(tenant_of):
+            by_tenant.setdefault(t if use_mole else "all", []).append(r)
+
+        t0 = time.time()
+        for t, ridx in by_tenant.items():
+            sess = registry.session(t) if use_mole else None
+            dev_params = (
+                fuse_lm_params(params, cfg, token_morpher=sess.morpher)
+                if use_mole else params
+            )
+            batch = {"tokens": jnp.asarray(served_prompts[ridx], jnp.int32)}
+            if cfg.frontend is not None:
+                key = "frames" if cfg.frontend.kind == "audio" else "patches"
+                batch[key] = jnp.zeros(
+                    (len(ridx), cfg.frontend.n_tokens, cfg.frontend.d_in),
+                    jnp.bfloat16,
+                )
+            caches = model.init_cache(len(ridx), max_len)
+            logits, caches = prefill(dev_params, batch, caches)
             tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-            out_tokens.append(tok)
-        served_out = np.concatenate(
-            [np.asarray(tk) for tk in out_tokens], axis=1
-        )
-        # ---- provider side: unmorph this tenant's served tokens ----------
-        final[ridx] = (
-            np.asarray(sess.morpher.inv_perm)[served_out]
-            if use_mole else served_out
-        )
-    dt = time.time() - t0
+            out_tokens = [tok]
+            for i in range(args.gen - 1):
+                step_t = jnp.asarray(args.prompt_len + i, jnp.int32)
+                logits, caches = decode(dev_params, tok, step_t, caches)
+                tok = jnp.argmax(logits[:, 0], axis=-1).astype(
+                    jnp.int32
+                )[:, None]
+                out_tokens.append(tok)
+            served_out = np.concatenate(
+                [np.asarray(tk) for tk in out_tokens], axis=1
+            )
+            # ---- provider side: unmorph this tenant's served tokens ------
+            final[ridx] = (
+                np.asarray(sess.morpher.inv_perm)[served_out]
+                if use_mole else served_out
+            )
+        dt = time.time() - t0
 
     tps = args.requests * args.gen / dt
     engine_line = ""

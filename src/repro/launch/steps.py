@@ -13,8 +13,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import aug_embed_rows_grouped, lm_head_rows_grouped
+from ..models import blocks as B
+from ..models import layers as L
+from ..models import stack as S
 from ..models.api import Model
 from ..optim import adamw
+from ..sharding.hints import hint
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,3 +90,88 @@ def make_decode_step(model: Model):
         return model.decode(params, token, t, caches)
 
     return decode_step
+
+
+def _check_plain_lm(model: Model, what: str) -> None:
+    cfg = model.cfg
+    if cfg.family == "audio" or cfg.frontend is not None:
+        raise ValueError(
+            f"{what} serves plain LM decode only (family={cfg.family!r}, "
+            f"frontend={'set' if cfg.frontend else None}); use the "
+            f"per-tenant prefill/decode steps for frontend/audio models"
+        )
+
+
+def make_row_prefill_step(model: Model):
+    """Single-sequence prefill against *delivered* per-tenant artifacts.
+
+    ``(params, aug_embed (V, d), aug_head (d, V), tokens (1, L), caches)
+    -> (first sampled token (1,) int32, caches)``
+
+    The continuous-batching admission step: ``params`` are the shared
+    (tenant-independent) trunk weights, and the tenant's fused AugE table /
+    Aug-head arrive as arguments — one compiled graph serves every tenant,
+    where the per-tenant loop re-fused full param trees.  Only the last
+    position's logits are computed (norm and head are per-position maps, so
+    this is bit-identical to slicing the full-sequence logits).
+    """
+    _check_plain_lm(model, "make_row_prefill_step")
+    cfg = model.cfg
+
+    def row_prefill_step(params, aug_embed, aug_head, tokens, caches):
+        rs = B.RunState(mode="full", write_cache=True)
+        h = aug_embed[tokens].astype(cfg.adtype)
+        if cfg.scale_embedding:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+        h = hint(h, "dp", None, None)
+        h, caches = S.apply_stack(params, h, cfg, rs, caches)
+        h = L.norm(h[:, -1:], params["final_norm"], cfg.norm)
+        logits = jnp.einsum("bsd,dv->bsv", h, aug_head.astype(h.dtype))
+        logits = hint(logits, "dp", None, "model")
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), caches
+
+    return row_prefill_step
+
+
+def make_batched_decode_step(model: Model, backend: str | None = None):
+    """One greedy decode step for a whole cross-tenant row batch.
+
+    ``(params, aug_embeds (S, V, d), aug_heads (S, d, V), sidx (R,),
+    tokens (R,), t (R,), caches) -> (next tokens (R,) int32, caches)``
+
+    Each row ``r`` is one tenant sequence: its token embeds through slot
+    ``sidx[r]``'s AugE table (:func:`~repro.kernels.ops.aug_embed_rows_grouped`),
+    the shared trunk runs vmapped over rows (per-row position ``t[r]`` and
+    per-row B=1 KV cache — rtp-llm's per-request state shaped for one
+    shared batched step), and the logits come from the ``(R, d)``-row
+    grouped GEMM against the stacked per-slot Aug-heads
+    (:func:`~repro.kernels.ops.lm_head_rows_grouped`).  ``caches`` is a
+    B=1 cache pytree stacked to a leading (R, ...) axis.  Every array
+    argument keeps a fixed shape as sequences join/leave rows, so the
+    jitted step never retraces on churn.
+    """
+    _check_plain_lm(model, "make_batched_decode_step")
+    cfg = model.cfg
+
+    def batched_decode_step(params, aug_embeds, aug_heads, sidx, tokens, t,
+                            caches):
+        h0 = aug_embed_rows_grouped(tokens, sidx, aug_embeds, backend=backend)
+        h0 = h0.astype(cfg.adtype)
+        if cfg.scale_embedding:
+            h0 = h0 * jnp.asarray(cfg.d_model ** 0.5, h0.dtype)
+
+        def row(h0_r, t_r, cache_r):
+            rs = B.RunState(mode="decode", t=t_r)
+            h = hint(h0_r[None, None, :], "dp", None, None)
+            h, nc = S.apply_stack(params, h, cfg, rs, cache_r)
+            h = L.norm(h, params["final_norm"], cfg.norm)
+            return h[0, 0], nc
+
+        hs, new_caches = jax.vmap(row, in_axes=(0, 0, 0))(h0, t, caches)
+        logits = lm_head_rows_grouped(hs, sidx, aug_heads, backend=backend)
+        logits = hint(logits, "dp", None, "model")
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+    return batched_decode_step

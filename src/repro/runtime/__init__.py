@@ -3,21 +3,27 @@
   api           typed front door: DeliveryRequest / DeliveryResult descriptors
   engine        batched multi-tenant MoLe delivery engine (morph + Aug-Conv)
   async_engine  async front door: deadline flusher, latency SLOs, admission
+  decode        continuous-batched cross-tenant LM decode lane
   queue         weighted-fair request queues + padded-microbatch coalescing
   resilience    resilient loop, failure injection, stragglers
 """
 from .api import DeliveryRequest, DeliveryResult
 from .async_engine import AdmissionError, AsyncDeliveryEngine
+from .decode import ContinuousDecodeLane
 from .engine import EngineStats, MoLeDeliveryEngine, delivery_trace_count
-from .queue import Microbatch, QueuedRequest, RequestQueue, TokenQueue
+from .queue import (
+    FairAdmissionQueue, Microbatch, QueuedRequest, RequestQueue, TokenQueue,
+)
 from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
 
 __all__ = [
     "AdmissionError",
     "AsyncDeliveryEngine",
+    "ContinuousDecodeLane",
     "DeliveryRequest",
     "DeliveryResult",
     "EngineStats",
+    "FairAdmissionQueue",
     "MoLeDeliveryEngine",
     "delivery_trace_count",
     "Microbatch",

@@ -7,10 +7,9 @@ features — is addressed through one request type:
     delivery mode, priority, optional per-request deadline, metadata) that is
     **validated and normalized exactly once**, here, before it reaches a
     queue.  The engine front doors (``MoLeDeliveryEngine.submit`` /
-    ``AsyncDeliveryEngine.submit``) accept it directly; the legacy
+    ``AsyncDeliveryEngine.submit``) accept it — and nothing else: the legacy
     lane-specific trio (``submit``/``submit_tokens``/``submit_features`` with
-    positional tenant+payload) remains as deprecated shims that build one of
-    these.
+    positional tenant+payload) was removed after a deprecation cycle.
   * :class:`DeliveryResult` — the response: the delivered payload plus the
     per-request trace (submit/complete timestamps, queue depth at admission,
     priority) that the scheduling layer accounts against.
@@ -35,7 +34,6 @@ per-lane method cross-product; it deliberately imports nothing from
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Mapping
 
 import numpy as np
@@ -44,18 +42,6 @@ from repro.core.d2r import unroll_batch
 
 __all__ = ["DeliveryRequest", "DeliveryResult", "LANES", "DELIVER_MODES"]
 
-
-def warn_deprecated_shim(owner: str, old: str, new: str) -> None:
-    """One deprecation warning per legacy front-door call site (shared by the
-    sync and async engines so the wording/stacklevel cannot drift)."""
-    warnings.warn(
-        f"{owner}.{old} is deprecated; build a typed "
-        f"repro.runtime.DeliveryRequest and call {new}",
-        DeprecationWarning,
-        # here (1) -> the module-local _warn_shim (2) -> the shim method (3)
-        # -> the user's deprecated call site (4)
-        stacklevel=4,
-    )
 
 LANES = ("rows", "tokens", "features")
 DELIVER_MODES = ("tokens", "embed")
@@ -229,8 +215,7 @@ def normalize(request: DeliveryRequest, engine) -> DeliveryRequest:
     if not isinstance(request, DeliveryRequest):
         raise TypeError(
             f"expected a DeliveryRequest, got {type(request).__name__} "
-            f"(the tenant_id+payload calling convention is served by the "
-            f"deprecated submit(tenant_id, data) shims)"
+            f"(the legacy tenant_id+payload calling convention was removed)"
         )
     payload = _NORMALIZERS[request.lane](engine, request)
     return dataclasses.replace(request, payload=payload)

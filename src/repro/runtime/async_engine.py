@@ -8,9 +8,9 @@ latency-SLO'd, admission-controlled front door over it:
   * **Typed front door** — :meth:`AsyncDeliveryEngine.submit` takes the same
     :class:`repro.runtime.DeliveryRequest` as the sync engine (any lane) and
     returns a ``concurrent.futures.Future`` resolving to a
-    :class:`repro.runtime.DeliveryResult`; callers never touch jax.  The
-    legacy lane-specific trio remains as deprecated shims whose futures
-    resolve to the bare payload (bit-identical to before).
+    :class:`repro.runtime.DeliveryResult`; callers never touch jax.  (The
+    legacy lane-specific ``submit_tokens``/``submit_features``/
+    ``deliver_tokens`` trio was removed after a deprecation cycle.)
   * **Background flusher** — a daemon thread owns all engine access.
   * **Deadline-driven flushing** — a flush fires when any pending request
     reaches its deadline: per-request ``DeliveryRequest.deadline_ms`` when
@@ -61,10 +61,6 @@ __all__ = ["AdmissionError", "AsyncDeliveryEngine"]
 
 class AdmissionError(RuntimeError):
     """A tenant exceeded its in-flight row quota under ``admission="reject"``."""
-
-
-def _warn_shim(old: str, new: str) -> None:
-    api.warn_deprecated_shim("AsyncDeliveryEngine", old, new)
 
 
 class AsyncDeliveryEngine:
@@ -127,7 +123,6 @@ class AsyncDeliveryEngine:
         self._cv = threading.Condition()
         self._resolving = 0  # futures popped by the flusher, not yet resolved
         self._futures: dict[int, Future] = {}
-        self._unwrap: dict[int, bool] = {}  # rid -> resolve to bare payload?
         self._submitted_at: dict[int, float] = {}
         # Min-heap of (deadline, rid): the next due deadline is a peek
         # instead of an O(n) scan on every flusher wake.  Deadlines are
@@ -173,7 +168,7 @@ class AsyncDeliveryEngine:
         with self._cv:
             return self.engine.prefetch(tenant_ids)
 
-    def _admit(self, req: DeliveryRequest, *, unwrap: bool) -> Future:
+    def _admit(self, req: DeliveryRequest) -> Future:
         """Admission path: quota-gate the engine enqueue under the lock.
 
         ``req`` is already normalized (outside the lock); rows are the
@@ -227,7 +222,6 @@ class AsyncDeliveryEngine:
             fut: Future = Future()
             fut.request_id = rid  # engine request id, for tracing/tests
             self._futures[rid] = fut
-            self._unwrap[rid] = unwrap
             now = time.monotonic()
             self._submitted_at[rid] = now
             delay_s = (
@@ -242,74 +236,29 @@ class AsyncDeliveryEngine:
             self._cv.notify_all()  # wake the flusher: new deadline / bucket
             return fut
 
-    def _submit_request(self, request: DeliveryRequest, *,
-                        unwrap: bool = False) -> Future:
+    def _submit_request(self, request: DeliveryRequest) -> Future:
         # Normalization (payload validation/conversion) is pure per-request
         # work — run it before taking the lock so it never serializes
         # submitters.
-        return self._admit(api.normalize(request, self.engine), unwrap=unwrap)
+        return self._admit(api.normalize(request, self.engine))
 
-    def submit(self, request: DeliveryRequest | str, data=None) -> Future:
+    def submit(self, request: DeliveryRequest) -> Future:
         """Enqueue one :class:`DeliveryRequest` (any lane); the Future
         resolves to a :class:`repro.runtime.DeliveryResult` once a
-        deadline/bucket flush completes it.
+        deadline/bucket flush completes it."""
+        if not isinstance(request, DeliveryRequest):
+            raise TypeError(
+                f"submit() takes a DeliveryRequest, got "
+                f"{type(request).__name__} (the tenant+payload spelling was "
+                f"removed; put the payload on the DeliveryRequest)"
+            )
+        return self._submit_request(request)
 
-        The legacy ``submit(tenant_id, data)`` spelling still works as a
-        deprecated vision-lane shim whose future resolves to the bare
-        payload, exactly as before.
-        """
-        if isinstance(request, DeliveryRequest):
-            if data is not None:
-                raise TypeError(
-                    "submit(request) takes no second argument — put the "
-                    "payload on the DeliveryRequest"
-                )
-            return self._submit_request(request)
-        _warn_shim("submit(tenant_id, data)", "submit(request)")
-        return self._submit_request(DeliveryRequest(request, data), unwrap=True)
-
-    def submit_tokens(
-        self, tenant_id: str, tokens, *, deliver: str = "tokens"
-    ) -> Future:
-        """Deprecated: submit a ``DeliveryRequest(lane="tokens")`` instead."""
-        _warn_shim("submit_tokens", "submit(request)")
-        return self._submit_request(
-            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver),
-            unwrap=True,
-        )
-
-    def submit_features(self, tenant_id: str, data) -> Future:
-        """Deprecated: submit a ``DeliveryRequest(lane="features")`` instead."""
-        _warn_shim("submit_features", "submit(request)")
-        return self._submit_request(
-            DeliveryRequest(tenant_id, data, lane="features"), unwrap=True
-        )
-
-    def deliver(self, request: DeliveryRequest | str, data=None,
+    def deliver(self, request: DeliveryRequest,
                 timeout: float | None = None):
         """Synchronous convenience: submit and wait for the
-        :class:`DeliveryResult` (legacy tenant+payload spelling: the bare
-        payload, deprecated)."""
-        if isinstance(request, DeliveryRequest):
-            if data is not None:
-                raise TypeError(
-                    "deliver(request) takes no second argument — put the "
-                    "payload on the DeliveryRequest"
-                )
-            return self._submit_request(request).result(timeout=timeout)
-        _warn_shim("deliver(tenant_id, data)", "deliver(request)")
-        return self._submit_request(
-            DeliveryRequest(request, data), unwrap=True
-        ).result(timeout=timeout)
-
-    def deliver_tokens(self, tenant_id: str, tokens, *,
-                       deliver: str = "tokens", timeout: float | None = None):
-        """Deprecated: ``deliver(DeliveryRequest(lane="tokens"))`` instead."""
-        _warn_shim("deliver_tokens", "deliver(request)")
-        return self._submit_request(
-            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver),
-            unwrap=True,
-        ).result(timeout=timeout)
+        :class:`DeliveryResult`."""
+        return self.submit(request).result(timeout=timeout)
 
     def flush_now(self) -> None:
         """Ask the flusher to flush immediately (does not wait for results)."""
@@ -430,7 +379,6 @@ class AsyncDeliveryEngine:
                     # into the failed work items.)
                     failed = [(f, error) for f in self._futures.values()]
                     self._futures.clear()
-                    self._unwrap.clear()
                     self._submitted_at.clear()
                     self._deadline_heap.clear()
                     self._rid_tenant.clear()
@@ -451,11 +399,7 @@ class AsyncDeliveryEngine:
                             del self._inflight_rows[tenant]
                         # Completion latency (p50/p95, split per priority)
                         # was recorded by the engine at publish time.
-                        result = self.engine.take_result(rid)
-                        resolved.append((
-                            fut,
-                            result.payload if self._unwrap.pop(rid) else result,
-                        ))
+                        resolved.append((fut, self.engine.take_result(rid)))
                 self._resolving += len(resolved) + len(failed)
             # Resolve outside the lock: user callbacks must not deadlock us.
             # set_running_or_notify_cancel() guards against futures the

@@ -1,0 +1,291 @@
+"""Continuous-batched cross-tenant LM decode on top of the delivery plane.
+
+The serving hot loop used to be the last per-tenant serial path in the repo:
+``serve.py --mode lm`` fused a full param tree per tenant and ran
+prefill + greedy decode one tenant group at a time.  This module replaces it
+with one shared batched decode step over a fixed pool of **rows**:
+
+  * Row ``r`` holds one tenant *sequence* — its morphed token, its absolute
+    position, its B=1 KV cache (stacked to a leading ``(R, ...)`` axis), and
+    the registry slot ``sidx[r]`` whose stacked AugE table / Aug-head serve
+    its embedding and logits (the ``(R, d)``-row grouped GEMM of
+    ``kernels.ops.lm_head_rows_grouped``).
+  * **Continuous batching**: between steps, finished sequences retire and
+    queued ones are admitted under weighted fair queueing
+    (:class:`repro.runtime.queue.FairAdmissionQueue`) — a joiner prefills
+    into a free row's cache slot and decoding resumes with the *same*
+    compiled step: every array argument keeps its shape, so the jitted step
+    never retraces on churn (rtp-llm's per-request state shaped for one
+    shared batched step).
+  * Inactive rows keep decoding garbage against their stale state; their
+    outputs are ignored on the host.  Rows are independent (vmapped trunk,
+    per-row grouped gathers), so garbage rows cannot perturb live ones —
+    that independence is also why batched decode is *bit-identical* to the
+    per-tenant loop.
+
+Secrets reach the step through the same ``_sync_plan`` machinery as the
+engine's morph lanes: stacked ``(S, V, d)`` AugE tables and ``(S, d, V)``
+Aug-heads, patched in place on tenant churn, with the per-slot device arrays
+retained (``keep_slots``) so admission prefills read single slots without
+slicing the stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lm import LMSessionRegistry
+
+from .engine import _TRACES, _Plan, _sync_plan
+from .queue import FairAdmissionQueue
+
+__all__ = ["ContinuousDecodeLane", "DecodeRow"]
+
+
+@dataclasses.dataclass
+class DecodeRow:
+    """Host-side bookkeeping for one active lane row."""
+
+    seq_id: int
+    tenant_id: str
+    slot: int
+    remaining: int                 # decode steps still owed
+    generated: list = dataclasses.field(default_factory=list)  # morphed ids
+
+
+class ContinuousDecodeLane:
+    """A fixed pool of decode rows multiplexing many tenants' generations.
+
+    Parameters
+    ----------
+    model, params:
+        The shared trunk (tenant-independent weights).  Per-tenant
+        embedding/head artifacts come from ``registry``, never from
+        ``params`` — the trust boundary of the delivery engine.
+    registry:
+        :class:`LMSessionRegistry` holding every tenant's secrets.  Its
+        slot capacity must be >= ``rows``: an active row pins its tenant's
+        slot, and admission re-touches active tenants so registry LRU
+        eviction cannot reassign a slot out from under a running sequence.
+    rows:
+        Decode batch width R.  Fixed for the lane's lifetime (that is what
+        makes the step shape-stable).
+    max_len:
+        KV capacity per row (prompt + generated tokens must fit).
+    backend:
+        Kernel backend for the grouped embedding/head ops (None = auto).
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        registry: LMSessionRegistry,
+        *,
+        rows: int = 16,
+        max_len: int,
+        backend: str | None = None,
+    ):
+        if registry.capacity < rows:
+            raise ValueError(
+                f"registry capacity {registry.capacity} < rows {rows}: every "
+                f"active row pins a slot, so the lane could deadlock"
+            )
+        # The step builders live in launch.steps with the other serving
+        # steps; importing lazily keeps runtime importable without the
+        # launch layer (and avoids the upside-down import at module scope).
+        from repro.launch.steps import (
+            make_batched_decode_step, make_row_prefill_step,
+        )
+
+        self.model = model
+        self.params = params
+        self.registry = registry
+        self.rows = int(rows)
+        self.max_len = int(max_len)
+        self.queue = FairAdmissionQueue()
+        self._plan: _Plan | None = None
+        self._results: dict[int, np.ndarray] = {}
+
+        decode_fn = make_batched_decode_step(model, backend=backend)
+        prefill_fn = make_row_prefill_step(model)
+
+        def counted_decode(params_, aug_embeds, aug_heads, sidx, tokens, t,
+                           caches):
+            _TRACES[
+                ("decode_lane", tokens.shape, aug_embeds.shape,
+                 aug_heads.shape)
+            ] += 1
+            return decode_fn(params_, aug_embeds, aug_heads, sidx, tokens, t,
+                             caches)
+
+        def counted_prefill(params_, aug_embed, aug_head, tokens, caches):
+            _TRACES[("decode_lane_prefill", tokens.shape)] += 1
+            return prefill_fn(params_, aug_embed, aug_head, tokens, caches)
+
+        self._decode = jax.jit(counted_decode, donate_argnums=(6,))
+        # Donate the fresh B=1 cache; one trace per distinct prompt length
+        # (callers bucket prompts if they care — the *decode* step is the
+        # zero-retrace guarantee).
+        self._prefill = jax.jit(counted_prefill, donate_argnums=(4,))
+
+        def scatter_row(big, small, row):
+            return jax.tree.map(lambda b, s: b.at[row].set(s), big, small)
+
+        # Traced row index: one compiled scatter serves every row.
+        self._scatter = jax.jit(scatter_row, donate_argnums=(0,))
+
+        # Row state. Caches: a B=1 cache pytree stacked to (R, ...); fresh
+        # rows are all-empty (pos = -1 everywhere), so even before any
+        # admission the decode step computes harmlessly on garbage.
+        c1 = model.init_cache(1, self.max_len)
+        self._caches = jax.tree.map(
+            lambda l: jnp.stack([l] * self.rows), c1
+        )
+        self._row: list[DecodeRow | None] = [None] * self.rows
+        self._sidx = np.zeros(self.rows, np.int32)
+        self._tokens = np.zeros(self.rows, np.int32)
+        self._t = np.zeros(self.rows, np.int32)
+
+    # -- submission ----------------------------------------------------------
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self._row)
+
+    def submit(self, tenant_id: str, prompt, max_new_tokens: int, *,
+               priority: int = 0, premorphed: bool = False) -> int:
+        """Queue one generation request; returns a ``seq_id`` for take().
+
+        ``prompt`` is a (L,) / (1, L) int sequence.  The provider-side vocab
+        morph is applied here unless the caller already routed the prompt
+        through the engine's token lane (``premorphed=True`` — serve.py's
+        path, where prompt morphing is timed delivery traffic).
+        """
+        sess = self.registry.session(tenant_id)
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len ({self.max_len})"
+            )
+        if not premorphed:
+            prompt = sess.morpher.perm[prompt].astype(np.int32)
+        return self.queue.submit(
+            tenant_id, prompt, max_new_tokens, priority=priority,
+            weight=self.registry.weight_of(tenant_id),
+        )
+
+    # -- plan upkeep ---------------------------------------------------------
+    def _refresh_plan(self) -> _Plan:
+        reg = self.registry
+        plan = _sync_plan(
+            self._plan, reg,
+            {"aug_embeds": reg.slot_aug_embedding,
+             "aug_heads": reg.slot_aug_head},
+            # Admission prefills index one slot's table/head on the host.
+            keep_slots=("aug_embeds", "aug_heads"),
+        )
+        self._plan = plan
+        return plan
+
+    def _pin_active(self) -> None:
+        """LRU-touch every active tenant, then verify no active row's slot
+        was reassigned (shared-registry traffic may evict between steps)."""
+        for r in self._row:
+            if r is not None:
+                self.registry.slot_for(r.tenant_id)
+        for r in self._row:
+            if r is not None and (
+                self.registry._slot_tenant[r.slot] != r.tenant_id
+            ):
+                raise RuntimeError(
+                    f"tenant {r.tenant_id!r} lost slot {r.slot} mid-decode; "
+                    f"size the registry capacity >= rows + concurrent "
+                    f"morph-lane tenants"
+                )
+
+    # -- the continuous-batching loop ----------------------------------------
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self._row) if r is None]
+        while free and len(self.queue):
+            item = self.queue.take()
+            row = free.pop(0)
+            # Touch active tenants *before* assigning the joiner's slot, so
+            # registry LRU eviction (if capacity is full) lands on an
+            # inactive slot — there is one whenever a row is free, because
+            # capacity >= rows > active.
+            self._pin_active()
+            slot = self.registry.slot_for(item.tenant_id)
+            plan = self._refresh_plan()
+            caches1 = self.model.init_cache(1, self.max_len)
+            tok0, caches1 = self._prefill(
+                self.params,
+                plan.slots["aug_embeds"][slot],
+                plan.slots["aug_heads"][slot],
+                jnp.asarray(item.prompt[None, :]),
+                caches1,
+            )
+            self._caches = self._scatter(
+                self._caches, caches1, jnp.asarray(row, jnp.int32)
+            )
+            first = int(tok0[0])
+            self._row[row] = DecodeRow(
+                seq_id=item.seq_id, tenant_id=item.tenant_id, slot=slot,
+                remaining=item.max_new_tokens - 1, generated=[first],
+            )
+            self._sidx[row] = slot
+            self._tokens[row] = first
+            self._t[row] = item.prompt.size
+
+    def _retire(self) -> None:
+        for i, r in enumerate(self._row):
+            if r is not None and r.remaining == 0:
+                inv = self.registry.session(r.tenant_id).morpher.inv_perm
+                self._results[r.seq_id] = inv[
+                    np.asarray(r.generated, np.int64)
+                ].astype(np.int32)
+                self._row[i] = None
+
+    def step(self) -> int:
+        """Retire finished rows, admit queued sequences, run one batched
+        decode step.  Returns the number of rows still active."""
+        self._retire()
+        self._admit()
+        if self.active == 0:
+            return 0
+        self._pin_active()
+        plan = self._refresh_plan()
+        next_tok, self._caches = self._decode(
+            self.params,
+            plan.arrays["aug_embeds"], plan.arrays["aug_heads"],
+            jnp.asarray(self._sidx), jnp.asarray(self._tokens),
+            jnp.asarray(self._t), self._caches,
+        )
+        next_host = np.asarray(next_tok)
+        for i, r in enumerate(self._row):
+            if r is None or r.remaining == 0:
+                continue
+            r.generated.append(int(next_host[i]))
+            r.remaining -= 1
+            self._tokens[i] = next_host[i]
+            self._t[i] += 1
+        return self.active
+
+    def run(self) -> None:
+        """Drive steps until every queued/active sequence has finished."""
+        while len(self.queue) or self.active:
+            self.step()
+        self._retire()
+
+    def take(self, seq_id: int) -> np.ndarray:
+        """Redeem a finished sequence's unmorphed generated tokens."""
+        if seq_id not in self._results:
+            raise KeyError(
+                f"sequence {seq_id} not finished (or already taken)"
+            )
+        return self._results.pop(seq_id)

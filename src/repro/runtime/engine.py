@@ -71,6 +71,7 @@ import numpy as np
 from repro.core.d2r import reroll_batch
 from repro.core.lm import LMSessionRegistry
 from repro.core.protocol import SessionRegistry
+from repro.kernels import ref as kref
 from repro.kernels.dispatch import resolve_backend
 from repro.kernels.ops import (
     aug_conv_forward_grouped,
@@ -86,10 +87,6 @@ from .api import DeliveryRequest, DeliveryResult
 __all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
 
 _log = logging.getLogger(__name__)
-
-
-def _warn_shim(old: str, new: str) -> None:
-    api.warn_deprecated_shim("MoLeDeliveryEngine", old, new)
 
 
 def _window_quantile(xs, q: float) -> float:
@@ -288,9 +285,16 @@ class _Plan:
 
     version: int
     arrays: dict[str, jax.Array]    # name -> (S, ...) stacked per-slot secret
+    # name -> per-slot device arrays, kept only for lanes named in
+    # ``_sync_plan(..., keep_slots=)``.  The small-batch dispatch path and
+    # the decode lane's row prefill index single slots on the host; slicing
+    # the (S, ...) stack per call would copy, so those lanes pay 2x device
+    # memory to keep the unstacked views resident.
+    slots: dict[str, tuple] = dataclasses.field(default_factory=dict)
 
 
-def _sync_plan(plan, registry, slot_fns: dict[str, Callable[[int], np.ndarray]]):
+def _sync_plan(plan, registry, slot_fns: dict[str, Callable[[int], np.ndarray]],
+               keep_slots: tuple[str, ...] = ()):
     """Bring a device plan up to ``registry.version``.
 
     ``slot_fns`` maps each stacked-array name to the registry's per-slot
@@ -299,6 +303,11 @@ def _sync_plan(plan, registry, slot_fns: dict[str, Callable[[int], np.ndarray]])
     retrace on tenant churn, and the (S, ...) stacks are copied once, not
     once per slot.  A full rebuild happens only when the changelog has been
     trimmed or capacity grew (auto-capacity doubling).
+
+    Lanes named in ``keep_slots`` additionally retain the per-slot device
+    arrays in ``plan.slots[name]`` (tuple of S arrays).  Patches build a new
+    tuple rather than mutating, so earlier ``_WorkItem`` snapshots keep the
+    secrets they were coalesced against.
     """
     if plan is not None and plan.version != registry.version:
         stable = all(
@@ -311,24 +320,45 @@ def _sync_plan(plan, registry, slot_fns: dict[str, Callable[[int], np.ndarray]])
             plan = dataclasses.replace(plan, version=registry.version)
         else:
             idx = jnp.asarray(slots, jnp.int32)
+            fresh = {
+                name: {s: jnp.asarray(fn(s)) for s in slots}
+                for name, fn in slot_fns.items() if name in keep_slots
+            }
             plan = _Plan(
                 version=registry.version,
                 arrays={
                     name: plan.arrays[name].at[idx].set(
-                        np.stack([fn(s) for s in slots])
+                        jnp.stack(list(fresh[name].values()))
+                        if name in keep_slots
+                        else np.stack([fn(s) for s in slots])
                     )
                     for name, fn in slot_fns.items()
                 },
+                slots={
+                    name: tuple(
+                        fresh[name].get(s, old)
+                        for s, old in enumerate(plan.slots[name])
+                    )
+                    for name in plan.slots
+                },
             )
     if plan is None:
+        per_slot = {
+            name: tuple(
+                jnp.asarray(fn(s)) for s in range(registry.capacity)
+            )
+            for name, fn in slot_fns.items() if name in keep_slots
+        }
         plan = _Plan(
             version=registry.version,
             arrays={
-                name: jnp.asarray(
+                name: jnp.stack(per_slot[name]) if name in keep_slots
+                else jnp.asarray(
                     np.stack([fn(s) for s in range(registry.capacity)])
                 )
                 for name, fn in slot_fns.items()
             },
+            slots=per_slot,
         )
     return plan
 
@@ -401,9 +431,10 @@ class MoLeDeliveryEngine:
     :class:`DeliveryResult` traces (:meth:`take_result`).  Scheduling is
     weighted fair queueing: registry weights set cross-tenant shares,
     ``DeliveryRequest.priority`` orders within a tenant, and
-    ``DeliveryRequest.deadline_ms`` drives the async flusher.  The legacy
-    ``submit_tokens``/``submit_features``/``prepare_*``/``deliver_*`` trio
-    survives as deprecated shims.
+    ``DeliveryRequest.deadline_ms`` drives the async flusher.  (The legacy
+    ``submit_tokens``/``submit_features``/``prepare_*``/``deliver_*`` shim
+    trio was removed after a deprecation cycle; the typed request is the
+    only spelling.)
     """
 
     def __init__(
@@ -529,6 +560,9 @@ class MoLeDeliveryEngine:
         plan = _sync_plan(
             self._plan, reg,
             {"cores": reg.slot_core, "augs": reg.slot_aug},
+            # The small-batch path indexes single slots on the host; only
+            # the jnp backend routes there (Pallas shapes stay grouped).
+            keep_slots=("cores", "augs") if self.backend == "jnp" else (),
         )
         if plan is not self._plan:
             self._plan = plan
@@ -546,13 +580,16 @@ class MoLeDeliveryEngine:
         slot_fns = {"perms": reg.slot_perm}
         if self._embed_tables_needed:
             slot_fns["aug_embeds"] = reg.slot_aug_embedding
+        keep = ()
         if reg.has_embed_lane:
             slot_fns["embed_cores"] = reg.slot_embed_core
             slot_fns["aug_projs"] = reg.slot_aug_projection
+            if self.backend == "jnp":
+                keep = ("embed_cores", "aug_projs")
         prev = self._lm_plan
         if prev is not None and set(prev.arrays) != set(slot_fns):
             prev = None   # lane set changed (first embed request): rebuild
-        plan = _sync_plan(prev, reg, slot_fns)
+        plan = _sync_plan(prev, reg, slot_fns, keep_slots=keep)
         if plan is not self._lm_plan:
             self._lm_plan = plan
             for q in (self.token_queue, self.embed_queue):
@@ -562,23 +599,13 @@ class MoLeDeliveryEngine:
         return plan
 
     # -- request intake: the typed front door --------------------------------
-    def submit(self, request: DeliveryRequest | str, data=None) -> int:
+    def submit(self, request: DeliveryRequest) -> int:
         """Enqueue one :class:`~repro.runtime.DeliveryRequest` (any lane).
 
         Returns a request id redeemable after :meth:`flush` via
-        :meth:`take` / :meth:`take_result`.  The legacy
-        ``submit(tenant_id, data)`` calling convention still works as a
-        deprecated shim for the vision rows lane.
+        :meth:`take` / :meth:`take_result`.
         """
-        if isinstance(request, DeliveryRequest):
-            if data is not None:
-                raise TypeError(
-                    "submit(request) takes no second argument — put the "
-                    "payload on the DeliveryRequest"
-                )
-            return self._submit_request(request)
-        _warn_shim("submit(tenant_id, data)", "submit(request)")
-        return self._submit_request(DeliveryRequest(request, data))
+        return self._submit_request(request)
 
     def _submit_request(self, request: DeliveryRequest) -> int:
         return self._enqueue_normalized(api.normalize(request, self))
@@ -627,45 +654,38 @@ class MoLeDeliveryEngine:
         self.stats.rows_in += n_rows
         return rid
 
-    # -- deprecated lane-specific shims (kept for callers of the old trio) ---
-    def prepare_rows(self, tenant_id: str, data) -> np.ndarray:
-        """Deprecated: use ``repro.runtime.api.normalize`` on a request."""
-        _warn_shim("prepare_rows", "api.normalize(request, engine)")
-        return api.normalize(DeliveryRequest(tenant_id, data), self).payload
-
-    def prepare_tokens(self, tenant_id: str, tokens) -> np.ndarray:
-        """Deprecated: use ``repro.runtime.api.normalize`` on a request."""
-        _warn_shim("prepare_tokens", "api.normalize(request, engine)")
-        return api.normalize(
-            DeliveryRequest(tenant_id, tokens, lane="tokens"), self
-        ).payload
-
-    def prepare_features(self, tenant_id: str, data) -> np.ndarray:
-        """Deprecated: use ``repro.runtime.api.normalize`` on a request."""
-        _warn_shim("prepare_features", "api.normalize(request, engine)")
-        return api.normalize(
-            DeliveryRequest(tenant_id, data, lane="features"), self
-        ).payload
-
-    def submit_tokens(
-        self, tenant_id: str, tokens, *, deliver: str = "tokens"
-    ) -> int:
-        """Deprecated: submit a ``DeliveryRequest(lane="tokens")`` instead."""
-        _warn_shim("submit_tokens", "submit(request)")
-        return self._submit_request(
-            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver)
-        )
-
-    def submit_features(self, tenant_id: str, data) -> int:
-        """Deprecated: submit a ``DeliveryRequest(lane="features")`` instead."""
-        _warn_shim("submit_features", "submit(request)")
-        return self._submit_request(
-            DeliveryRequest(tenant_id, data, lane="features")
-        )
-
     # -- the jitted hot paths ------------------------------------------------
+    def _small_batch(self, gidx: np.ndarray, n_rows: int, plan: _Plan,
+                     lane: str) -> bool:
+        """Route tiny microbatches to the unrolled per-slot step.
+
+        The grouped jnp reference is a scan of dynamic slices over the
+        stacked secrets: on CPU that slice is a copy (~1.3 GB/s) while the
+        GEMMs it feeds run at ~21 GB/s, so at B <= 8 the flush is
+        copy-bound and *slower than per-request dispatch* (the b8/t16
+        0.25x regression).  The unrolled step takes the per-slot device
+        arrays as arguments instead — zero slicing — and wins there, but
+        loses to the scan at B >= 16 (G dispatches of tiny GEMMs) and to
+        the in-place batched einsum when ``gidx`` is the identity
+        arrangement (the G == S steady state the fast case serves), so
+        both keep the grouped path.
+        """
+        if self.backend != "jnp" or lane not in plan.slots or n_rows > 8:
+            return False
+        g, s = gidx.shape[0], len(plan.slots[lane])
+        if g > 16:
+            return False
+        return not (g == s and np.array_equal(gidx, np.arange(s)))
+
     def _execute(self, x: np.ndarray, gidx: np.ndarray,
                  plan: _Plan) -> jax.Array:
+        if self._small_batch(gidx, x.shape[1], plan, "cores"):
+            return _delivery_step_small(
+                jnp.asarray(x),
+                tuple(plan.slots["cores"][g] for g in gidx),
+                tuple(plan.slots["augs"][g] for g in gidx),
+                self.registry.kappa,
+            )
         return _delivery_step(
             jnp.asarray(x), jnp.asarray(gidx),
             plan.arrays["cores"], plan.arrays["augs"],
@@ -685,6 +705,13 @@ class MoLeDeliveryEngine:
                           plan: _Plan) -> jax.Array:
         # The continuous LM lane *is* the vision math (m^2 -> 1): same jitted
         # step, with the registry's embedding cores / fused projections.
+        if self._small_batch(gidx, x.shape[1], plan, "embed_cores"):
+            return _delivery_step_small(
+                jnp.asarray(x),
+                tuple(plan.slots["embed_cores"][g] for g in gidx),
+                tuple(plan.slots["aug_projs"][g] for g in gidx),
+                self.lm_registry.kappa,
+            )
         return _delivery_step(
             jnp.asarray(x), jnp.asarray(gidx),
             plan.arrays["embed_cores"], plan.arrays["aug_projs"],
@@ -957,43 +984,11 @@ class MoLeDeliveryEngine:
         """
         return self.take_result(request_id).payload
 
-    def deliver(self, request: DeliveryRequest | str, data=None):
-        """Submit one request, flush, and return its :class:`DeliveryResult`.
-
-        The legacy ``deliver(tenant_id, data)`` spelling still works as a
-        deprecated vision-lane shim returning the bare payload.
-        """
-        if isinstance(request, DeliveryRequest):
-            if data is not None:
-                raise TypeError(
-                    "deliver(request) takes no second argument — put the "
-                    "payload on the DeliveryRequest"
-                )
-            rid = self._submit_request(request)
-            self.flush()
-            return self.take_result(rid)
-        _warn_shim("deliver(tenant_id, data)", "deliver(request)")
-        rid = self._submit_request(DeliveryRequest(request, data))
+    def deliver(self, request: DeliveryRequest) -> DeliveryResult:
+        """Submit one request, flush, and return its :class:`DeliveryResult`."""
+        rid = self._submit_request(request)
         self.flush()
-        return self.take(rid)
-
-    def deliver_tokens(self, tenant_id: str, tokens, *, deliver: str = "tokens"):
-        """Deprecated: ``deliver(DeliveryRequest(lane="tokens"))`` instead."""
-        _warn_shim("deliver_tokens", "deliver(request)")
-        rid = self._submit_request(
-            DeliveryRequest(tenant_id, tokens, lane="tokens", deliver=deliver)
-        )
-        self.flush()
-        return self.take(rid)
-
-    def deliver_features(self, tenant_id: str, data) -> np.ndarray:
-        """Deprecated: ``deliver(DeliveryRequest(lane="features"))`` instead."""
-        _warn_shim("deliver_features", "deliver(request)")
-        rid = self._submit_request(
-            DeliveryRequest(tenant_id, data, lane="features")
-        )
-        self.flush()
-        return self.take(rid)
+        return self.take_result(rid)
 
     def reset_pending(self) -> None:
         """Drop every queued request and unredeemed result (failure reset).
@@ -1088,3 +1083,25 @@ def _lm_delivery_step(tokens, gidx, perms, aug_embeds, backend: str,
         return morphed, None
     feats = aug_embed_grouped(morphed, gidx, aug_embeds, backend=backend)
     return morphed, hint(feats, "dp")
+
+
+@partial(jax.jit, static_argnames=("kappa",))
+def _delivery_step_small(x, cores: tuple, augs: tuple, kappa: int):
+    """Small-batch sibling of :func:`_delivery_step`: per-group secrets as
+    separate arguments, groups unrolled.
+
+    x: (G, B, F_in); cores / augs: G-tuples of (q, q) / (F_in, F_out) —
+    the per-slot device arrays :func:`_sync_plan` keeps alongside the
+    stacks.  Same per-group reference math as the scan path (bit-identical
+    output); what changes is only how each group's secrets reach it: as
+    pre-sliced arguments, not ``dynamic_slice`` copies out of the stack.
+    Retraces per distinct (shape, G, kappa) — G is bucketized and routing
+    caps it at 16, so the trace set stays small.
+    """
+    _TRACES[("small", x.shape, len(cores), kappa)] += 1
+    x = hint(x, "dp")
+    outs = []
+    for g in range(x.shape[0]):
+        t = kref.block_diag_matmul_ref(x[g], cores[g], kappa)
+        outs.append(kref.aug_gemm_ref(t, augs[g]))
+    return hint(jnp.stack(outs), "dp")

@@ -52,6 +52,8 @@ from typing import Callable, Iterable, Mapping
 import numpy as np
 
 __all__ = [
+    "AdmittedSequence",
+    "FairAdmissionQueue",
     "GroupSlice",
     "Microbatch",
     "QueuedRequest",
@@ -497,3 +499,91 @@ class TokenQueue:
             return None
         _, lane = min(live, key=lambda kv: kv[0])
         return lane.coalesce(tenant_index, max_groups)
+
+
+@dataclasses.dataclass
+class AdmittedSequence:
+    """One decode sequence handed out by :class:`FairAdmissionQueue`."""
+
+    seq_id: int
+    tenant_id: str
+    prompt: np.ndarray        # (L,) int32, already morphed by the submitter
+    max_new_tokens: int
+    priority: int = 0
+
+
+class FairAdmissionQueue:
+    """WFQ admission for the continuous-batching decode lane.
+
+    The decode lane's scarce resource is *rows x steps*: a sequence
+    admitted to a row occupies it for ``max_new_tokens`` decode steps.
+    This queue applies the same weighted-fair-queueing arithmetic as
+    :class:`RequestQueue` — per-tenant virtual time advanced by
+    ``service / weight``, backlogged lane with the smallest vtime served
+    first, priority-then-FIFO within a tenant — but hands out one
+    *sequence* at a time (``take()``), charging its decode-step count as
+    the service units.  A heavy tenant queueing many long generations is
+    throttled between steps, not between requests.
+    """
+
+    def __init__(self):
+        self._lanes: dict[str, _TenantLane] = {}
+        self._seq = itertools.count()
+        self._next_id = itertools.count()
+        self._vnow = 0.0
+        self._weights: dict[str, float] = {}
+        self._pending = 0
+
+    def __len__(self) -> int:
+        return self._pending
+
+    def submit(self, tenant_id: str, prompt: np.ndarray, max_new_tokens: int,
+               *, priority: int = 0, weight: float | None = None) -> int:
+        """Queue one sequence; returns its lane-unique ``seq_id``."""
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        lane = self._lanes.get(tenant_id)
+        if lane is None:
+            lane = _TenantLane(tenant_id)
+            # Idle re-entry at the global virtual clock: an idle tenant must
+            # not bank credit against busy ones (same rule as RequestQueue).
+            lane.vtime = self._vnow
+            lane.weight = self._weights.get(tenant_id, 1.0)
+            self._lanes[tenant_id] = lane
+        if weight is not None:
+            lane.weight = float(weight)
+            self._weights[tenant_id] = float(weight)
+        sid = next(self._next_id)
+        item = AdmittedSequence(
+            seq_id=sid, tenant_id=tenant_id,
+            prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new_tokens=int(max_new_tokens), priority=priority,
+        )
+        heapq.heappush(lane.heap, (-priority, next(self._seq), item))
+        self._pending += 1
+        return sid
+
+    def take(self) -> AdmittedSequence | None:
+        """Dequeue the next sequence under WFQ, or None when empty."""
+        best = None
+        for lane in self._lanes.values():
+            if not lane.heap:
+                continue
+            key = (lane.vtime, lane.heap[0][1])
+            if best is None or key < best[0]:
+                best = (key, lane)
+        if best is None:
+            return None
+        lane = best[1]
+        item = heapq.heappop(lane.heap)[2]
+        lane.vtime = max(lane.vtime, self._vnow) + (
+            item.max_new_tokens / lane.weight
+        )
+        self._vnow = max(self._vnow, min(
+            (ln.vtime for ln in self._lanes.values() if ln.heap),
+            default=lane.vtime,
+        ))
+        self._pending -= 1
+        if not lane.heap:
+            del self._lanes[lane.tenant_id]
+        return item

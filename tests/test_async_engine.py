@@ -192,6 +192,38 @@ def test_deadline_flusher_meets_max_delay(rng):
         assert stats.flushes >= 2  # warm + timed, all flusher-initiated
 
 
+def test_tight_deadline_overtakes_engine_slo(rng):
+    """A request carrying its own tight ``deadline_ms`` flushes on that
+    deadline even while older requests coast on a much looser engine-wide
+    SLO — the per-request deadline heap, not submission order, decides the
+    flusher's next wake.  Regression: a broken wake computation sleeps to
+    the *loose* deadline and blows the tight request's SLO by ~3 orders of
+    magnitude."""
+    reg = _registry(rng, tenants=2)
+    loose_ms = 60_000.0
+    tight_ms = 25.0
+    with AsyncDeliveryEngine(reg, max_delay_ms=loose_ms) as front:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        # Warm the one-tenant buckets and the mixed two-group bucket the
+        # timed flush will land on, outside the timer.
+        warm = [front.submit(_rq(t, d)) for t in reg.tenant_ids]
+        front.flush_now()
+        for f in warm:
+            f.result(timeout=60)
+
+        f_loose = front.submit(_rq("t0", d))  # coasting on the 60s SLO
+        t0 = time.monotonic()
+        f_tight = front.submit(_rq("t1", d, deadline_ms=tight_ms))
+        f_tight.result(timeout=60)
+        wall_ms = (time.monotonic() - t0) * 1e3
+        assert wall_ms < tight_ms + SLACK_MS
+        # The deadline flush coalesces every pending queue, so the coasting
+        # request rides along instead of waiting out its own 60s window.
+        assert f_loose.done()
+
+
 def test_bucket_full_flushes_before_deadline(rng):
     """Enough pending rows to fill a microbatch triggers an early flush even
     though the deadline is far away."""

@@ -77,11 +77,14 @@ def test_request_is_frozen_and_snapshots_metadata():
 
 
 def test_submit_rejects_request_plus_payload(rng):
+    """The legacy (request, data) arity is gone outright: submit/deliver
+    take exactly one descriptor, so a stray payload argument is a plain
+    signature error."""
     eng = MoLeDeliveryEngine(_registry(rng, tenants=1))
     d = _data(rng)
-    with pytest.raises(TypeError, match="no second argument"):
+    with pytest.raises(TypeError):
         eng.submit(DeliveryRequest("t0", d), d)
-    with pytest.raises(TypeError, match="no second argument"):
+    with pytest.raises(TypeError):
         eng.deliver(DeliveryRequest("t0", d), d)
 
 
@@ -129,96 +132,46 @@ def test_take_returns_bare_payload_and_pops(rng):
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims: warn + bit-identical to direct DeliveryRequest submission
+# removed legacy shims: the old spellings fail loudly, not silently
 # ---------------------------------------------------------------------------
 
-def _twin_engines(rng, **kw):
-    """Two engines over same-seed registries: one driven via shims, one via
-    typed requests — outputs must match bit for bit."""
-    engines = []
+def test_legacy_spellings_are_gone(rng):
+    """The deprecated ``submit(tenant, data)`` trio and its ``prepare_*``/
+    ``deliver_*`` mirrors were removed after their deprecation cycle: the
+    old positional spelling raises TypeError (not a silent mis-dispatch),
+    and the per-lane methods no longer exist."""
+    reg = SessionRegistry(GEOM, kappa=2)
     k = rng.standard_normal((GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)).astype(
         np.float32
     )
-    for _ in range(2):
-        reg = SessionRegistry(GEOM, kappa=2)
-        reg.register("t0", k, seed=99)
-        engines.append(MoLeDeliveryEngine(reg, **kw))
-    return engines
+    reg.register("t0", k, seed=99)
+    eng = MoLeDeliveryEngine(reg)
+    d = _data(rng)
 
+    with pytest.raises(TypeError):
+        eng.submit("t0", d)           # legacy two-arg spelling
+    with pytest.raises(TypeError, match="DeliveryRequest"):
+        eng.submit("t0")              # untyped payload
+    with pytest.raises(TypeError):
+        eng.deliver("t0", d)
+    for name in (
+        "submit_tokens", "submit_features", "deliver_tokens",
+        "deliver_features", "prepare_rows", "prepare_tokens",
+        "prepare_features",
+    ):
+        assert not hasattr(eng, name)
 
-def test_vision_shims_warn_and_match(rng):
-    new_eng, old_eng = _twin_engines(rng, backend="jnp")
-    d = _data(rng, 3)
-    want = new_eng.deliver(DeliveryRequest("t0", d)).payload
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        rid = old_eng.submit("t0", d)
-    old_eng.flush()
-    np.testing.assert_array_equal(old_eng.take(rid), want)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        np.testing.assert_array_equal(old_eng.deliver("t0", d), want)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        rows = old_eng.prepare_rows("t0", d)
-    assert rows.shape == (3, GEOM.in_features)
-
-
-def test_lm_shims_warn_and_match(rng):
-    reg = LMSessionRegistry(101, 8, d_in=12, d_out=8, kappa=4)
-    E = rng.standard_normal((101, 8)).astype(np.float32)
-    W = rng.standard_normal((12, 8)).astype(np.float32)
-    reg.register("t0", E, W, seed=7)
-    eng = MoLeDeliveryEngine(lm_registry=reg)
-    toks = rng.integers(0, 101, (2, 5))
-    x = rng.standard_normal((2, 3, 12)).astype(np.float32)
-
-    want_tok = eng.deliver(DeliveryRequest("t0", toks, lane="tokens")).payload
-    want_emb = eng.deliver(
-        DeliveryRequest("t0", toks, lane="tokens", deliver="embed")
-    ).payload
-    want_feat = eng.deliver(DeliveryRequest("t0", x, lane="features")).payload
-
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        np.testing.assert_array_equal(
-            eng.deliver_tokens("t0", toks), want_tok
-        )
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        np.testing.assert_array_equal(
-            eng.deliver_tokens("t0", toks, deliver="embed"), want_emb
-        )
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        np.testing.assert_array_equal(
-            eng.deliver_features("t0", x), want_feat
-        )
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        rid = eng.submit_tokens("t0", toks)
-    eng.flush()
-    np.testing.assert_array_equal(eng.take(rid), want_tok)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        rid = eng.submit_features("t0", x)
-    eng.flush()
-    np.testing.assert_array_equal(eng.take(rid), want_feat)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        np.testing.assert_array_equal(
-            eng.prepare_tokens("t0", toks), toks.astype(np.int32)
-        )
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        np.testing.assert_array_equal(eng.prepare_features("t0", x), x)
-
-
-def test_async_shims_warn_and_resolve_to_bare_payload(rng):
-    reg = _registry(rng, tenants=1)
     with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
-        d = _data(rng)
         res = front.submit(DeliveryRequest("t0", d)).result(timeout=60)
         assert isinstance(res, DeliveryResult)   # typed path: full result
-        with pytest.warns(DeprecationWarning, match="deprecated"):
-            fut = front.submit("t0", d)
-        old = fut.result(timeout=60)             # shim path: bare payload
-        assert isinstance(old, np.ndarray)
-        np.testing.assert_array_equal(old, res.payload)
-        with pytest.warns(DeprecationWarning, match="deprecated"):
-            np.testing.assert_array_equal(
-                front.deliver("t0", d, timeout=60), res.payload
-            )
+        with pytest.raises(TypeError):
+            front.submit("t0", d)     # legacy two-arg spelling
+        with pytest.raises(TypeError, match="DeliveryRequest"):
+            front.submit("t0")        # untyped payload
+        with pytest.raises(TypeError):
+            front.deliver("t0", d)
+        for name in ("submit_tokens", "submit_features", "deliver_tokens"):
+            assert not hasattr(front, name)
 
 
 # ---------------------------------------------------------------------------

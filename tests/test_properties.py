@@ -116,29 +116,6 @@ def _check_priority_dequeue_order(priorities, rows_each, seed):
     assert order == want, (order, want, priorities)
 
 
-def _check_shims_bit_identical(seed, batches):
-    """The deprecated trio must produce *bit-identical* results to direct
-    DeliveryRequest submission (same secrets via explicit seeds)."""
-    geom = ConvGeometry(alpha=2, beta=4, m=6, p=3)
-    g = np.random.default_rng(seed)
-    k = g.standard_normal((geom.alpha, geom.beta, geom.p, geom.p)).astype(
-        np.float32
-    )
-    engines = []
-    for _ in range(2):
-        reg = SessionRegistry(geom, kappa=2)
-        reg.register("t0", k, seed=seed & 0xFFFF)
-        engines.append(MoLeDeliveryEngine(reg, backend="jnp"))
-    for b in batches:
-        d = g.standard_normal((b, geom.alpha, geom.m, geom.m)).astype(
-            np.float32
-        )
-        new = engines[0].deliver(DeliveryRequest("t0", d)).payload
-        with pytest.warns(DeprecationWarning):
-            old = engines[1].deliver("t0", d)
-        np.testing.assert_array_equal(old, new)
-
-
 def _check_lm_roundtrip(vocab, tenants, seq_lens, seed, backend, capacity=None):
     """Engine LM lane: morph -> deliver -> unfuse bit-matches plain forward.
 
@@ -251,15 +228,6 @@ def test_wfq_permutation_property(
     )
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    seed=st.integers(0, 2**31 - 1),
-    batches=st.lists(st.integers(1, 5), min_size=1, max_size=3),
-)
-def test_shims_bit_identical_property(seed, batches):
-    _check_shims_bit_identical(seed, batches)
-
-
 # ---------------------------------------------------------------------------
 # deterministic tier-1 slice of the same properties
 # ---------------------------------------------------------------------------
@@ -329,7 +297,3 @@ def test_wfq_permutation_cases(tenants, batches, priorities, weights, capacity):
         tenants, 2, batches, 29, "jnp", capacity=capacity,
         priorities=priorities, weights=weights,
     )
-
-
-def test_shims_bit_identical_case():
-    _check_shims_bit_identical(seed=31, batches=(3, 1, 4))
