@@ -49,8 +49,13 @@ class CheckpointManager:
         host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
         paths, _, _ = _flatten_with_paths(tree)
         if self.async_save:
+            # daemon=False explicitly: daemon-ness is inherited from the
+            # *creating* thread, and the delivery engine's flusher is a
+            # daemon — an inherited daemon writer would be killed mid-write
+            # at interpreter exit, stranding a .tmp dir.
             self._thread = threading.Thread(
-                target=self._write, args=(step, paths, host_leaves, extra or {})
+                target=self._write, args=(step, paths, host_leaves, extra or {}),
+                daemon=False,
             )
             self._thread.start()
         else:
@@ -96,6 +101,30 @@ class CheckpointManager:
             if not p.name.endswith(".tmp") and (p / "manifest.json").exists()
         )
         return steps[-1] if steps else None
+
+    def load(self, step: int | None = None) -> tuple[dict[str, np.ndarray], dict]:
+        """Structure-free restore: load a step's leaves keyed by their
+        manifest path, plus the ``extra`` dict.  Unlike :meth:`restore` this
+        needs no ``like`` pytree — the delivery-engine snapshots carry their
+        own structure in ``extra`` and store arrays under flat string keys.
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self.root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        arrays: dict[str, np.ndarray] = {}
+        for e in manifest["leaves"]:
+            arr = np.load(d / e["file"])
+            if e["dtype"] == "bfloat16":
+                arr = arr.view(jax.numpy.bfloat16.dtype)
+            p = e["path"]
+            # a flat {name: array} dict flattens to path "['name']" — unwrap
+            if p.startswith("['") and p.endswith("']"):
+                p = p[2:-2]
+            arrays[p] = arr
+        return arrays, manifest["extra"]
 
     def restore(
         self, step: int, like: Any, shardings: Any | None = None

@@ -334,6 +334,64 @@ class LMSessionRegistry(SlotRegistry):
     def session(self, tenant_id: str) -> LMSession:
         return self._sessions[tenant_id]
 
+    # -- crash-recovery serialization ----------------------------------------
+    def _config_state(self) -> dict:
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "d_in": self.d_in,
+            "d_out": self.d_out,
+            "kappa": self.kappa,
+            "core_mode": self.core_mode,
+        }
+
+    def _session_state(self, sess: LMSession) -> tuple[dict, dict[str, np.ndarray]]:
+        arrays: dict[str, np.ndarray] = {
+            "perm": np.asarray(sess.morpher.perm),
+            "embedding": np.asarray(sess.embedding),
+        }
+        if sess.head is not None:
+            arrays["head"] = np.asarray(sess.head)
+        if sess.embed_morpher is not None:
+            arrays["embed_core"] = np.asarray(sess.embed_morpher.core.matrix)
+            arrays["embed_core_inv"] = np.asarray(sess.embed_morpher.core.inverse)
+            arrays["aug_projection"] = np.asarray(sess.aug_projection)
+            if sess.embed_morpher.out_perm is not None:
+                arrays["embed_out_perm"] = np.asarray(sess.embed_morpher.out_perm)
+        return {"has_head": sess.head is not None}, arrays
+
+    def _session_from_state(
+        self, meta: dict, arrays: dict[str, np.ndarray]
+    ) -> LMSession:
+        perm = np.asarray(arrays["perm"])
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.shape[0])
+        morpher = TokenMorpher(perm=perm, inv_perm=inv)
+        embed_morpher = aug_projection = None
+        if "embed_core" in arrays:
+            embed_morpher = EmbeddingMorpher(
+                core=MorphCore(
+                    matrix=np.asarray(arrays["embed_core"], np.float32),
+                    inverse=np.asarray(arrays["embed_core_inv"], np.float32),
+                    kappa=self.kappa,
+                    mode=self.core_mode,
+                ),
+                out_perm=arrays.get("embed_out_perm"),
+            )
+            aug_projection = np.asarray(arrays["aug_projection"], np.float32)
+        # The fused aug_embedding/aug_head copies are derived, not secrets:
+        # leave them to lazily recompute on first access.
+        return LMSession(
+            morpher=morpher,
+            embedding=np.asarray(arrays["embedding"], np.float32),
+            embed_morpher=embed_morpher,
+            aug_projection=aug_projection,
+            head=(
+                np.asarray(arrays["head"], np.float32)
+                if meta["has_head"] else None
+            ),
+        )
+
     # -- stacked secret views consumed by the delivery engine ---------------
     @property
     def _core_q(self) -> int:

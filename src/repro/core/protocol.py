@@ -316,6 +316,84 @@ class SlotRegistry:
     def session(self, tenant_id: str):
         return self._sessions[tenant_id]
 
+    # -- crash-recovery serialization ----------------------------------------
+    # Subclasses implement the per-session halves; this base serializes every
+    # piece of slot bookkeeping so a restored registry is indistinguishable
+    # from the original (same slots, same LRU order, same version/changelog —
+    # the engine's incremental device patches keep working across a restore).
+
+    def _session_state(self, sess) -> tuple[dict, dict[str, np.ndarray]]:
+        raise NotImplementedError
+
+    def _session_from_state(self, meta: dict, arrays: dict[str, np.ndarray]):
+        raise NotImplementedError
+
+    def _config_state(self) -> dict:
+        raise NotImplementedError
+
+    def snapshot_state(self) -> tuple[dict, dict[str, np.ndarray]]:
+        """Serialize the registry to a JSON-able meta dict + flat named host
+        arrays (the secrets).  Inverse of :meth:`restore_state`."""
+        arrays: dict[str, np.ndarray] = {}
+        sessions: dict[str, dict] = {}
+        for i, tenant in enumerate(self._order):
+            smeta, sarrays = self._session_state(self._sessions[tenant])
+            sessions[tenant] = dict(smeta, index=i)
+            for name, arr in sarrays.items():
+                arrays[f"s{i:05d}/{name}"] = np.asarray(arr)
+        meta = {
+            "kind": type(self).__name__,
+            "config": self._config_state(),
+            "capacity": self.capacity,
+            "auto_capacity": self._auto_capacity,
+            "order": list(self._order),
+            "slot_tenant": list(self._slot_tenant),
+            "slot_of": dict(self._slot_of),
+            "weights": dict(self._weights),
+            "clock": self._clock,
+            "last_used": dict(self._last_used),
+            "version": self.version,
+            "evictions": self.evictions,
+            "slot_log": [list(e) for e in self._slot_log],
+            "sessions": sessions,
+        }
+        return meta, arrays
+
+    def restore_state(self, meta: dict, arrays: dict[str, np.ndarray]) -> None:
+        """Overwrite this registry's state with a snapshot's.  The registry
+        must have been constructed with the same config (geometry/kappa/...)
+        as the one that snapshotted; tenants registered on this instance are
+        discarded."""
+        if meta["kind"] != type(self).__name__:
+            raise ValueError(
+                f"snapshot is a {meta['kind']}, not a {type(self).__name__}"
+            )
+        if meta["config"] != self._config_state():
+            raise ValueError(
+                f"registry config mismatch: snapshot {meta['config']} vs "
+                f"this registry {self._config_state()}"
+            )
+        sessions: dict = {}
+        for tenant, smeta in meta["sessions"].items():
+            i = smeta["index"]
+            prefix = f"s{i:05d}/"
+            sarrays = {
+                k[len(prefix):]: v
+                for k, v in arrays.items() if k.startswith(prefix)
+            }
+            sessions[tenant] = self._session_from_state(smeta, sarrays)
+        self._sessions = sessions
+        self._order = list(meta["order"])
+        self._auto_capacity = bool(meta["auto_capacity"])
+        self._slot_tenant = list(meta["slot_tenant"])
+        self._slot_of = {t: int(s) for t, s in meta["slot_of"].items()}
+        self._weights = {t: float(w) for t, w in meta["weights"].items()}
+        self._clock = int(meta["clock"])
+        self._last_used = {t: int(c) for t, c in meta["last_used"].items()}
+        self.version = int(meta["version"])
+        self.evictions = int(meta["evictions"])
+        self._slot_log = [(int(v), int(s)) for v, s in meta["slot_log"]]
+
 
 class SessionRegistry(SlotRegistry):
     """Provider-side registry of per-tenant MoLe sessions (delivery engine hook).
@@ -373,6 +451,40 @@ class SessionRegistry(SlotRegistry):
 
     def session(self, tenant_id: str) -> MoLeSession:
         return self._sessions[tenant_id]
+
+    # -- crash-recovery serialization ----------------------------------------
+    def _config_state(self) -> dict:
+        g = self.geom
+        return {
+            "geom": [g.alpha, g.beta, g.m, g.p],
+            "kappa": self.kappa,
+            "core_mode": self.core_mode,
+        }
+
+    def _session_state(self, sess: MoLeSession) -> tuple[dict, dict[str, np.ndarray]]:
+        prov = sess.provider
+        return {}, {
+            "core": np.asarray(prov._core.matrix),
+            "core_inv": np.asarray(prov._core.inverse),
+            "perm": np.asarray(prov._perm),
+            "aug": np.asarray(sess.developer.aug_matrix),
+        }
+
+    def _session_from_state(
+        self, meta: dict, arrays: dict[str, np.ndarray]
+    ) -> MoLeSession:
+        prov = DataProvider.__new__(DataProvider)
+        prov.geom = self.geom
+        prov.kappa = self.kappa
+        prov._core = MorphCore(
+            matrix=np.asarray(arrays["core"], np.float32),
+            inverse=np.asarray(arrays["core_inv"], np.float32),
+            kappa=self.kappa,
+            mode=self.core_mode,
+        )
+        prov._perm = np.asarray(arrays["perm"])
+        developer = Developer(arrays["aug"], self.geom)
+        return MoLeSession(provider=prov, developer=developer, geom=self.geom)
 
     # -- stacked secret views consumed by the delivery engine ---------------
     @property

@@ -70,6 +70,15 @@ def _priorities_of(args, requests: int) -> list[int]:
     return [ps[r % len(ps)] for r in range(requests)]
 
 
+def _injector_of(args):
+    """--inject-failure <phase> -> a one-shot FailureInjector (or None)."""
+    if not args.inject_failure:
+        return None
+    from repro.runtime import FailureInjector
+
+    return FailureInjector(at_phases={args.inject_failure})
+
+
 def run_delivery(args) -> dict:
     """Serve image-delivery traffic for many tenants through the engine."""
     from repro.core import ConvGeometry, SessionRegistry
@@ -125,6 +134,8 @@ def run_delivery(args) -> dict:
         front = AsyncDeliveryEngine(
             engine, max_delay_ms=args.max_delay_ms,
             max_inflight_rows=args.max_inflight_rows, admission=args.admission,
+            snapshot_dir=args.snapshot_dir,
+            injector=_injector_of(args),
         )
         t0 = time.time()
         futures = [(r, front.submit(q)) for r, q in enumerate(requests)]
@@ -158,6 +169,12 @@ def run_delivery(args) -> dict:
         f"(SLO max_delay={args.max_delay_ms}ms, {stats.flushes} flushes)\n"
         if args.use_async else ""
     )
+    if args.use_async and (args.snapshot_dir or args.inject_failure):
+        latency += (
+            f"  resilience:  snapshots={stats.snapshots} "
+            f"degraded_flushes={stats.degraded_flushes} "
+            f"injected={args.inject_failure or 'none'}\n"
+        )
     print(
         f"delivery tenants={args.tenants} requests={args.requests} "
         f"batch={args.batch} kappa={args.kappa} backend={engine.backend} "
@@ -271,6 +288,8 @@ def run_lm(args) -> np.ndarray:
                 engine, max_delay_ms=args.max_delay_ms,
                 max_inflight_rows=args.max_inflight_rows,
                 admission=args.admission,
+                snapshot_dir=args.snapshot_dir,
+                injector=_injector_of(args),
             )
             futures = [front.submit(q) for q in prompt_reqs]
             served_prompts = np.concatenate(
@@ -420,6 +439,8 @@ _ENGINE_ONLY = {
     "--weights": ("weights", "1"),
     "--priority": ("priority", "0"),
     "--deadline-ms": ("deadline_ms", None),
+    "--snapshot-dir": ("snapshot_dir", None),
+    "--inject-failure": ("inject_failure", None),
 }
 
 
@@ -466,6 +487,14 @@ def main(argv=None):
                     help="per-request deadline put on every DeliveryRequest "
                          "(overrides --max-delay-ms per request; requires "
                          "--async)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="persist an engine snapshot between flush rounds "
+                         "for crash recovery (atomic CheckpointManager "
+                         "layout; requires --async)")
+    ap.add_argument("--inject-failure", default=None,
+                    choices=["coalesce", "device", "publish"],
+                    help="crash the flusher once at this flush phase to "
+                         "exercise supervised recovery (requires --async)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     # vision-delivery-only options (error under --mode lm)
@@ -515,6 +544,12 @@ def main(argv=None):
     # --async nothing ever reads it — error, not a silent no-op.
     if args.deadline_ms is not None and not args.use_async:
         ap.error("--deadline-ms requires --async (the deadline flusher)")
+    # Snapshotting and failure injection live in the supervised background
+    # flusher; the sync path has no flusher to crash or supervise.
+    if args.snapshot_dir is not None and not args.use_async:
+        ap.error("--snapshot-dir requires --async (the supervised flusher)")
+    if args.inject_failure is not None and not args.use_async:
+        ap.error("--inject-failure requires --async (the supervised flusher)")
     for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY):
         for dest, default in table.values():
             if getattr(args, dest) is None:

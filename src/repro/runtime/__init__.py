@@ -8,17 +8,22 @@
   resilience    resilient loop, failure injection, stragglers
 """
 from .api import DeliveryRequest, DeliveryResult
-from .async_engine import AdmissionError, AsyncDeliveryEngine
+from .async_engine import AdmissionError, AsyncDeliveryEngine, EngineDeadError
 from .decode import ContinuousDecodeLane
 from .engine import EngineStats, MoLeDeliveryEngine, delivery_trace_count
 from .queue import (
     FairAdmissionQueue, Microbatch, QueuedRequest, RequestQueue, TokenQueue,
 )
-from .resilience import FailureInjector, ResilientLoop, SimulatedFailure, StragglerMonitor
+from .resilience import (
+    EngineSnapshot, FailureInjector, ResilientLoop, SimulatedFailure,
+    StragglerMonitor,
+)
 
 __all__ = [
     "AdmissionError",
     "AsyncDeliveryEngine",
+    "EngineDeadError",
+    "EngineSnapshot",
     "ContinuousDecodeLane",
     "DeliveryRequest",
     "DeliveryResult",

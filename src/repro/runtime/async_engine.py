@@ -35,6 +35,14 @@ latency-SLO'd, admission-controlled front door over it:
     ``EngineStats`` (``p50_ms`` / ``p95_ms`` over a sliding window, split per
     request priority), along with per-phase flush timing
     (coalesce/device/publish p50/p95).
+  * **Crash safety** — the flusher runs supervised: a recoverable failure at
+    a flush-phase boundary triggers in-process recovery (the engine replays
+    every in-flight request from its retained payloads — no lost and no
+    duplicated request ids), optionally snapshotting between rounds to
+    ``snapshot_dir`` so a killed *process* restores via :meth:`restore`.
+    Anything unrecoverable marks the engine **dead**: pending futures fail
+    with :class:`EngineDeadError` and later submits raise immediately
+    instead of blocking forever.
 
 Thread-safety contract: the wrapped engine/queue/registry are only ever
 touched while ``self._cv`` is held (by submitters for the engine enqueue, by
@@ -55,12 +63,20 @@ from repro.core.protocol import SlotRegistry
 from . import api
 from .api import DeliveryRequest
 from .engine import MoLeDeliveryEngine
+from .resilience import EngineSnapshot, SimulatedFailure
 
-__all__ = ["AdmissionError", "AsyncDeliveryEngine"]
+__all__ = ["AdmissionError", "AsyncDeliveryEngine", "EngineDeadError"]
 
 
 class AdmissionError(RuntimeError):
     """A tenant exceeded its in-flight row quota under ``admission="reject"``."""
+
+
+class EngineDeadError(RuntimeError):
+    """The background flusher died (unrecoverable error, or a crash after
+    ``max_restarts`` recoveries): in-flight futures were failed with this,
+    and submits/drains on the dead engine raise it immediately rather than
+    blocking forever on a flush that will never come."""
 
 
 class AsyncDeliveryEngine:
@@ -87,6 +103,19 @@ class AsyncDeliveryEngine:
         Per-tenant admission quota, counted submit→completion.
     admission:
         ``"block"`` (backpressure) or ``"reject"`` (:class:`AdmissionError`).
+    snapshot_dir:
+        When given, the flusher persists an :class:`EngineSnapshot` between
+        flush rounds (``snapshot_every``-th round, captured under the lock,
+        written off it via the atomic ``CheckpointManager``); after a
+        process crash, :meth:`restore` on a fresh front door replays it.
+    snapshot_every:
+        Snapshot cadence in flush rounds (default: every round).
+    max_restarts:
+        In-process recoveries allowed before a recoverable flusher crash is
+        treated as fatal (:class:`EngineDeadError`).
+    injector:
+        Optional :class:`repro.runtime.resilience.FailureInjector`, assigned
+        to the wrapped engine (tests / serve.py ``--inject-failure``).
     """
 
     def __init__(
@@ -97,6 +126,10 @@ class AsyncDeliveryEngine:
         flush_rows: int | None = None,
         max_inflight_rows: int = 4096,
         admission: str = "block",
+        snapshot_dir: str | None = None,
+        snapshot_every: int = 1,
+        max_restarts: int = 3,
+        injector=None,
         **engine_kwargs,
     ):
         # Any SlotRegistry subclass (vision SessionRegistry, LMSessionRegistry,
@@ -119,6 +152,19 @@ class AsyncDeliveryEngine:
         )
         self.max_inflight_rows = int(max_inflight_rows)
         self.admission = admission
+        if injector is not None:
+            engine.injector = injector
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.max_restarts = int(max_restarts)
+        self._snapshotter = None
+        if snapshot_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            self._snapshotter = CheckpointManager(snapshot_dir, keep=3)
+        self._snapshot_step = 0
+        self._rounds = 0
+        self._restarts = 0
+        self._dead: BaseException | None = None
 
         self._cv = threading.Condition()
         self._resolving = 0  # futures popped by the flusher, not yet resolved
@@ -135,7 +181,7 @@ class AsyncDeliveryEngine:
         self._force_flush = False
         self._closed = False
         self._flusher = threading.Thread(
-            target=self._run, name="mole-delivery-flusher", daemon=True
+            target=self._supervise, name="mole-delivery-flusher", daemon=True
         )
         self._flusher.start()
 
@@ -188,6 +234,7 @@ class AsyncDeliveryEngine:
             )
             if self._closed:
                 raise RuntimeError("AsyncDeliveryEngine is closed")
+            self._check_alive()
             if n_rows > self.max_inflight_rows:
                 # Larger than the quota itself: no amount of flushing can
                 # ever admit it — blocking would deadlock, so always reject.
@@ -218,6 +265,7 @@ class AsyncDeliveryEngine:
                 self._cv.wait()
                 if self._closed:
                     raise RuntimeError("AsyncDeliveryEngine is closed")
+                self._check_alive()
             rid = self.engine._enqueue_normalized(req)
             fut: Future = Future()
             fut.request_id = rid  # engine request id, for tracing/tests
@@ -282,6 +330,7 @@ class AsyncDeliveryEngine:
             # concurrent close()'s notify could wake us on an empty table
             # with results still pending.
             while self._futures or self._resolving:
+                self._check_alive()
                 left = None if deadline is None else deadline - time.monotonic()
                 if left is not None and left <= 0:
                     raise TimeoutError(
@@ -291,17 +340,159 @@ class AsyncDeliveryEngine:
                 self._cv.wait(timeout=left)
 
     def close(self, timeout: float | None = 30.0) -> None:
-        """Drain pending work and stop the flusher (idempotent)."""
+        """Drain pending work and stop the flusher (idempotent).
+
+        If the flusher fails to stop within ``timeout`` — a hung device
+        step, a wedged callback — the remaining in-flight futures are
+        failed and a ``TimeoutError`` (carrying the in-flight count) is
+        raised.  The join outcome used to be ignored: a stuck flusher left
+        ``close()`` returning normally with waiters blocked on futures that
+        would never resolve.  The engine is *not* reset: the stuck flusher
+        may still publish its round later, and results for cleared rids are
+        simply left for ``engine.take()``.
+        """
         with self._cv:
             self._closed = True
             self._cv.notify_all()
         self._flusher.join(timeout=timeout)
+        if not self._flusher.is_alive():
+            if self._snapshotter is not None:
+                self._snapshotter.wait()   # last snapshot write is durable
+            return
+        with self._cv:
+            stranded = list(self._futures.values())
+            in_flight = len(self._futures) + self._resolving
+            self._futures.clear()
+            self._submitted_at.clear()
+            self._deadline_heap.clear()
+            self._rid_tenant.clear()
+            self._inflight_rows.clear()
+        err = TimeoutError(
+            f"flusher did not stop within {timeout}s; "
+            f"{in_flight} requests still in flight"
+        )
+        # Fail the stranded futures outside the lock (callbacks may re-enter).
+        for fut in stranded:
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(err)
+        raise err
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         self.close()
+
+    # -- crash safety ---------------------------------------------------------
+    def restore(self, snapshot: EngineSnapshot | None = None,
+                step: int | None = None) -> dict[int, Future]:
+        """Rebuild the wrapped engine from a snapshot and re-arm the front
+        door's accounting; returns fresh ``{rid: Future}`` for the replayed
+        pending requests (they resolve as the flusher re-delivers them).
+
+        ``snapshot=None`` loads the latest persisted one under
+        ``snapshot_dir`` (``step`` pins a specific round).  Only valid with
+        nothing in flight — a fresh front door after a process restart, or
+        after ``drain()``.
+        """
+        if snapshot is None:
+            if self._snapshotter is None:
+                raise ValueError(
+                    "no snapshot given and no snapshot_dir configured"
+                )
+            snapshot = EngineSnapshot.load(self._snapshotter, step)
+        with self._cv:
+            self._check_alive()
+            if self._futures or self._resolving:
+                raise RuntimeError(
+                    f"restore() with {len(self._futures) + self._resolving} "
+                    f"requests in flight; drain() first"
+                )
+            pending = self.engine.restore(snapshot)
+            out: dict[int, Future] = {}
+            now = time.monotonic()
+            for rid in pending:
+                req = self.engine._req_info[rid].request
+                fut: Future = Future()
+                fut.request_id = rid
+                self._futures[rid] = fut
+                self._submitted_at[rid] = now
+                delay_s = (
+                    req.deadline_ms if req.deadline_ms is not None
+                    else self.max_delay_ms
+                ) / 1e3
+                heapq.heappush(self._deadline_heap, (now + delay_s, rid))
+                n_rows = api.admission_rows(req)
+                self._rid_tenant[rid] = (req.tenant_id, n_rows)
+                self._inflight_rows[req.tenant_id] = (
+                    self._inflight_rows.get(req.tenant_id, 0) + n_rows
+                )
+                out[rid] = fut
+            self._cv.notify_all()   # wake the flusher: replayed deadlines
+            return out
+
+    def _check_alive(self) -> None:
+        """Caller holds ``self._cv``.  Raise instead of letting a caller
+        wait on a flusher that will never run again."""
+        if self._dead is not None:
+            raise EngineDeadError(
+                "delivery flusher died; engine no longer accepts work"
+            ) from self._dead
+        if not self._flusher.is_alive() and not self._closed:
+            raise EngineDeadError("delivery flusher thread is not running")
+
+    def _mark_dead(self, exc: BaseException) -> None:
+        with self._cv:
+            self._dead = exc
+            stranded = list(self._futures.values())
+            self._futures.clear()
+            self._submitted_at.clear()
+            self._deadline_heap.clear()
+            self._rid_tenant.clear()
+            self._inflight_rows.clear()
+            self._resolving = 0
+            self.engine.reset_pending()
+            self._cv.notify_all()
+        err = EngineDeadError(
+            f"delivery flusher died: {exc!r}; in-flight requests failed"
+        )
+        err.__cause__ = exc
+        # Outside the lock: future callbacks must not deadlock us.
+        for fut in stranded:
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(err)
+
+    def _supervise(self) -> None:
+        """Flusher thread target: run the flush loop under supervision.
+
+        A ``SimulatedFailure`` escaping a phase boundary is the recoverable
+        case: the engine replays every in-flight request from its retained
+        payloads (:meth:`MoLeDeliveryEngine.requeue_inflight`) under the
+        original request ids — waiters keep their futures, nothing is lost,
+        nothing delivered twice — and the loop resumes, up to
+        ``max_restarts`` times.  Any other escape, **including
+        BaseException** (a KeyboardInterrupt delivered into this thread used
+        to kill it silently, leaving every later submit blocked forever), is
+        fatal: :meth:`_mark_dead` fails the in-flight futures with
+        :class:`EngineDeadError` and subsequent submits raise immediately.
+        """
+        while True:
+            try:
+                self._run()
+                return
+            except SimulatedFailure as e:
+                if self._restarts >= self.max_restarts:
+                    self._mark_dead(e)
+                    return
+                self._restarts += 1
+                with self._cv:
+                    self.engine.requeue_inflight()
+                    # Re-arm: the replayed backlog should flush promptly.
+                    self._force_flush = bool(self._futures)
+                    self._cv.notify_all()
+            except BaseException as e:
+                self._mark_dead(e)
+                return
 
     # -- the flusher thread ---------------------------------------------------
     def _oldest_deadline(self) -> float | None:
@@ -348,6 +539,8 @@ class AsyncDeliveryEngine:
                 # buffer — and submitters fill them while phase 2 runs.
                 try:
                     work = self.engine.begin_flush()
+                except SimulatedFailure:
+                    raise   # recoverable: handled by _supervise, not here
                 except Exception as e:  # pragma: no cover - defensive
                     error = e
             # Phase 2 OUTSIDE the lock: the jitted device step (the long
@@ -356,6 +549,8 @@ class AsyncDeliveryEngine:
             if error is None and work is not None:
                 try:
                     self.engine.execute_flush(work)
+                except SimulatedFailure:
+                    raise   # recoverable: handled by _supervise, not here
                 except Exception as e:
                     error = e
             resolved: list[tuple[Future, object]] = []
@@ -367,6 +562,8 @@ class AsyncDeliveryEngine:
                     # engine's per-request buffers (cheap bookkeeping).
                     try:
                         done = self.engine.publish_flush(work)
+                    except SimulatedFailure:
+                        raise   # recoverable: handled by _supervise
                     except Exception as e:  # pragma: no cover - defensive
                         error = e
                 if error is not None:
@@ -417,3 +614,15 @@ class AsyncDeliveryEngine:
             with self._cv:
                 self._resolving -= len(resolved) + len(failed)
                 self._cv.notify_all()  # quota freed / drain() progress
+            # Supervised snapshotting between flush rounds: the image is
+            # captured under the lock (a consistent cut — publish has
+            # completed, nothing is half-scattered) but written *off* it,
+            # so disk I/O never blocks submitters.
+            if self._snapshotter is not None and error is None and work:
+                self._rounds += 1
+                if self._rounds % self.snapshot_every == 0:
+                    with self._cv:
+                        snap = self.engine.snapshot()
+                        self._snapshot_step += 1
+                        step = self._snapshot_step
+                    snap.save(self._snapshotter, step)

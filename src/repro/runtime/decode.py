@@ -41,6 +41,7 @@ from repro.core.lm import LMSessionRegistry
 
 from .engine import _TRACES, _Plan, _sync_plan
 from .queue import FairAdmissionQueue
+from .resilience import EngineSnapshot
 
 __all__ = ["ContinuousDecodeLane", "DecodeRow"]
 
@@ -54,6 +55,12 @@ class DecodeRow:
     slot: int
     remaining: int                 # decode steps still owed
     generated: list = dataclasses.field(default_factory=list)  # morphed ids
+    # Admission-time descriptor, retained for crash recovery: restore()
+    # replays the sequence from scratch (greedy decode is deterministic,
+    # so the regenerated tokens are identical).
+    prompt: np.ndarray | None = None   # morphed prompt as admitted
+    max_new_tokens: int = 0
+    priority: int = 0
 
 
 class ContinuousDecodeLane:
@@ -88,6 +95,7 @@ class ContinuousDecodeLane:
         rows: int = 16,
         max_len: int,
         backend: str | None = None,
+        injector=None,
     ):
         if registry.capacity < rows:
             raise ValueError(
@@ -109,6 +117,9 @@ class ContinuousDecodeLane:
         self.queue = FairAdmissionQueue()
         self._plan: _Plan | None = None
         self._results: dict[int, np.ndarray] = {}
+        # Crash-safety hook: raises SimulatedFailure at the "retire"/"admit"
+        # boundaries of step() (tests / serve.py --inject-failure).
+        self.injector = injector
 
         decode_fn = make_batched_decode_step(model, backend=backend)
         prefill_fn = make_row_prefill_step(model)
@@ -237,6 +248,8 @@ class ContinuousDecodeLane:
             self._row[row] = DecodeRow(
                 seq_id=item.seq_id, tenant_id=item.tenant_id, slot=slot,
                 remaining=item.max_new_tokens - 1, generated=[first],
+                prompt=item.prompt, max_new_tokens=item.max_new_tokens,
+                priority=item.priority,
             )
             self._sidx[row] = slot
             self._tokens[row] = first
@@ -254,7 +267,11 @@ class ContinuousDecodeLane:
     def step(self) -> int:
         """Retire finished rows, admit queued sequences, run one batched
         decode step.  Returns the number of rows still active."""
+        if self.injector is not None:
+            self.injector.maybe_fail_phase("retire")
         self._retire()
+        if self.injector is not None:
+            self.injector.maybe_fail_phase("admit")
         self._admit()
         if self.active == 0:
             return 0
@@ -289,3 +306,81 @@ class ContinuousDecodeLane:
                 f"sequence {seq_id} not finished (or already taken)"
             )
         return self._results.pop(seq_id)
+
+    # -- crash safety: snapshot / restore ------------------------------------
+    def snapshot(self) -> EngineSnapshot:
+        """Capture a crash-recovery image of the lane.
+
+        Registry secrets (under ``lm/``), every unfinished sequence's
+        admitted (morphed) prompt + descriptor — active rows and queued
+        alike — and every finished-but-untaken result.  KV caches are **not**
+        serialized: greedy decode is deterministic, so :meth:`restore`
+        replays unfinished sequences from scratch and regenerates identical
+        tokens at a fraction of the snapshot size.
+        """
+        arrays: dict[str, np.ndarray] = {}
+        rmeta, rarrays = self.registry.snapshot_state()
+        for k, v in rarrays.items():
+            arrays[f"lm/{k}"] = v
+        meta: dict = {
+            "registry": rmeta,
+            "next_sid": self.queue._next_id,
+            "sequences": [],
+            "finished": sorted(self._results),
+        }
+        live = [r for r in self._row if r is not None]
+        for entry in live + self.queue.snapshot_items():
+            sid = int(entry.seq_id)
+            meta["sequences"].append({
+                "sid": sid, "tenant": entry.tenant_id,
+                "max_new_tokens": int(entry.max_new_tokens),
+                "priority": int(entry.priority),
+            })
+            arrays[f"seq/{sid:08d}/prompt"] = np.asarray(entry.prompt)
+        for sid in meta["finished"]:
+            arrays[f"res/{sid:08d}/tokens"] = self._results[sid]
+        return EngineSnapshot(arrays=arrays, meta=meta)
+
+    def restore(self, snap: EngineSnapshot) -> list[int]:
+        """Rebuild the lane from a :meth:`snapshot` image; returns the
+        unfinished seq_ids that were re-queued (admission order).
+
+        Every unfinished sequence — whether it was mid-decode or still
+        queued at snapshot time — re-enters the admission queue under its
+        original seq_id with its original (already morphed) prompt; the
+        next :meth:`run` regenerates it deterministically.  Row pool,
+        stacked caches, and position state are reset to empty; the stacks
+        keep their shapes, so nothing retraces.
+        """
+        meta, arrays = snap.meta, snap.arrays
+        self.registry.restore_state(
+            meta["registry"],
+            {k[3:]: v for k, v in arrays.items() if k.startswith("lm/")},
+        )
+        self._plan = None
+        c1 = self.model.init_cache(1, self.max_len)
+        self._caches = jax.tree.map(
+            lambda l: jnp.stack([l] * self.rows), c1
+        )
+        self._row = [None] * self.rows
+        self._sidx = np.zeros(self.rows, np.int32)
+        self._tokens = np.zeros(self.rows, np.int32)
+        self._t = np.zeros(self.rows, np.int32)
+        self.queue = FairAdmissionQueue()
+        self._results = {}
+        pending: list[int] = []
+        for desc in meta["sequences"]:
+            sid = int(desc["sid"])
+            # Straight into the raw queue: the stored prompt is already
+            # morphed, so going through submit() would double-morph it.
+            self.queue.submit(
+                desc["tenant"], arrays[f"seq/{sid:08d}/prompt"],
+                int(desc["max_new_tokens"]), priority=int(desc["priority"]),
+                weight=self.registry.weight_of(desc["tenant"]), sid=sid,
+            )
+            pending.append(sid)
+        for sid in meta["finished"]:
+            sid = int(sid)
+            self._results[sid] = arrays[f"res/{sid:08d}/tokens"]
+        self.queue._next_id = max(self.queue._next_id, int(meta["next_sid"]))
+        return pending

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
+import json
 import logging
 import time
 from functools import partial
@@ -83,6 +83,7 @@ from repro.sharding.hints import hint
 
 from . import api
 from .api import DeliveryRequest, DeliveryResult
+from .resilience import EngineSnapshot, StragglerMonitor
 
 __all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
 
@@ -125,6 +126,11 @@ class EngineStats:
     # such groups read a real tenant's secrets with all-zero rows (harmless,
     # sliced away) but signal a sparse-table layout CPU serving pays for.
     padding_clamp_count: int = 0
+    # Resilience counters: flushes whose device phase the straggler monitor
+    # flagged as slow, engine snapshots taken, and restores performed.
+    degraded_flushes: int = 0
+    snapshots: int = 0
+    restores: int = 0
     # Submits whose front-door lock wait exceeded stall_threshold_ms: the
     # observable for "the flusher holds the lock across device execution".
     submit_stalls: int = 0
@@ -275,6 +281,10 @@ class EngineStats:
         lines.append(
             f"wfq virtual-time lag: p50={_fmt_num(self.wfq_lag_quantile(0.5))} "
             f"p95={_fmt_num(self.wfq_lag_quantile(0.95))} rows/weight"
+        )
+        lines.append(
+            f"resilience: degraded_flushes={self.degraded_flushes} "
+            f"snapshots={self.snapshots} restores={self.restores}"
         )
         return "\n".join(lines)
 
@@ -448,6 +458,7 @@ class MoLeDeliveryEngine:
         seq_buckets: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512),
         backend: str | None = None,
         max_flush_microbatches: int = 64,
+        injector=None,
     ):
         from .queue import RequestQueue, TokenQueue  # keeps queues swappable
 
@@ -473,9 +484,16 @@ class MoLeDeliveryEngine:
         self.seq_buckets = tuple(sorted(seq_buckets))
         # One id space across every lane: request ids key the shared result
         # table, so take() works the same whether the rid came from images,
-        # tokens, or embedding rows.
-        self._ids = itertools.count()
-        self._id_alloc = lambda: next(self._ids)
+        # tokens, or embedding rows.  A plain int (not itertools.count) so
+        # snapshot()/restore() can serialize and rebuild the allocator.
+        self._next_rid = 0
+
+        def _alloc_rid() -> int:
+            rid = self._next_rid
+            self._next_rid += 1
+            return rid
+
+        self._id_alloc = _alloc_rid
         self.queue = (
             RequestQueue(
                 registry.geom.in_features, max_rows=max_rows,
@@ -501,6 +519,12 @@ class MoLeDeliveryEngine:
             if lm_registry is not None and lm_registry.has_embed_lane else None
         )
         self.stats = EngineStats()
+        # Crash-safety hooks: the injector (resilience.FailureInjector)
+        # raises SimulatedFailure at flush-phase boundaries; the straggler
+        # monitor watches per-flush device time and flags degraded flushes
+        # into EngineStats.degraded_flushes.
+        self.injector = injector
+        self.straggler = StragglerMonitor()
         self._plan: _Plan | None = None
         self._lm_plan: _Plan | None = None
         # The stacked (S, V, d_model) AugE tables are by far the largest
@@ -610,15 +634,25 @@ class MoLeDeliveryEngine:
     def _submit_request(self, request: DeliveryRequest) -> int:
         return self._enqueue_normalized(api.normalize(request, self))
 
-    def _enqueue_normalized(self, req: DeliveryRequest) -> int:
+    def _enqueue_normalized(self, req: DeliveryRequest, *,
+                            rid: int | None = None,
+                            count_stats: bool = True) -> int:
         """Queue an already-:func:`api.normalize`-d request — the async front
-        door normalizes outside its lock and calls this under it."""
+        door normalizes outside its lock and calls this under it.
+
+        ``rid`` pins the request id instead of allocating a fresh one —
+        crash recovery (:meth:`restore` / :meth:`requeue_inflight`) replays
+        in-flight requests under their original ids so waiters redeem the
+        same handles; such replays pass ``count_stats=False`` so a request
+        is counted once however many crashes it survives.
+        """
         depth = self.pending_rows
         if req.lane == "rows":
             reg, g = self.registry, self.registry.geom
             rid = self.queue.submit(
                 req.tenant_id, req.payload,
                 priority=req.priority, weight=reg.weight_of(req.tenant_id),
+                rid=rid,
             )
             self._request_shape[rid] = (req.payload.shape[0], g.beta, g.n, g.n)
             n_rows = req.payload.shape[0]
@@ -627,6 +661,7 @@ class MoLeDeliveryEngine:
             rid = self.token_queue.submit(
                 req.tenant_id, req.payload,
                 priority=req.priority, weight=reg.weight_of(req.tenant_id),
+                rid=rid,
             )
             b, L = req.payload.shape
             if req.deliver == "embed":
@@ -642,6 +677,7 @@ class MoLeDeliveryEngine:
             rid = self.embed_queue.submit(
                 req.tenant_id, rows,
                 priority=req.priority, weight=reg.weight_of(req.tenant_id),
+                rid=rid,
             )
             self._request_shape[rid] = (rows.shape[0], reg.d_out)
             self._embed_shape[rid] = req.payload.shape[:-1] + (reg.d_out,)
@@ -650,8 +686,9 @@ class MoLeDeliveryEngine:
             request=req, submitted_at=time.monotonic(),
             queue_depth_at_submit=depth,
         )
-        self.stats.requests += 1
-        self.stats.rows_in += n_rows
+        if count_stats:
+            self.stats.requests += 1
+            self.stats.rows_in += n_rows
         return rid
 
     # -- the jitted hot paths ------------------------------------------------
@@ -807,6 +844,11 @@ class MoLeDeliveryEngine:
             )
         self.stats.flushes += 1
         self.stats.record_phase_ms("coalesce", (time.monotonic() - t0) * 1e3)
+        # The nastiest crash point: the coalesced rows have already left the
+        # queues, so a failure here strands them unless recovery replays
+        # from _req_info (requeue_inflight / restore).
+        if self.injector is not None:
+            self.injector.maybe_fail_phase("coalesce")
         return work
 
     def execute_flush(self, work: _FlushWork) -> None:
@@ -817,6 +859,8 @@ class MoLeDeliveryEngine:
         Touches only ``work`` and immutable jax arrays, so the async flusher
         runs it **outside** its lock while submitters keep enqueuing.
         """
+        if self.injector is not None:
+            self.injector.maybe_fail_phase("device")
         t0 = time.monotonic()
         # Dispatch every step first (jax dispatch is async), then block: the
         # device pipelines the microbatches instead of idling between them.
@@ -842,12 +886,25 @@ class MoLeDeliveryEngine:
                 )
             else:
                 item.out = np.asarray(out)
-        self.stats.record_phase_ms("device", (time.monotonic() - t0) * 1e3)
+        dt_ms = (time.monotonic() - t0) * 1e3
+        self.stats.record_phase_ms("device", dt_ms)
+        # Straggler watch: a device phase far above the running EMA flags
+        # this flush as degraded (hung interconnect, preempted accelerator).
+        if self.straggler.record(self.stats.flushes, dt_ms / 1e3):
+            self.stats.degraded_flushes += 1
+            _log.warning(
+                "degraded flush #%d: device phase %.2fms vs EMA %.2fms",
+                self.stats.flushes, dt_ms, self.straggler.ema * 1e3,
+            )
 
     def publish_flush(self, work: _FlushWork) -> dict[int, np.ndarray]:
         """Phase 3 (cheap, engine-state-mutating): scatter executed results
         into per-request buffers and mark completed requests done.  Runs
         under the async front door's lock."""
+        # Injected *before* any scatter: publish is all-or-nothing per
+        # round, so recovery never sees a half-published flush.
+        if self.injector is not None:
+            self.injector.maybe_fail_phase("publish")
         t0 = time.monotonic()
         done: dict[int, np.ndarray] = {}
         for item in work.items:
@@ -999,6 +1056,19 @@ class MoLeDeliveryEngine:
         results nobody can take().  The shared id allocator survives, so
         request ids stay process-unique.
         """
+        self._rebuild_queues()
+        self._results.clear()
+        self._request_shape.clear()
+        self._token_deliver.clear()
+        self._embed_shape.clear()
+        self._req_info.clear()
+        self._done.clear()
+
+    def _rebuild_queues(self) -> None:
+        """Replace every lane's queue with an empty twin (same buckets, same
+        id allocator).  Crash recovery's first step: a queue abandoned mid-
+        coalesce may have rows missing; rebuilding and replaying from
+        ``_req_info`` is the only state the recovery paths trust."""
         from .queue import RequestQueue, TokenQueue
 
         if self.queue is not None:
@@ -1028,12 +1098,150 @@ class MoLeDeliveryEngine:
                 group_buckets=self.embed_queue.group_buckets,
                 dtype=self.embed_queue.dtype, id_alloc=self._id_alloc,
             )
-        self._results.clear()
-        self._request_shape.clear()
-        self._token_deliver.clear()
-        self._embed_shape.clear()
-        self._req_info.clear()
-        self._done.clear()
+
+    # -- crash safety: snapshot / restore ------------------------------------
+    def snapshot(self) -> EngineSnapshot:
+        """Capture a crash-recovery image of the delivery plane.
+
+        Arrays: every registry's per-tenant secrets (under ``vision/`` /
+        ``lm/`` prefixes) plus, per un-taken request, either its normalized
+        payload (``req/<rid>/payload``, still pending) or its finished
+        result (``req/<rid>/result``).  Meta: slot bookkeeping + one
+        JSON-able descriptor per request.  The queues themselves are **not**
+        serialized: ``_req_info`` retains the full normalized payload of
+        every in-flight request until take(), so :meth:`restore` simply
+        replays the pending set under the original request ids — no lost
+        and no duplicated ids, whatever phase the crash interrupted.
+        """
+        arrays: dict[str, np.ndarray] = {}
+        meta: dict = {
+            "next_rid": self._next_rid,
+            "embed_tables_needed": self._embed_tables_needed,
+            "registries": {},
+            "requests": [],
+        }
+        for lane, reg in (("vision", self.registry), ("lm", self.lm_registry)):
+            if reg is None:
+                meta["registries"][lane] = None
+                continue
+            rmeta, rarrays = reg.snapshot_state()
+            meta["registries"][lane] = rmeta
+            for k, v in rarrays.items():
+                arrays[f"{lane}/{k}"] = v
+        for rid in sorted(self._req_info):
+            info = self._req_info[rid]
+            req = info.request
+            md = req.metadata
+            try:
+                json.dumps(md)
+            except TypeError:
+                md = {}   # opaque caller annotations may not serialize
+            done = rid in self._done
+            meta["requests"].append({
+                "rid": rid, "tenant": req.tenant_id, "lane": req.lane,
+                "deliver": req.deliver, "priority": req.priority,
+                "deadline_ms": req.deadline_ms, "metadata": md, "done": done,
+                "submitted_at": info.submitted_at,
+                "completed_at": info.completed_at,
+                "queue_depth": info.queue_depth_at_submit,
+            })
+            if done:
+                arrays[f"req/{rid:08d}/result"] = self._results[rid]
+            else:
+                arrays[f"req/{rid:08d}/payload"] = np.asarray(req.payload)
+        self.stats.snapshots += 1
+        return EngineSnapshot(arrays=arrays, meta=meta)
+
+    def restore(self, snap: EngineSnapshot) -> list[int]:
+        """Rebuild this engine from a :meth:`snapshot` image and return the
+        still-pending request ids (submission order).
+
+        Works on a freshly constructed engine whose registries match the
+        snapshot's kinds and geometry (validated by the registries), or in
+        place over a live one.  The device plans are dropped and re-staged
+        on the next flush; the restored stacks keep the same ``(S, ...)``
+        shapes, so the process-global jit cache serves every delivery step —
+        **zero retraces** across snapshot/restore.  Pending requests re-enter
+        the queues under their original ids with their original scheduling
+        traces; finished-but-untaken results are restored verbatim, so every
+        submitted id is delivered exactly once.
+        """
+        meta, arrays = snap.meta, snap.arrays
+        for lane, reg in (("vision", self.registry), ("lm", self.lm_registry)):
+            rmeta = meta["registries"].get(lane)
+            if (rmeta is None) != (reg is None):
+                raise ValueError(
+                    f"snapshot and engine disagree on the {lane} registry "
+                    f"(snapshot {'has' if rmeta else 'lacks'} one)"
+                )
+            if reg is None:
+                continue
+            prefix = lane + "/"
+            reg.restore_state(
+                rmeta,
+                {k[len(prefix):]: v for k, v in arrays.items()
+                 if k.startswith(prefix)},
+            )
+        self._plan = None
+        self._lm_plan = None
+        self._embed_tables_needed = bool(meta["embed_tables_needed"])
+        self.reset_pending()
+        pending: list[int] = []
+        for desc in meta["requests"]:
+            rid = int(desc["rid"])
+            md = desc.get("metadata") or {}
+            if desc["done"]:
+                self._results[rid] = arrays[f"req/{rid:08d}/result"]
+                self._done.add(rid)
+                self._req_info[rid] = _ReqInfo(
+                    request=DeliveryRequest(
+                        desc["tenant"], None, lane=desc["lane"],
+                        deliver=desc["deliver"],
+                        priority=int(desc["priority"]),
+                        deadline_ms=desc["deadline_ms"], metadata=md,
+                    ),
+                    submitted_at=desc["submitted_at"],
+                    queue_depth_at_submit=int(desc["queue_depth"]),
+                    completed_at=desc["completed_at"],
+                )
+            else:
+                req = DeliveryRequest(
+                    desc["tenant"], arrays[f"req/{rid:08d}/payload"],
+                    lane=desc["lane"], deliver=desc["deliver"],
+                    priority=int(desc["priority"]),
+                    deadline_ms=desc["deadline_ms"], metadata=md,
+                )
+                self._enqueue_normalized(req, rid=rid, count_stats=False)
+                info = self._req_info[rid]
+                info.submitted_at = desc["submitted_at"]
+                info.queue_depth_at_submit = int(desc["queue_depth"])
+                pending.append(rid)
+        self._next_rid = max(self._next_rid, int(meta["next_rid"]))
+        self.stats.restores += 1
+        return pending
+
+    def requeue_inflight(self) -> list[int]:
+        """In-process crash recovery: rebuild the (possibly half-coalesced)
+        queues and replay every not-yet-done request under its original id.
+
+        The async front door calls this when a flush round dies between
+        phases: the coalesced work items are lost with the round, but
+        ``_req_info`` still holds every in-flight request's normalized
+        payload — re-enqueuing those (and dropping any partially filled
+        result buffers) makes the next round deliver each exactly once.
+        Finished-but-untaken results are untouched.  Returns the replayed
+        ids in submission order.
+        """
+        self._rebuild_queues()
+        pending = sorted(set(self._req_info) - self._done)
+        for rid in pending:
+            self._results.pop(rid, None)   # drop partial row buffers
+            info = self._req_info[rid]
+            self._enqueue_normalized(
+                info.request, rid=rid, count_stats=False
+            )
+            self._req_info[rid] = info     # keep the original trace
+        return pending
 
 
 @partial(jax.jit, static_argnames=("kappa", "backend"))

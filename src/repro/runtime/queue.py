@@ -208,6 +208,7 @@ class RequestQueue:
         *,
         priority: int = 0,
         weight: float | None = None,
+        rid: int | None = None,
     ) -> int:
         """Enqueue ``rows`` for ``tenant_id``.
 
@@ -216,14 +217,19 @@ class RequestQueue:
         persists across the tenant's idle spells (and the idle-lane prune)
         until overwritten, and the engine re-resolves it from the registry
         on every submit so weight changes take effect without draining the
-        queue.
+        queue.  ``rid`` overrides id allocation — crash-recovery replay
+        re-enqueues a request under its original id so no in-flight id is
+        lost or duplicated across a restore.
         """
         rows = np.asarray(rows, self.dtype)
         if rows.ndim != 2 or rows.shape[1] != self.feature_dim:
             raise ValueError(
                 f"expected rows of shape (b, {self.feature_dim}), got {rows.shape}"
             )
-        if self._id_alloc is not None:
+        if rid is not None:
+            rid = int(rid)
+            self._next_id = max(self._next_id, rid + 1)
+        elif self._id_alloc is not None:
             rid = self._id_alloc()
         else:
             rid = self._next_id
@@ -463,6 +469,7 @@ class TokenQueue:
         *,
         priority: int = 0,
         weight: float | None = None,
+        rid: int | None = None,
     ) -> int:
         tokens = np.asarray(tokens)
         if tokens.ndim != 2:
@@ -481,7 +488,9 @@ class TokenQueue:
             self._queues[Lb] = lane
         padded = np.zeros((b, Lb), np.int32)
         padded[:, :L] = tokens
-        return lane.submit(tenant_id, padded, priority=priority, weight=weight)
+        return lane.submit(
+            tenant_id, padded, priority=priority, weight=weight, rid=rid
+        )
 
     def coalesce(
         self,
@@ -529,7 +538,7 @@ class FairAdmissionQueue:
     def __init__(self):
         self._lanes: dict[str, _TenantLane] = {}
         self._seq = itertools.count()
-        self._next_id = itertools.count()
+        self._next_id = 0
         self._vnow = 0.0
         self._weights: dict[str, float] = {}
         self._pending = 0
@@ -537,9 +546,19 @@ class FairAdmissionQueue:
     def __len__(self) -> int:
         return self._pending
 
+    def snapshot_items(self) -> list[AdmittedSequence]:
+        """Every queued (not yet taken) sequence, in arrival order — the
+        decode lane's crash snapshot replays these through ``submit`` with
+        their original ``seq_id``s."""
+        items = [entry for lane in self._lanes.values() for entry in lane.heap]
+        return [item for _, _, item in sorted(items, key=lambda e: e[1])]
+
     def submit(self, tenant_id: str, prompt: np.ndarray, max_new_tokens: int,
-               *, priority: int = 0, weight: float | None = None) -> int:
-        """Queue one sequence; returns its lane-unique ``seq_id``."""
+               *, priority: int = 0, weight: float | None = None,
+               sid: int | None = None) -> int:
+        """Queue one sequence; returns its lane-unique ``seq_id``.  ``sid``
+        overrides id allocation for crash-recovery replay (see
+        :meth:`RequestQueue.submit`'s ``rid``)."""
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         lane = self._lanes.get(tenant_id)
@@ -553,7 +572,12 @@ class FairAdmissionQueue:
         if weight is not None:
             lane.weight = float(weight)
             self._weights[tenant_id] = float(weight)
-        sid = next(self._next_id)
+        if sid is not None:
+            sid = int(sid)
+            self._next_id = max(self._next_id, sid + 1)
+        else:
+            sid = self._next_id
+            self._next_id += 1
         item = AdmittedSequence(
             seq_id=sid, tenant_id=tenant_id,
             prompt=np.asarray(prompt, np.int32).reshape(-1),

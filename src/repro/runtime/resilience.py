@@ -11,7 +11,16 @@
     metrics report).
 
 Failure injection for tests/examples: ``FailureInjector(at_steps={...})``
-raises ``SimulatedFailure`` from inside the loop at chosen steps.
+raises ``SimulatedFailure`` from inside the loop at chosen steps;
+``FailureInjector(at_phases={"device"})`` raises at a delivery-engine flush
+phase boundary (``"coalesce"`` | ``"device"`` | ``"publish"``, or the decode
+lane's ``"retire"`` | ``"admit"``) — once per phase, so recovery replay runs
+clean.
+
+``EngineSnapshot`` is the delivery-side counterpart of the train-loop
+checkpoint: the engine serializes its registries + in-flight request
+accounting into ``(arrays, meta)`` and persists them through the same atomic
+``CheckpointManager``.
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import numpy as np
 
 
 class SimulatedFailure(RuntimeError):
@@ -29,12 +39,18 @@ class SimulatedFailure(RuntimeError):
 @dataclasses.dataclass
 class FailureInjector:
     at_steps: set[int] = dataclasses.field(default_factory=set)
-    fired: set[int] = dataclasses.field(default_factory=set)
+    at_phases: set[str] = dataclasses.field(default_factory=set)
+    fired: set = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int) -> None:
         if step in self.at_steps and step not in self.fired:
             self.fired.add(step)
             raise SimulatedFailure(f"injected failure at step {step}")
+
+    def maybe_fail_phase(self, phase: str) -> None:
+        if phase in self.at_phases and phase not in self.fired:
+            self.fired.add(phase)
+            raise SimulatedFailure(f"injected failure at phase {phase!r}")
 
 
 @dataclasses.dataclass
@@ -48,8 +64,35 @@ class StragglerMonitor:
         slow = self.ema is not None and dt > self.factor * self.ema
         if slow:
             self.slow_steps.append((step, dt))
+            # Cap the flagged sample's contribution to the EMA at the flag
+            # threshold: one 100x straggler must not inflate the baseline
+            # and mask the next stragglers.
+            dt = self.factor * self.ema
         self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
         return slow
+
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """A delivery engine's crash-recovery image: flat named host arrays
+    (registry secrets + in-flight payloads) and a JSON-able ``meta`` tree
+    (slot bookkeeping + request descriptors).  Produced by
+    ``MoLeDeliveryEngine.snapshot()`` / ``ContinuousDecodeLane.snapshot()``
+    and persisted through :class:`repro.checkpoint.CheckpointManager`'s
+    atomic tmp-dir + rename protocol."""
+
+    arrays: dict[str, np.ndarray]
+    meta: dict
+
+    def save(self, ckpt, step: int) -> None:
+        """Persist through ``ckpt`` (a CheckpointManager) as step ``step``."""
+        ckpt.save(step, dict(self.arrays), extra=self.meta)
+
+    @classmethod
+    def load(cls, ckpt, step: int | None = None) -> "EngineSnapshot":
+        """Load the latest (or a specific) persisted snapshot."""
+        arrays, meta = ckpt.load(step)
+        return cls(arrays=arrays, meta=meta)
 
 
 class ResilientLoop:

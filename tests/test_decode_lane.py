@@ -13,7 +13,8 @@ from repro.core.lm import LMSessionRegistry
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.api import Model
 from repro.runtime import (
-    ContinuousDecodeLane, FairAdmissionQueue, delivery_trace_count,
+    ContinuousDecodeLane, FailureInjector, FairAdmissionQueue, SimulatedFailure,
+    delivery_trace_count,
 )
 
 from _hypothesis_compat import given, settings, st
@@ -176,6 +177,49 @@ def test_any_join_order_stays_exact_property(order, gens):
         np.testing.assert_array_equal(
             lane.take(sids[i]), lm.plain_decode(prompts[i], gens[i])
         )
+
+
+@pytest.mark.parametrize("phase", ["retire", "admit"])
+def test_crash_mid_decode_restores_exactly_once(lm, rng, phase):
+    """Crash between decode steps (retire/admit boundary) after a snapshot:
+    an in-place restore re-queues every unfinished sequence under its
+    original seq_id, the deterministic replay regenerates identical tokens
+    for active/queued/finished alike — exactly once — and nothing retraces
+    across snapshot/restore."""
+    tenants, rows = 6, 2
+    reg = lm.registry(tenants)
+    lane = ContinuousDecodeLane(
+        lm.model, lm.params, reg, rows=rows, max_len=MAX_LEN
+    )
+    prompts = _prompts(rng, tenants)
+    gens = [3, 6, 4, 5, 2, 4]
+    sids = [
+        lane.submit(f"t{i}", prompts[i], max_new_tokens=gens[i])
+        for i in range(tenants)
+    ]
+    # Progress partway: some sequences finish, some are mid-decode, some
+    # still queued — the mixed state a real crash interrupts.
+    for _ in range(4):
+        lane.step()
+    assert 0 < lane.active and len(lane.queue) > 0
+    snap = lane.snapshot()
+
+    n0 = delivery_trace_count()
+    lane.injector = FailureInjector(at_phases={phase})
+    with pytest.raises(SimulatedFailure):
+        lane.run()
+    lane.injector = None
+
+    restored = lane.restore(snap)
+    assert set(restored) | set(snap.meta["finished"]) == set(sids)
+    lane.run()
+    assert delivery_trace_count() == n0, "decode lane retraced on restore"
+    for i, sid in enumerate(sids):
+        np.testing.assert_array_equal(
+            lane.take(sid), lm.plain_decode(prompts[i], gens[i])
+        )
+        with pytest.raises(KeyError):   # exactly once: a second take fails
+            lane.take(sid)
 
 
 def test_admission_is_weighted_fair():

@@ -1,0 +1,407 @@
+"""Crash-safe delivery plane (engine.snapshot/restore + async supervision):
+snapshot -> disk -> restore rebuilds stacked device tables with zero
+retraces and replays every un-taken request exactly once; the supervised
+flusher survives injected crashes at each phase boundary; fatal errors fail
+fast with EngineDeadError instead of hanging waiters; close() reports a
+stuck flusher instead of ignoring it."""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import ConvGeometry, SessionRegistry
+from repro.runtime import (
+    AsyncDeliveryEngine,
+    DeliveryRequest,
+    EngineDeadError,
+    EngineSnapshot,
+    FailureInjector,
+    MoLeDeliveryEngine,
+    SimulatedFailure,
+    delivery_trace_count,
+)
+
+from _hypothesis_compat import given, settings, st
+
+GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+FLUSH_PHASES = ("coalesce", "device", "publish")
+
+
+def _rq(tenant, data, **kw):
+    return DeliveryRequest(tenant, data, **kw)
+
+
+def _registry(rng, tenants=3, kappa=2, capacity=None):
+    reg = SessionRegistry(GEOM, kappa=kappa, capacity=capacity)
+    fan_in = GEOM.alpha * GEOM.p * GEOM.p
+    for i in range(tenants):
+        k = rng.standard_normal(
+            (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        reg.register(f"t{i}", k)
+    return reg
+
+
+def _payloads(rng, n, tenants):
+    """n requests round-robined over tenants, alternating 1/2-row batches
+    (two distinct microbatch shapes, so warm != trivial)."""
+    return [
+        (
+            f"t{i % tenants}",
+            rng.standard_normal(
+                (1 + i % 2, GEOM.alpha, GEOM.m, GEOM.m)
+            ).astype(np.float32),
+        )
+        for i in range(n)
+    ]
+
+
+def _want(reg, tenant, data):
+    return np.asarray(reg.session(tenant).deliver(jnp.asarray(data)))
+
+
+# -- sync engine: snapshot / restore ------------------------------------------
+
+def test_snapshot_restore_disk_round_trip_exactly_once(rng, tmp_path):
+    """Snapshot with a mix of done-but-untaken and still-pending requests,
+    persist through CheckpointManager, restore into a *fresh* engine over a
+    fresh registry: every rid is redeemable exactly once with bit-identical
+    payloads, and the restored flush adds zero jit traces (the rebuilt
+    stacked tables keep their shapes)."""
+    tenants = 3
+    reg = _registry(rng, tenants=tenants)
+    eng = MoLeDeliveryEngine(reg)
+    reqs = _payloads(rng, 6, tenants)
+
+    done_rids = [eng.submit(_rq(t, d)) for t, d in reqs[:3]]
+    eng.flush()                               # done but never taken
+    pend_rids = [eng.submit(_rq(t, d)) for t, d in reqs[3:]]
+    snap = eng.snapshot()
+    assert eng.stats.snapshots == 1
+
+    ckpt = CheckpointManager(tmp_path / "snaps", async_save=False)
+    snap.save(ckpt, 1)
+    loaded = EngineSnapshot.load(ckpt)
+    assert loaded.meta["next_rid"] == snap.meta["next_rid"]
+
+    # Warm the pending requests' shapes on the original engine so the trace
+    # counter below measures the *restore*, not first-touch compilation.
+    eng.flush()
+    n0 = delivery_trace_count()
+
+    reg2 = _registry(np.random.default_rng(0), tenants=tenants)
+    eng2 = MoLeDeliveryEngine(reg2)
+    restored = eng2.restore(loaded)
+    assert restored == pend_rids
+    assert eng2.stats.restores == 1
+    eng2.flush()
+    assert delivery_trace_count() == n0, "restore retraced the delivery step"
+
+    # restore_state overwrote reg2's (different) secrets with the
+    # snapshotted ones, so references come from the *original* registry.
+    for rid, (t, d) in zip(done_rids + pend_rids, reqs):
+        np.testing.assert_array_equal(eng2.take(rid), _want(reg, t, d))
+        with pytest.raises(KeyError):         # exactly once
+            eng2.take(rid)
+
+    # rid allocation resumes past the snapshot: no collisions with replays.
+    t, d = reqs[0]
+    assert eng2.submit(_rq(t, d)) >= snap.meta["next_rid"]
+
+
+def test_requeue_inflight_replays_after_mid_flush_crash(rng):
+    """Crash after begin_flush (rows already coalesced out of the queues —
+    the nastiest recovery point): requeue_inflight rebuilds the queues from
+    retained payloads and the next flush delivers every rid exactly once."""
+    tenants = 2
+    reg = _registry(rng, tenants=tenants)
+    eng = MoLeDeliveryEngine(reg)
+    reqs = _payloads(rng, 4, tenants)
+    rids = [eng.submit(_rq(t, d)) for t, d in reqs]
+
+    work = eng.begin_flush()
+    assert work is not None and len(eng.queue) == 0   # rows left the queues
+    replayed = eng.requeue_inflight()
+    assert replayed == rids
+    eng.flush()
+    for rid, (t, d) in zip(rids, reqs):
+        np.testing.assert_array_equal(eng.take(rid), _want(reg, t, d))
+
+
+def test_restore_refuses_mismatched_registry(rng, tmp_path):
+    reg = _registry(rng, tenants=2)
+    eng = MoLeDeliveryEngine(reg)
+    eng.submit(_rq("t0", _payloads(rng, 1, 1)[0][1]))
+    snap = eng.snapshot()
+
+    with pytest.raises(ValueError):
+        MoLeDeliveryEngine(_registry(rng, tenants=2, kappa=3)).restore(snap)
+    # vision snapshot into an engine with no vision registry
+    from repro.core import LMSessionRegistry
+    lreg = LMSessionRegistry(64, 4, capacity=1)
+    lreg.register("lm0", rng.standard_normal((64, 4)).astype(np.float32),
+                  seed=1)
+    with pytest.raises(ValueError):
+        MoLeDeliveryEngine(lm_registry=lreg).restore(snap)
+
+
+# -- async front door: supervised recovery ------------------------------------
+
+@pytest.mark.parametrize("phase", FLUSH_PHASES)
+def test_injected_crash_recovers_exactly_once(rng, phase):
+    """A SimulatedFailure at each flush phase boundary: the supervisor
+    requeues the in-flight requests and every future still resolves with
+    the exact payload — no lost rids, no duplicates, no stuck waiters."""
+    tenants = 3
+    reg = _registry(rng, tenants=tenants)
+    eng = MoLeDeliveryEngine(reg, injector=FailureInjector(at_phases={phase}))
+    reqs = _payloads(rng, 9, tenants)
+    with AsyncDeliveryEngine(eng, max_delay_ms=5.0) as front:
+        futs = [(t, d, front.submit(_rq(t, d))) for t, d in reqs]
+        results = [(t, d, f.result(timeout=120)) for t, d, f in futs]
+        rids = [r.request_id for _, _, r in results]
+        assert len(set(rids)) == len(rids)
+        for t, d, r in results:
+            np.testing.assert_array_equal(r.payload, _want(reg, t, d))
+        assert front._restarts == 1
+        assert eng.injector.fired == {phase}
+    assert front.pending() == 0
+
+
+def test_fatal_flusher_error_raises_engine_dead(rng):
+    """BaseException escaping the flush loop (a KeyboardInterrupt delivered
+    into the flusher thread) must not kill the thread silently: in-flight
+    futures fail with EngineDeadError and later submits raise immediately
+    instead of blocking forever."""
+
+    class _FatalEngine(MoLeDeliveryEngine):
+        def execute_flush(self, work):
+            raise KeyboardInterrupt("delivered into the flusher")
+
+    reg = _registry(rng, tenants=1)
+    front = AsyncDeliveryEngine(_FatalEngine(reg), max_delay_ms=1.0)
+    d = _payloads(rng, 1, 1)[0][1]
+    fut = front.submit(_rq("t0", d))
+    with pytest.raises(EngineDeadError, match="flusher died"):
+        fut.result(timeout=60)
+    with pytest.raises(EngineDeadError):
+        front.submit(_rq("t0", d))           # immediate, no deadline wait
+    front.close()                            # still clean to shut down
+
+
+def test_restart_budget_exhausts_to_engine_dead(rng):
+    """More injected crashes than max_restarts: the supervisor gives up and
+    the engine goes dead instead of looping forever."""
+    reg = _registry(rng, tenants=1)
+    inj = FailureInjector(at_phases=set(FLUSH_PHASES))
+    eng = MoLeDeliveryEngine(reg, injector=inj)
+    front = AsyncDeliveryEngine(eng, max_delay_ms=1.0, max_restarts=1)
+    fut = front.submit(_rq("t0", _payloads(rng, 1, 1)[0][1]))
+    with pytest.raises(EngineDeadError):
+        fut.result(timeout=60)
+    front.close()
+
+
+class _HeldExecuteEngine(MoLeDeliveryEngine):
+    """Device phase blocks until released (deterministic stuck-flusher
+    window)."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.in_device = threading.Event()
+        self.release = threading.Event()
+
+    def execute_flush(self, work):
+        self.in_device.set()
+        assert self.release.wait(timeout=60), "test never released the flush"
+        return super().execute_flush(work)
+
+
+def test_close_timeout_fails_stranded_futures(rng):
+    """close(timeout=) on a wedged flusher: raises TimeoutError carrying the
+    in-flight count and fails the stranded futures.  The join outcome used
+    to be ignored — close() returned normally with waiters blocked on
+    futures that would never resolve."""
+    reg = _registry(rng, tenants=1)
+    eng = _HeldExecuteEngine(reg)
+    front = AsyncDeliveryEngine(eng, max_delay_ms=1.0)
+    fut = front.submit(_rq("t0", _payloads(rng, 1, 1)[0][1]))
+    assert eng.in_device.wait(timeout=30)
+    with pytest.raises(TimeoutError, match="1 requests still in flight"):
+        front.close(timeout=0.2)
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0)                # already failed, not hanging
+    eng.release.set()
+    front._flusher.join(timeout=30)          # flusher unwedges and exits
+    assert not front._flusher.is_alive()
+
+
+def test_front_door_restore_resolves_futures(rng, tmp_path):
+    """Process-restart shape: engine A snapshots a pending backlog to disk
+    and dies; a fresh front door over a fresh engine restores from the
+    snapshot_dir and hands back futures that resolve to the exact
+    payloads."""
+    tenants = 2
+    reg = _registry(rng, tenants=tenants)
+    eng = MoLeDeliveryEngine(reg)
+    reqs = _payloads(rng, 4, tenants)
+    rids = [eng.submit(_rq(t, d)) for t, d in reqs]
+    snapdir = tmp_path / "snaps"
+    eng.snapshot().save(CheckpointManager(snapdir, async_save=False), 7)
+
+    reg2 = _registry(np.random.default_rng(1), tenants=tenants)
+    with AsyncDeliveryEngine(
+        MoLeDeliveryEngine(reg2), max_delay_ms=5.0, snapshot_dir=snapdir
+    ) as front:
+        futs = front.restore()               # loads step 7 from disk
+        assert sorted(futs) == rids
+        for rid, (t, d) in zip(rids, reqs):
+            got = futs[rid].result(timeout=120)
+            assert got.request_id == rid
+            np.testing.assert_array_equal(got.payload, _want(reg, t, d))
+        # new work shares the id space without colliding with replays
+        t, d = reqs[0]
+        fresh = front.submit(_rq(t, d))
+        assert fresh.request_id not in rids
+        np.testing.assert_array_equal(
+            fresh.result(timeout=120).payload, _want(reg, t, d)
+        )
+
+
+def test_flusher_persists_snapshots_between_rounds(rng, tmp_path):
+    """With snapshot_dir set, the flusher snapshots after flush rounds and
+    close() leaves a durable, loadable image on disk."""
+    reg = _registry(rng, tenants=2)
+    snapdir = tmp_path / "snaps"
+    with AsyncDeliveryEngine(
+        reg, max_delay_ms=5.0, snapshot_dir=snapdir
+    ) as front:
+        for t, d in _payloads(rng, 4, 2):
+            front.submit(_rq(t, d))
+        front.drain(timeout=120)
+        assert front.stats.snapshots >= 1
+    ckpt = CheckpointManager(snapdir)
+    assert ckpt.latest_step() is not None
+    snap = EngineSnapshot.load(ckpt)
+    assert "registries" in snap.meta and "vision" in snap.meta["registries"]
+    assert not list(snapdir.glob("*.tmp"))   # atomic: no stranded writes
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    order=st.permutations(list(range(6))),
+    phase=st.sampled_from(list(FLUSH_PHASES)),
+)
+def test_crash_recovery_any_arrival_order_property(order, phase):
+    """Hypothesis sweep: whatever the arrival order and whichever phase the
+    crash lands in, recovery preserves the exactly-once contract."""
+    rng = np.random.default_rng(11)
+    reg = _registry(rng, tenants=3)
+    datas = {
+        i: rng.standard_normal(
+            (1 + i % 2, GEOM.alpha, GEOM.m, GEOM.m)
+        ).astype(np.float32)
+        for i in range(6)
+    }
+    eng = MoLeDeliveryEngine(reg, injector=FailureInjector(at_phases={phase}))
+    futs = {}
+    with AsyncDeliveryEngine(eng, max_delay_ms=2.0) as front:
+        for i in order:
+            futs[i] = front.submit(_rq(f"t{i % 3}", datas[i]))
+        results = {i: f.result(timeout=120) for i, f in futs.items()}
+    rids = [r.request_id for r in results.values()]
+    assert len(set(rids)) == len(rids)
+    for i, r in results.items():
+        np.testing.assert_array_equal(
+            r.payload, _want(reg, f"t{i % 3}", datas[i])
+        )
+
+
+# -- slow lane: real process death --------------------------------------------
+
+_SUBPROC_COMMON = """
+import numpy as np
+import jax.numpy as jnp
+from repro.core import ConvGeometry, SessionRegistry
+from repro.runtime import DeliveryRequest, EngineSnapshot, MoLeDeliveryEngine
+from repro.checkpoint import CheckpointManager
+
+GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+rng = np.random.default_rng(5)           # same seed both sides: same
+reg = SessionRegistry(GEOM, kappa=2)     # secrets, same payloads
+fan_in = GEOM.alpha * GEOM.p * GEOM.p
+for i in range(3):
+    reg.register(f"t{i}", rng.standard_normal(
+        (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
+    ).astype(np.float32) / np.sqrt(fan_in))
+reqs = [
+    (f"t{r % 3}", rng.standard_normal(
+        (2, GEOM.alpha, GEOM.m, GEOM.m)
+    ).astype(np.float32))
+    for r in range(6)
+]
+"""
+
+_SUBPROC_CRASH = _SUBPROC_COMMON + """
+import os, signal
+eng = MoLeDeliveryEngine(reg)
+for t, d in reqs[:3]:                    # flushed but never taken
+    eng.submit(DeliveryRequest(t, d))
+eng.flush()
+for t, d in reqs[3:]:                    # still queued at crash time
+    eng.submit(DeliveryRequest(t, d))
+eng.snapshot().save(CheckpointManager(SNAPDIR, async_save=False), 1)
+os.kill(os.getpid(), signal.SIGKILL)     # no atexit, no cleanup — a crash
+"""
+
+_SUBPROC_RESTORE = _SUBPROC_COMMON + """
+import json
+eng = MoLeDeliveryEngine(reg)
+pending = eng.restore(EngineSnapshot.load(CheckpointManager(SNAPDIR)))
+eng.flush()
+ok = True
+for rid, (t, d) in enumerate(reqs):
+    got = eng.take(rid)
+    ok = ok and np.array_equal(
+        got, np.asarray(reg.session(t).deliver(jnp.asarray(d)))
+    )
+    try:
+        eng.take(rid)
+        ok = False                        # duplicate redemption
+    except KeyError:
+        pass
+print(json.dumps({"ok": ok, "replayed": len(pending)}))
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_mid_backlog_then_restore(tmp_path):
+    """A real process dies (SIGKILL — no cleanup, no atexit) mid-backlog
+    after persisting a snapshot; a second process restores from disk and
+    delivers every request exactly once."""
+    repo = Path(__file__).resolve().parents[1]
+    env = {**os.environ, "PYTHONPATH": str(repo / "src")}
+
+    def run(code):
+        return subprocess.run(
+            [sys.executable, "-c",
+             f"SNAPDIR = {str(tmp_path / 'snaps')!r}\n" + textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=600, env=env, cwd=repo,
+        )
+
+    crashed = run(_SUBPROC_CRASH)
+    assert crashed.returncode == -signal.SIGKILL, crashed.stderr
+
+    restored = run(_SUBPROC_RESTORE)
+    assert restored.returncode == 0, restored.stderr
+    import json
+    verdict = json.loads(restored.stdout.strip().splitlines()[-1])
+    assert verdict["ok"] and verdict["replayed"] == 3

@@ -64,3 +64,17 @@ def test_straggler_monitor():
     assert not mon.record(1, 1.1)
     assert mon.record(2, 10.0)        # 10x slower than EMA -> flagged
     assert mon.slow_steps[0][0] == 2
+
+
+def test_straggler_monitor_flags_consecutive_stragglers():
+    """A flagged sample's EMA contribution is capped at the flag threshold:
+    one extreme straggler must not inflate the baseline so much that the
+    *next* straggler passes as normal (the old fold-it-in-raw behavior
+    masked the second of two back-to-back stragglers)."""
+    mon = StragglerMonitor(factor=3.0)
+    assert not mon.record(0, 1.0)           # ema = 1.0
+    assert mon.record(1, 100.0)             # flagged; ema capped -> 1.4
+    # Uncapped, ema would be ~20.8 and 50.0 < 3*20.8 would sneak through.
+    assert mon.record(2, 50.0)
+    assert [s for s, _ in mon.slow_steps] == [1, 2]
+    assert mon.ema < 5.0                    # baseline stays near honest work
