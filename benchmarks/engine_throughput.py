@@ -26,7 +26,18 @@ bounded flush rounds: the weight-2 tenant must achieve ~2x the goodput
 (completed rows) of the weight-1 tenant (gated at >= 1.6x; the allocation is
 deterministic scheduler arithmetic, not wall-clock, so the gate also runs in
 ``--smoke``), with every completed result still exactly equal to per-request
-delivery.
+delivery.  A **cross-lane** point repeats the experiment with the weight-2
+tenant *splitting* its backlog across the vision and token lanes while the
+weight-1 tenant rides vision only: on the one engine-wide virtual clock its
+engine-wide service share must still converge to ~2x (gated [1.6, 2.6]x in
+full and ``--smoke``) — under the old per-lane clocks each lane granted an
+independent 2x and the split tenant inflated to ~4x.
+
+A **prefetch point** drives a strictly periodic tenant on an injected clock
+while cache-capacity pressure keeps evicting it: the arrival predictor must
+stage the tenant's slot ahead of every tick (``engine.predictive_prefetch``),
+so each arrival lands resident — hit rate gated at >= 0.9 in full and
+``--smoke`` (deterministic: the clock is injected, not wall time).
 
 A **decode sweep** times end-to-end generation: the per-tenant fallback loop
 (fuse Aug params, prefill + greedy-decode one tenant at a time — tenants*gen
@@ -60,6 +71,9 @@ CSV rows:
   engine/b{B}_k{kappa}_t{T}/engine,<us>,<images/s> speedup=<x>
   engine_fairness/r{rounds}/weight2,<us>,<rows> goodput_ratio=<x>
   engine_fairness/r{rounds}/weight1,<us>,<rows>
+  engine_fairness/cross_lane_r{rounds}/weight2_split,<us>,<units> goodput_ratio=<x>
+  engine_fairness/cross_lane_r{rounds}/weight1_vision,<us>,<units>
+  engine_prefetch/p{period}_n{rounds}/predictive,<us>,hit_rate=<r>
   engine_gather/b{B}_t{T}/identity,<us>,<images/s>
   engine_gather/b{B}_t{T}/partial_table,<us>,<images/s> vs_identity=<x>
   engine_gather/b{B}_t{T}/out_of_order,<us>,<images/s> vs_identity=<x>
@@ -407,6 +421,145 @@ def _fairness_sweep_point(
     )
 
 
+def _cross_lane_fairness_point(
+    requests_per_tenant: int = 12, rows_per_request: int = 8,
+    rounds: int = 8, min_ratio: float = 1.6, max_ratio: float = 2.6,
+) -> None:
+    """The cross-lane weight-inflation regression, as a gated trajectory
+    point: "heavy" (weight 2) splits a saturating backlog across the vision
+    AND token lanes, "light" (weight 1) rides vision only.  On the shared
+    engine-wide clock heavy's total service over ``rounds`` bounded flush
+    rounds must still be ~2x light's (per-lane clocks used to give each of
+    heavy's lanes a full 2x share => ~4x engine-wide).  Deterministic
+    scheduler arithmetic — the gate runs in ``--smoke`` too.
+    """
+    from repro.core import ConvGeometry, SessionRegistry
+    from repro.core.lm import LMSessionRegistry
+    from repro.runtime import MoLeDeliveryEngine
+
+    geom = ConvGeometry(**GEOM)
+    rng = np.random.default_rng(11)
+    registry = SessionRegistry(geom, kappa=1, capacity=2)
+    fan_in = geom.alpha * geom.p * geom.p
+    for name, w in (("heavy", 2.0), ("light", 1.0)):
+        k = rng.standard_normal(
+            (geom.alpha, geom.beta, geom.p, geom.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        registry.register(name, k, weight=w)
+    lm_registry = LMSessionRegistry(LM_VOCAB, LM_DMODEL, capacity=1)
+    lm_registry.register(
+        "heavy",
+        rng.standard_normal((LM_VOCAB, LM_DMODEL)).astype(np.float32),
+        seed=0,
+    )
+    engine = MoLeDeliveryEngine(
+        registry, lm_registry=lm_registry, max_rows=rows_per_request,
+        row_buckets=tuple(sorted({1, 2, 4, rows_per_request})),
+        group_buckets=(1, 2), seq_buckets=(rows_per_request,),
+        max_flush_microbatches=2,
+    )
+
+    for _ in range(requests_per_tenant):
+        engine.submit(_req("heavy", rng.standard_normal(
+            (rows_per_request, geom.alpha, geom.m, geom.m)
+        ).astype(np.float32)))
+        engine.submit(_req(
+            "heavy",
+            rng.integers(
+                0, LM_VOCAB, (rows_per_request, rows_per_request)
+            ).astype(np.int32),
+            lane="tokens",
+        ))
+        for _ in range(2):   # light matches heavy's total demand, on vision
+            engine.submit(_req("light", rng.standard_normal(
+                (rows_per_request, geom.alpha, geom.m, geom.m)
+            ).astype(np.float32)))
+
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        work = engine.begin_flush()
+        assert work is not None, "backlog drained: not saturated, grow it"
+        engine.execute_flush(work)
+        engine.publish_flush(work)
+    dt = (time.perf_counter() - t0) / rounds
+
+    served = engine.scheduler.service_by_tenant
+    ratio = served["heavy"] / max(served["light"], 1)
+    tag = f"engine_fairness/cross_lane_r{rounds}"
+    emit(
+        f"{tag}/weight2_split", dt * 1e6,
+        f"{served['heavy']} units goodput_ratio={ratio:.2f}x",
+    )
+    emit(f"{tag}/weight1_vision", dt * 1e6, f"{served['light']} units")
+    assert min_ratio <= ratio <= max_ratio, (
+        f"weight-2 tenant splitting across lanes got {ratio:.2f}x the "
+        f"weight-1 goodput (want [{min_ratio}, {max_ratio}]x: per-lane "
+        f"clock inflation is back)"
+    )
+
+
+def _prefetch_point(
+    rounds: int = 8, period_s: float = 10.0, min_hit_rate: float = 0.9,
+) -> None:
+    """Predictive prefetch on an injected clock: a strictly periodic tenant
+    keeps losing its slot to capacity pressure; the arrival predictor must
+    re-stage it ahead of every tick so each arrival lands resident.  The
+    emitted us is the ``predictive_prefetch`` call itself (predictor scan +
+    slot staging); the hit-rate gate is deterministic and runs in
+    ``--smoke``."""
+    from repro.core import ConvGeometry, SessionRegistry
+    from repro.runtime import MoLeDeliveryEngine
+
+    geom = ConvGeometry(**GEOM)
+    rng = np.random.default_rng(13)
+    registry = SessionRegistry(geom, kappa=1, capacity=2)
+    fan_in = geom.alpha * geom.p * geom.p
+    for name in ("hot", "filler-a", "filler-b"):
+        k = rng.standard_normal(
+            (geom.alpha, geom.beta, geom.p, geom.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        registry.register(name, k)
+    now = [0.0]
+    engine = MoLeDeliveryEngine(
+        registry, max_rows=8, row_buckets=(1, 2, 4, 8), group_buckets=(1, 2),
+        clock=lambda: now[0],
+    )
+    data = rng.standard_normal(
+        (2, geom.alpha, geom.m, geom.m)
+    ).astype(np.float32)
+
+    # Learn the period: 4 ticks while resident, then the eviction cycle.
+    for tick in range(4):
+        now[0] = period_s * tick
+        engine.submit(_req("hot", data))
+        engine.flush()
+
+    spent = 0.0
+    for r in range(rounds):
+        engine.prefetch(["filler-a", "filler-b"])   # capacity 2: evicts hot
+        assert not registry.is_resident("hot")
+        next_tick = period_s * (4 + r)
+        now[0] = next_tick - 2.0
+        t0 = time.perf_counter()
+        staged = engine.predictive_prefetch(horizon_ms=5_000.0)
+        spent += time.perf_counter() - t0
+        assert staged == ["hot"], f"predictor failed to stage: {staged}"
+        now[0] = next_tick
+        engine.submit(_req("hot", data))
+        engine.flush()
+    hits, misses = engine.stats.prefetch_hits, engine.stats.prefetch_misses
+    rate = hits / max(hits + misses, 1)
+    emit(
+        f"engine_prefetch/p{period_s:g}_n{rounds}/predictive",
+        spent / rounds * 1e6,
+        f"hit_rate={rate:.2f} hits={hits} misses={misses}",
+    )
+    assert rate >= min_hit_rate, (
+        f"predictive prefetch hit rate {rate:.2f} < {min_hit_rate} "
+        f"(hits={hits} misses={misses})"
+    )
+
+
 def _latency_point(
     n_requests: int, max_delay_ms: float = 2.0, arrival_ms: float = 0.5
 ) -> None:
@@ -673,6 +826,8 @@ def run() -> None:
                 gate = 1.0 if batch == 8 and tenants == 16 else None
                 _sweep_point(batch, kappa, tenants, min_speedup=gate)
     _fairness_sweep_point()
+    _cross_lane_fairness_point()
+    _prefetch_point()
     _gather_sweep_point(batch=64, tenants=16)
     for batch in (8, 64):
         for seq in (16, 128):
@@ -690,12 +845,16 @@ def run_smoke() -> None:
     on every change.  The perf-ratio gates are off — tiny shapes on shared
     2-core CI runners flake; the local/nightly ``run()`` asserts the real
     bounds — the ratios are still emitted for the uploaded artifact.  The
-    fairness sweep's weight-ratio gate *does* run here: WFQ row allocation
-    is deterministic scheduler arithmetic, not wall-clock.  The decode
+    fairness sweeps' weight-ratio gates (single-lane AND cross-lane) and
+    the predictive-prefetch hit-rate gate *do* run here: WFQ allocation is
+    deterministic scheduler arithmetic and the prefetch clock is injected,
+    neither is wall-clock.  The decode
     point likewise keeps only its bit-equality assert (batched lane decode
     == per-tenant loop after unmorphing)."""
     _sweep_point(8, 1, 4)
     _fairness_sweep_point(requests_per_tenant=24, rounds=4)
+    _cross_lane_fairness_point(requests_per_tenant=8, rounds=4)
+    _prefetch_point(rounds=4)
     _gather_sweep_point(
         batch=16, tenants=4, max_ratio=None, sparse_max_ratio=None, iters=3
     )

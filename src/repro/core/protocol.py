@@ -264,15 +264,21 @@ class SlotRegistry:
 
     # -- weighted fair queueing shares ---------------------------------------
     def weight_of(self, tenant_id: str) -> float:
-        """Tenant's WFQ share for the delivery engine's coalescer (1.0 unless
-        set): under saturation a weight-2 tenant is served ~2x the rows of a
-        weight-1 tenant."""
+        """Tenant's WFQ share (1.0 unless set).  The registry is the single
+        place weights resolve: the delivery engine's shared
+        ``FairScheduler`` calls this on every submit, so the share is
+        **engine-wide** — under saturation a weight-2 tenant is served ~2x a
+        weight-1 tenant's service units *summed over every lane* (vision
+        rows, LM tokens, continuous features, decode steps), not 2x per
+        lane."""
         return self._weights.get(tenant_id, 1.0)
 
     def set_weight(self, tenant_id: str, weight: float) -> None:
         """Set a registered tenant's WFQ share (provider-side policy: weights
         live on the registry, not on requests, so a tenant cannot grant
-        itself a larger share of the fleet)."""
+        itself a larger share of the fleet).  Takes effect on the tenant's
+        next submit — the engine's scheduler re-resolves weights through
+        :meth:`weight_of`; no queue needs draining."""
         if tenant_id not in self._sessions:
             raise KeyError(f"unknown tenant {tenant_id!r}")
         if not weight > 0:

@@ -129,12 +129,14 @@ def run_delivery(args) -> dict:
     from repro.runtime import EngineStats
 
     engine.stats = EngineStats()
+    engine.stats.service_share_fn = engine.scheduler.service_share
 
     if args.use_async:
         front = AsyncDeliveryEngine(
             engine, max_delay_ms=args.max_delay_ms,
             max_inflight_rows=args.max_inflight_rows, admission=args.admission,
             snapshot_dir=args.snapshot_dir,
+            prefetch_horizon_ms=args.prefetch_horizon_ms,
             injector=_injector_of(args),
         )
         t0 = time.time()
@@ -289,6 +291,7 @@ def run_lm(args) -> np.ndarray:
                 max_inflight_rows=args.max_inflight_rows,
                 admission=args.admission,
                 snapshot_dir=args.snapshot_dir,
+                prefetch_horizon_ms=args.prefetch_horizon_ms,
                 injector=_injector_of(args),
             )
             futures = [front.submit(q) for q in prompt_reqs]
@@ -319,10 +322,15 @@ def run_lm(args) -> np.ndarray:
         # hand their slot to the next queued request between steps.  The
         # lane unmorphs on take(), so `final` is already the provider view.
         t0 = time.time()
+        # The lane shares the delivery engine's FairScheduler: a tenant's
+        # decode appetite (max_new_tokens steps per admission) charges the
+        # same engine-wide clock as its prompt-morph traffic, so weights
+        # hold across the whole serving path, not per lane.
         lane = ContinuousDecodeLane(
             model, params, registry,
             rows=min(args.requests, registry.capacity),
             max_len=max_len, backend=args.backend or None,
+            scheduler=engine.scheduler,
         )
         sids = [
             lane.submit(
@@ -441,6 +449,7 @@ _ENGINE_ONLY = {
     "--deadline-ms": ("deadline_ms", None),
     "--snapshot-dir": ("snapshot_dir", None),
     "--inject-failure": ("inject_failure", None),
+    "--prefetch-horizon-ms": ("prefetch_horizon_ms", None),
 }
 
 
@@ -495,6 +504,11 @@ def main(argv=None):
                     choices=["coalesce", "device", "publish"],
                     help="crash the flusher once at this flush phase to "
                          "exercise supervised recovery (requires --async)")
+    ap.add_argument("--prefetch-horizon-ms", type=float, default=None,
+                    help="enable predictive prefetch: after each flush "
+                         "round the async flusher stages evicted tenants "
+                         "the arrival predictor expects within this "
+                         "horizon (requires --async; hit rate in --stats)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     # vision-delivery-only options (error under --mode lm)
@@ -550,6 +564,9 @@ def main(argv=None):
         ap.error("--snapshot-dir requires --async (the supervised flusher)")
     if args.inject_failure is not None and not args.use_async:
         ap.error("--inject-failure requires --async (the supervised flusher)")
+    if args.prefetch_horizon_ms is not None and not args.use_async:
+        ap.error("--prefetch-horizon-ms requires --async (predictive "
+                 "prefetch runs in the background flusher's slack)")
     for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY):
         for dest, default in table.values():
             if getattr(args, dest) is None:

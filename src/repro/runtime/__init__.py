@@ -5,14 +5,18 @@
   async_engine  async front door: deadline flusher, latency SLOs, admission
   decode        continuous-batched cross-tenant LM decode lane
   queue         weighted-fair request queues + padded-microbatch coalescing
+                (FairScheduler: the one engine-wide WFQ virtual clock)
+  prefetch      per-tenant arrival prediction for slot prefetch
   resilience    resilient loop, failure injection, stragglers
 """
 from .api import DeliveryRequest, DeliveryResult
 from .async_engine import AdmissionError, AsyncDeliveryEngine, EngineDeadError
 from .decode import ContinuousDecodeLane
 from .engine import EngineStats, MoLeDeliveryEngine, delivery_trace_count
+from .prefetch import ArrivalPredictor
 from .queue import (
-    FairAdmissionQueue, Microbatch, QueuedRequest, RequestQueue, TokenQueue,
+    FairAdmissionQueue, FairScheduler, Microbatch, QueuedRequest,
+    RequestQueue, TokenQueue,
 )
 from .resilience import (
     EngineSnapshot, FailureInjector, ResilientLoop, SimulatedFailure,
@@ -21,6 +25,7 @@ from .resilience import (
 
 __all__ = [
     "AdmissionError",
+    "ArrivalPredictor",
     "AsyncDeliveryEngine",
     "EngineDeadError",
     "EngineSnapshot",
@@ -29,6 +34,7 @@ __all__ = [
     "DeliveryResult",
     "EngineStats",
     "FairAdmissionQueue",
+    "FairScheduler",
     "MoLeDeliveryEngine",
     "delivery_trace_count",
     "Microbatch",

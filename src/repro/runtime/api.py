@@ -137,6 +137,20 @@ class DeliveryResult:
 # normalization: one validation point for every lane
 # ---------------------------------------------------------------------------
 
+def _require_nonempty(req: DeliveryRequest, n: int, unit: str) -> None:
+    """Reject zero-row payloads at the front door: an empty request has
+    nothing to deliver, and downstream it would coalesce into a phantom
+    "real" group of pure padding (``largest=0`` still rounds up to the
+    1-row bucket) that wastes a group slot and skews the padding stats."""
+    if n == 0:
+        raise ValueError(
+            f"empty payload for tenant {req.tenant_id!r} on lane "
+            f"{req.lane!r}: a request must carry at least one {unit} "
+            f"(zero-row submissions have nothing to deliver and would "
+            f"poison microbatch coalescing)"
+        )
+
+
 def _normalize_rows(engine, req: DeliveryRequest) -> np.ndarray:
     reg = engine.registry
     if reg is None:
@@ -150,8 +164,10 @@ def _normalize_rows(engine, req: DeliveryRequest) -> np.ndarray:
             raise ValueError(
                 f"expected images (b, {g.alpha}, {g.m}, {g.m}), got {data.shape}"
             )
+        _require_nonempty(req, data.shape[0], "image")
         return np.asarray(unroll_batch(data))
     if data.ndim == 2:
+        _require_nonempty(req, data.shape[0], "row")
         return data
     raise ValueError(f"expected rank-2 rows or rank-4 images, got {data.shape}")
 
@@ -168,15 +184,21 @@ def _normalize_tokens(engine, req: DeliveryRequest) -> np.ndarray:
             f"expected int tokens of shape (b, L), got {tokens.dtype} "
             f"{tokens.shape}"
         )
+    _require_nonempty(req, tokens.shape[0], "sequence")
     max_seq = engine.seq_buckets[-1]
     if tokens.shape[1] > max_seq:
+        # Named at the front door so the caller sees *which* request broke
+        # the limit, not bucketize's bare "N exceeds largest bucket" from
+        # deep inside TokenQueue.submit.
         raise ValueError(
-            f"sequence length {tokens.shape[1]} exceeds the largest "
-            f"seq bucket {max_seq}; construct the engine with larger "
-            f"seq_buckets (or split the request)"
+            f"request for tenant {req.tenant_id!r}: sequence length "
+            f"{tokens.shape[1]} exceeds the largest seq bucket {max_seq}; "
+            f"split the request into <= {max_seq}-token chunks, or "
+            f"construct the engine with larger seq_buckets"
         )
+    _require_nonempty(req, tokens.shape[1], "token per sequence")
     v = reg.vocab
-    if tokens.size and (tokens.min() < 0 or tokens.max() >= v):
+    if tokens.min() < 0 or tokens.max() >= v:
         raise ValueError(f"token ids out of range [0, {v})")
     return tokens.astype(np.int32)
 
@@ -192,6 +214,7 @@ def _normalize_features(engine, req: DeliveryRequest) -> np.ndarray:
         raise ValueError(
             f"expected (..., {d_in}) features with rank 2 or 3, got {data.shape}"
         )
+    _require_nonempty(req, int(np.prod(data.shape[:-1])), "position")
     return data
 
 

@@ -113,6 +113,13 @@ class AsyncDeliveryEngine:
     max_restarts:
         In-process recoveries allowed before a recoverable flusher crash is
         treated as fatal (:class:`EngineDeadError`).
+    prefetch_horizon_ms:
+        When set, the flusher runs the engine's *predictive* prefetch after
+        each flush round: evicted tenants the arrival predictor expects
+        within this horizon get their secrets staged between rounds instead
+        of inside their burst's first flush (see
+        :meth:`MoLeDeliveryEngine.predictive_prefetch`; hit rate in
+        ``EngineStats.prefetch_hits`` / ``prefetch_misses``).
     injector:
         Optional :class:`repro.runtime.resilience.FailureInjector`, assigned
         to the wrapped engine (tests / serve.py ``--inject-failure``).
@@ -129,6 +136,7 @@ class AsyncDeliveryEngine:
         snapshot_dir: str | None = None,
         snapshot_every: int = 1,
         max_restarts: int = 3,
+        prefetch_horizon_ms: float | None = None,
         injector=None,
         **engine_kwargs,
     ):
@@ -156,6 +164,12 @@ class AsyncDeliveryEngine:
             engine.injector = injector
         self.snapshot_every = max(1, int(snapshot_every))
         self.max_restarts = int(max_restarts)
+        # When set, the flusher calls engine.predictive_prefetch(horizon)
+        # after each flush round — staging tenants the arrival predictor
+        # expects within the horizon while the device is otherwise idle.
+        self.prefetch_horizon_ms = (
+            None if prefetch_horizon_ms is None else float(prefetch_horizon_ms)
+        )
         self._snapshotter = None
         if snapshot_dir is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -614,6 +628,14 @@ class AsyncDeliveryEngine:
             with self._cv:
                 self._resolving -= len(resolved) + len(failed)
                 self._cv.notify_all()  # quota freed / drain() progress
+            # Predictive prefetch in the inter-round slack: stage tenants
+            # the arrival predictor expects before their burst lands.  Under
+            # the lock (slot assignment + plan patches mutate engine state),
+            # but after futures resolved — waiters never wait on staging.
+            if self.prefetch_horizon_ms is not None and error is None:
+                with self._cv:
+                    if self._dead is None and not self._closed:
+                        self.engine.predictive_prefetch(self.prefetch_horizon_ms)
             # Supervised snapshotting between flush rounds: the image is
             # captured under the lock (a consistent cut — publish has
             # completed, nothing is half-scattered) but written *off* it,

@@ -40,7 +40,7 @@ import numpy as np
 from repro.core.lm import LMSessionRegistry
 
 from .engine import _TRACES, _Plan, _sync_plan
-from .queue import FairAdmissionQueue
+from .queue import FairAdmissionQueue, FairScheduler
 from .resilience import EngineSnapshot
 
 __all__ = ["ContinuousDecodeLane", "DecodeRow"]
@@ -96,6 +96,7 @@ class ContinuousDecodeLane:
         max_len: int,
         backend: str | None = None,
         injector=None,
+        scheduler=None,
     ):
         if registry.capacity < rows:
             raise ValueError(
@@ -114,7 +115,15 @@ class ContinuousDecodeLane:
         self.registry = registry
         self.rows = int(rows)
         self.max_len = int(max_len)
-        self.queue = FairAdmissionQueue()
+        # Admission charges the scheduler max_new_tokens x decode_step_units
+        # per taken sequence.  Pass the delivery engine's scheduler
+        # (``scheduler=engine.scheduler``) to make decode appetite count
+        # against the same engine-wide per-tenant shares as the morph lanes;
+        # a stand-alone lane gets a private clock with weights resolved
+        # through this registry.
+        if scheduler is None:
+            scheduler = FairScheduler(weight_of=registry.weight_of)
+        self.queue = FairAdmissionQueue(scheduler)
         self._plan: _Plan | None = None
         self._results: dict[int, np.ndarray] = {}
         # Crash-safety hook: raises SimulatedFailure at the "retire"/"admit"
@@ -186,9 +195,11 @@ class ContinuousDecodeLane:
             )
         if not premorphed:
             prompt = sess.morpher.perm[prompt].astype(np.int32)
+        # No per-submit weight: the scheduler resolves the tenant's share
+        # through its weight_of resolver (this registry, or the whole
+        # engine's resolver when the scheduler is shared).
         return self.queue.submit(
-            tenant_id, prompt, max_new_tokens, priority=priority,
-            weight=self.registry.weight_of(tenant_id),
+            tenant_id, prompt, max_new_tokens, priority=priority
         )
 
     # -- plan upkeep ---------------------------------------------------------
@@ -325,6 +336,11 @@ class ContinuousDecodeLane:
         meta: dict = {
             "registry": rmeta,
             "next_sid": self.queue._next_id,
+            # Fairness positions (virtual clock + per-tenant vtimes) survive
+            # a crash with the sequences.  With an engine-shared scheduler
+            # the engine's snapshot carries the same state; restoring either
+            # image yields the same scheduler positions.
+            "scheduler": self.queue.scheduler.snapshot_state(),
             "sequences": [],
             "finished": sorted(self._results),
         }
@@ -366,7 +382,13 @@ class ContinuousDecodeLane:
         self._sidx = np.zeros(self.rows, np.int32)
         self._tokens = np.zeros(self.rows, np.int32)
         self._t = np.zeros(self.rows, np.int32)
-        self.queue = FairAdmissionQueue()
+        self.queue.release()   # return backlog refs before swapping queues
+        self.queue = FairAdmissionQueue(self.queue.scheduler)
+        if meta.get("scheduler") is not None:
+            # Queues are drained here, so the fairness state swaps wholesale;
+            # the replay below re-enters each backlog, and restored vtimes
+            # satisfy vtime >= vnow so re-entry keeps them exactly.
+            self.queue.scheduler.restore_state(meta["scheduler"])
         self._results = {}
         pending: list[int] = []
         for desc in meta["sequences"]:
@@ -376,7 +398,7 @@ class ContinuousDecodeLane:
             self.queue.submit(
                 desc["tenant"], arrays[f"seq/{sid:08d}/prompt"],
                 int(desc["max_new_tokens"]), priority=int(desc["priority"]),
-                weight=self.registry.weight_of(desc["tenant"]), sid=sid,
+                sid=sid,
             )
             pending.append(sid)
         for sid in meta["finished"]:

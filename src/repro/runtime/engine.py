@@ -83,6 +83,7 @@ from repro.sharding.hints import hint
 
 from . import api
 from .api import DeliveryRequest, DeliveryResult
+from .prefetch import ArrivalPredictor
 from .resilience import EngineSnapshot, StragglerMonitor
 
 __all__ = ["EngineStats", "MoLeDeliveryEngine", "delivery_trace_count"]
@@ -135,6 +136,15 @@ class EngineStats:
     # observable for "the flusher holds the lock across device execution".
     submit_stalls: int = 0
     stall_threshold_ms: float = 1.0
+    # Predictive prefetch scoreboard: a predicted tenant that next arrives
+    # while resident is a hit; a lapsed prediction window (or arriving
+    # evicted anyway) is a miss.  The hit rate is the gate on whether the
+    # arrival predictor earns its staging bandwidth.
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    # Engine-wire: returns the shared scheduler's per-lane service-unit
+    # shares for summary() (None on a bare EngineStats).
+    service_share_fn: Callable[[], dict] | None = None
     bucket_shapes: set = dataclasses.field(default_factory=set)
     # Per-tenant admission accounting: how often each tenant was refused
     # (admission="reject") or backpressured (admission="block").
@@ -280,8 +290,25 @@ class EngineStats:
         lines.append(admission)
         lines.append(
             f"wfq virtual-time lag: p50={_fmt_num(self.wfq_lag_quantile(0.5))} "
-            f"p95={_fmt_num(self.wfq_lag_quantile(0.95))} rows/weight"
+            f"p95={_fmt_num(self.wfq_lag_quantile(0.95))} units/weight "
+            f"(one engine-wide clock)"
         )
+        if self.service_share_fn is not None:
+            share = self.service_share_fn()
+            if share:
+                lines.append(
+                    "service share: " + " ".join(
+                        f"{lane}={frac:.0%}"
+                        for lane, frac in sorted(share.items())
+                    )
+                )
+        predicted = self.prefetch_hits + self.prefetch_misses
+        if predicted:
+            lines.append(
+                f"predictive prefetch: hits={self.prefetch_hits} "
+                f"misses={self.prefetch_misses} "
+                f"hit_rate={self.prefetch_hits / predicted:.0%}"
+            )
         lines.append(
             f"resilience: degraded_flushes={self.degraded_flushes} "
             f"snapshots={self.snapshots} restores={self.restores}"
@@ -459,8 +486,11 @@ class MoLeDeliveryEngine:
         backend: str | None = None,
         max_flush_microbatches: int = 64,
         injector=None,
+        scheduler=None,
+        decode_step_units: float = 1.0,
+        clock: Callable[[], float] | None = None,
     ):
-        from .queue import RequestQueue, TokenQueue  # keeps queues swappable
+        from .queue import FairScheduler, RequestQueue, TokenQueue
 
         if isinstance(registry, LMSessionRegistry):
             if lm_registry is not None:
@@ -494,11 +524,32 @@ class MoLeDeliveryEngine:
             return rid
 
         self._id_alloc = _alloc_rid
+        # ONE WFQ clock for the whole engine: every lane charges its service
+        # units (rows; decode steps x decode_step_units when a decode lane
+        # shares this scheduler) against the same per-tenant records, so a
+        # tenant's weight is a true engine-wide share — splitting traffic
+        # across vision + tokens + features (+ decode) buys nothing.
+        # Weights resolve through the registries (weight_of), the single
+        # source of truth; per-lane submit weights are not used.
+        self.scheduler = (
+            scheduler if scheduler is not None
+            else FairScheduler(
+                weight_of=self._weight_of, decode_step_units=decode_step_units
+            )
+        )
+        # Injectable clock (seconds): the arrival predictor and prefetch
+        # windows run on it, so tests/benchmarks drive synthetic time.
+        self._clock = clock if clock is not None else time.monotonic
+        self.predictor = ArrivalPredictor()
+        # tenant -> prediction-window deadline (clock seconds): tenants
+        # predictive_prefetch staged and is waiting to score.
+        self._predicted: dict[str, float] = {}
         self.queue = (
             RequestQueue(
                 registry.geom.in_features, max_rows=max_rows,
                 row_buckets=self.row_buckets, group_buckets=self.group_buckets,
-                id_alloc=self._id_alloc,
+                id_alloc=self._id_alloc, scheduler=self.scheduler,
+                service_lane="vision",
             )
             if registry is not None else None
         )
@@ -506,7 +557,7 @@ class MoLeDeliveryEngine:
             TokenQueue(
                 max_rows=max_rows, row_buckets=self.row_buckets,
                 group_buckets=self.group_buckets, seq_buckets=self.seq_buckets,
-                id_alloc=self._id_alloc,
+                id_alloc=self._id_alloc, scheduler=self.scheduler,
             )
             if lm_registry is not None else None
         )
@@ -514,11 +565,13 @@ class MoLeDeliveryEngine:
             RequestQueue(
                 lm_registry.d_in, max_rows=max_rows,
                 row_buckets=self.row_buckets, group_buckets=self.group_buckets,
-                id_alloc=self._id_alloc,
+                id_alloc=self._id_alloc, scheduler=self.scheduler,
+                service_lane="features",
             )
             if lm_registry is not None and lm_registry.has_embed_lane else None
         )
         self.stats = EngineStats()
+        self.stats.service_share_fn = self.scheduler.service_share
         # Crash-safety hooks: the injector (resilience.FailureInjector)
         # raises SimulatedFailure at flush-phase boundaries; the straggler
         # monitor watches per-flush device time and flags degraded flushes
@@ -545,6 +598,22 @@ class MoLeDeliveryEngine:
         """Unscheduled rows across every lane (rows == sequences for tokens)."""
         lanes = (self.queue, self.token_queue, self.embed_queue)
         return sum(q.pending_rows for q in lanes if q is not None)
+
+    def _registry_of(self, tenant_id: str):
+        """The registry holding ``tenant_id`` (vision first, then LM; None
+        when unknown — the front door rejects such requests before here)."""
+        if self.registry is not None and tenant_id in self.registry:
+            return self.registry
+        if self.lm_registry is not None and tenant_id in self.lm_registry:
+            return self.lm_registry
+        return None
+
+    def _weight_of(self, tenant_id: str) -> float:
+        """The scheduler's weight resolver: registry weights are the single
+        source of truth for a tenant's engine-wide share, re-read on every
+        submit so ``set_weight`` on a registry takes effect immediately."""
+        reg = self._registry_of(tenant_id)
+        return reg.weight_of(tenant_id) if reg is not None else 1.0
 
     # -- secrets ------------------------------------------------------------
     def prefetch(self, tenant_ids) -> dict[str, int]:
@@ -578,6 +647,57 @@ class MoLeDeliveryEngine:
         if touched_lm:
             self._refresh_lm_plan()
         return slots
+
+    def predictive_prefetch(self, horizon_ms: float = 50.0,
+                            now: float | None = None) -> list[str]:
+        """Stage evicted tenants the arrival predictor expects within
+        ``horizon_ms`` (ROADMAP carry-over (a)): each front-door submission
+        feeds the per-tenant EWMA/periodicity estimator, and this call —
+        made whenever the caller has slack, e.g. the async flusher between
+        rounds (``prefetch_horizon_ms``) — prefetches the due ones so their
+        host->device secret upload happens *before* the burst instead of
+        inside its first flush.  Predictions are scored on the tenant's next
+        arrival: submitted-while-resident is a hit, window lapsed (or
+        arrived evicted anyway) a miss — ``EngineStats.prefetch_hits`` /
+        ``prefetch_misses`` gate whether the predictor earns its staging
+        bandwidth.  Returns the tenants staged this call.
+        """
+        if now is None:
+            now = self._clock()
+        # Score prediction windows that lapsed without an arrival.
+        for t, deadline in list(self._predicted.items()):
+            if now > deadline:
+                del self._predicted[t]
+                self.stats.prefetch_misses += 1
+        due: list[str] = []
+        for t in self.predictor.due(horizon_ms / 1e3, now):
+            if t in self._predicted:
+                continue        # already staged, window still open
+            reg = self._registry_of(t)
+            if reg is None or reg.is_resident(t):
+                continue        # unknown, or nothing to stage
+            due.append(t)
+        if due:
+            self.prefetch(due)
+            for t in due:
+                iv = self.predictor.interval(t) or 0.0
+                # The window closes one horizon + two intervals out: enough
+                # slack that a slightly-late periodic tick still scores the
+                # prefetch that actually served it.
+                self._predicted[t] = now + horizon_ms / 1e3 + 2 * iv
+        return due
+
+    def _observe_arrival(self, tenant_id: str) -> None:
+        """Feed the arrival predictor and score any open prediction."""
+        now = self._clock()
+        deadline = self._predicted.pop(tenant_id, None)
+        if deadline is not None:
+            reg = self._registry_of(tenant_id)
+            if reg is not None and reg.is_resident(tenant_id) and now <= deadline:
+                self.stats.prefetch_hits += 1
+            else:
+                self.stats.prefetch_misses += 1
+        self.predictor.observe(tenant_id, now)
 
     def _refresh_plan(self) -> _Plan:
         reg = self.registry
@@ -647,21 +767,25 @@ class MoLeDeliveryEngine:
         is counted once however many crashes it survives.
         """
         depth = self.pending_rows
+        if count_stats:
+            # Replays (count_stats=False) are re-deliveries, not arrivals:
+            # feeding them to the predictor would corrupt the inter-arrival
+            # history (and double-score prediction windows) after a crash.
+            self._observe_arrival(req.tenant_id)
+        # No per-submit weight: the shared scheduler resolves each tenant's
+        # engine-wide share through the registries (weight_of) on every
+        # lane() touch.
         if req.lane == "rows":
-            reg, g = self.registry, self.registry.geom
+            g = self.registry.geom
             rid = self.queue.submit(
-                req.tenant_id, req.payload,
-                priority=req.priority, weight=reg.weight_of(req.tenant_id),
-                rid=rid,
+                req.tenant_id, req.payload, priority=req.priority, rid=rid
             )
             self._request_shape[rid] = (req.payload.shape[0], g.beta, g.n, g.n)
             n_rows = req.payload.shape[0]
         elif req.lane == "tokens":
             reg = self.lm_registry
             rid = self.token_queue.submit(
-                req.tenant_id, req.payload,
-                priority=req.priority, weight=reg.weight_of(req.tenant_id),
-                rid=rid,
+                req.tenant_id, req.payload, priority=req.priority, rid=rid
             )
             b, L = req.payload.shape
             if req.deliver == "embed":
@@ -675,9 +799,7 @@ class MoLeDeliveryEngine:
             reg = self.lm_registry
             rows = req.payload.reshape(-1, reg.d_in)
             rid = self.embed_queue.submit(
-                req.tenant_id, rows,
-                priority=req.priority, weight=reg.weight_of(req.tenant_id),
-                rid=rid,
+                req.tenant_id, rows, priority=req.priority, rid=rid
             )
             self._request_shape[rid] = (rows.shape[0], reg.d_out)
             self._embed_shape[rid] = req.payload.shape[:-1] + (reg.d_out,)
@@ -797,10 +919,10 @@ class MoLeDeliveryEngine:
                      self._refresh_lm_plan)
                 )
         clamped = 0
-        for _, queue, _, _ in lanes:
-            # WFQ lag sampled pre-coalesce: the spread the scheduler is about
-            # to work off.  (Post-coalesce everything served is near-level.)
-            self.stats.record_wfq_lag(queue.wfq_lag())
+        # WFQ lag sampled pre-coalesce: the spread the scheduler is about
+        # to work off.  (Post-coalesce everything served is near-level.)
+        # One sample per flush — the clock is engine-wide, not per-lane.
+        self.stats.record_wfq_lag(self.scheduler.wfq_lag())
         # Round-robin the microbatch cap across the live lanes: one lane's
         # saturating backlog must not consume the whole round and starve the
         # others' deadlines (the async flusher's double-buffering refills
@@ -1072,18 +1194,24 @@ class MoLeDeliveryEngine:
         from .queue import RequestQueue, TokenQueue
 
         if self.queue is not None:
+            # release() hands the dead queue's backlog references back to
+            # the shared scheduler — otherwise the engine-wide clock would
+            # forever count the abandoned backlogs as live and stall.
+            self.queue.release()
             self.queue = RequestQueue(
                 self.queue.feature_dim, max_rows=self.max_rows,
                 row_buckets=self.queue.row_buckets,
                 group_buckets=self.queue.group_buckets,
                 dtype=self.queue.dtype, id_alloc=self._id_alloc,
+                scheduler=self.scheduler, service_lane="vision",
             )
         if self.token_queue is not None:
             tq = self.token_queue
+            tq.release()
             self.token_queue = TokenQueue(
                 max_rows=self.max_rows, row_buckets=tq.row_buckets,
                 group_buckets=tq.group_buckets, seq_buckets=tq.seq_buckets,
-                id_alloc=self._id_alloc,
+                id_alloc=self._id_alloc, scheduler=self.scheduler,
             )
             # Carry the ensured group buckets over: the LM plan is still
             # current after a reset, so _refresh_lm_plan would not re-ensure
@@ -1092,11 +1220,13 @@ class MoLeDeliveryEngine:
             for g in sorted(tq._ensured_groups):
                 self.token_queue.ensure_group_bucket(g)
         if self.embed_queue is not None:
+            self.embed_queue.release()
             self.embed_queue = RequestQueue(
                 self.embed_queue.feature_dim, max_rows=self.max_rows,
                 row_buckets=self.embed_queue.row_buckets,
                 group_buckets=self.embed_queue.group_buckets,
                 dtype=self.embed_queue.dtype, id_alloc=self._id_alloc,
+                scheduler=self.scheduler, service_lane="features",
             )
 
     # -- crash safety: snapshot / restore ------------------------------------
@@ -1117,6 +1247,12 @@ class MoLeDeliveryEngine:
         meta: dict = {
             "next_rid": self._next_rid,
             "embed_tables_needed": self._embed_tables_needed,
+            # The engine-wide fairness state (virtual clock + per-tenant
+            # vtimes/weights + service counters): restoring it means a
+            # tenant's banked debt survives a crash — without it every
+            # tenant would re-enter at vtime 0 and heavy pre-crash users
+            # would double-dip.
+            "scheduler": self.scheduler.snapshot_state(),
             "registries": {},
             "requests": [],
         }
@@ -1186,6 +1322,13 @@ class MoLeDeliveryEngine:
         self._lm_plan = None
         self._embed_tables_needed = bool(meta["embed_tables_needed"])
         self.reset_pending()
+        # After reset_pending the queues are drained (no backlog refs), so
+        # the scheduler state can be swapped wholesale; the replay below
+        # re-enters each pending tenant's backlog through submit, and since
+        # every restored vtime satisfies vtime >= vnow, the idle re-entry
+        # max() is a no-op — fairness positions round-trip exactly.
+        if meta.get("scheduler") is not None:
+            self.scheduler.restore_state(meta["scheduler"])
         pending: list[int] = []
         for desc in meta["requests"]:
             rid = int(desc["rid"])

@@ -1,0 +1,480 @@
+"""The engine-wide WFQ clock (repro.runtime.queue.FairScheduler) and the
+arrival-prediction prefetch (repro.runtime.prefetch):
+
+  * one shared virtual clock across RequestQueue / TokenQueue /
+    FairAdmissionQueue — a tenant splitting traffic over lanes no longer
+    inflates its share (the cross-lane weight-inflation bug);
+  * debt-carrying lane pruning on the admission queue (a drained tenant's
+    advanced vtime survives a submit-after-take, fixing the old immediate
+    lane deletion);
+  * front-door rejections: empty payloads and over-largest-seq-bucket
+    requests fail at ``api.normalize`` with errors naming the request;
+  * unified scheduler state snapshot/restore through the engine and the
+    decode lane (PR 7 crash-safety preserved);
+  * zero retraces of the jitted delivery steps under mixed-lane churn;
+  * predictive prefetch hit/miss accounting on an injected clock.
+
+Hypothesis sweeps run when hypothesis is installed; the parametrized cases
+keep a deterministic slice in the tier-1 gate (``_hypothesis_compat``)."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import ConvGeometry, LMSessionRegistry, SessionRegistry
+from repro.runtime import (
+    ArrivalPredictor,
+    DeliveryRequest,
+    FairAdmissionQueue,
+    FairScheduler,
+    MoLeDeliveryEngine,
+    RequestQueue,
+    TokenQueue,
+    delivery_trace_count,
+)
+
+GEOM = ConvGeometry(alpha=2, beta=4, m=6, p=3)
+VOCAB, DMODEL = 67, 4
+F_IN = GEOM.alpha * GEOM.p * GEOM.p
+
+
+def _vision_registry(rng, weights, capacity=None):
+    reg = SessionRegistry(GEOM, kappa=2, capacity=capacity)
+    fan_in = GEOM.alpha * GEOM.p * GEOM.p
+    for name, w in weights.items():
+        k = rng.standard_normal(
+            (GEOM.alpha, GEOM.beta, GEOM.p, GEOM.p)
+        ).astype(np.float32) / np.sqrt(fan_in)
+        reg.register(name, k, weight=w)
+    return reg
+
+
+def _lm_registry(rng, weights, capacity=None):
+    reg = LMSessionRegistry(VOCAB, DMODEL, capacity=capacity)
+    for i, (name, w) in enumerate(weights.items()):
+        E = rng.standard_normal((VOCAB, DMODEL)).astype(np.float32)
+        reg.register(name, E, seed=100 + i, weight=w)
+    return reg
+
+
+def _rows(rng, b=8):
+    return rng.standard_normal((b, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+        np.float32
+    )
+
+
+def _toks(rng, b=8, L=8):
+    return rng.integers(0, VOCAB, (b, L))
+
+
+# ---------------------------------------------------------------------------
+# FairScheduler core: shared records, one clock
+# ---------------------------------------------------------------------------
+
+def test_shared_scheduler_keeps_one_record_per_tenant():
+    """Two queues on one scheduler: a tenant backlogged in both holds one
+    vtime record (refcounted), and service on either lane charges it."""
+    s = FairScheduler()
+    q1 = RequestQueue(4, max_rows=4, row_buckets=(1, 2, 4),
+                      group_buckets=(1, 2), scheduler=s, service_lane="vision")
+    tq = TokenQueue(max_rows=4, row_buckets=(1, 2, 4), group_buckets=(1, 2),
+                    seq_buckets=(8,), scheduler=s)
+    q1.submit("x", np.ones((4, 4), np.float32))
+    tq.submit("x", np.ones((4, 8), np.int32))
+    assert s._tenants["x"].backlogged == 2
+    q1.coalesce({"x": 0})
+    assert s._tenants["x"].backlogged == 1      # still backlogged on tokens
+    assert s._tenants["x"].vtime == 4.0         # 4 rows / weight 1
+    tq.coalesce({"x": 0})
+    assert s._tenants["x"].vtime == 8.0         # tokens charged the SAME record
+    assert dict(s.service_by_lane) == {"vision": 4, "tokens": 4}
+    assert dict(s.service_by_tenant) == {"x": 8}
+    assert s.service_share() == {"vision": 0.5, "tokens": 0.5}
+
+
+def test_clock_advances_to_engine_wide_minimum():
+    """vnow tracks the minimum backlogged vtime over ALL lanes sharing the
+    scheduler — an idle tenant waking on one lane re-enters at the true
+    engine-wide frontier, not the lane-local one."""
+    s = FairScheduler()
+    q1 = RequestQueue(4, max_rows=4, row_buckets=(1, 2, 4),
+                      group_buckets=(1, 2), scheduler=s, service_lane="vision")
+    q2 = RequestQueue(4, max_rows=4, row_buckets=(1, 2, 4),
+                      group_buckets=(1, 2), scheduler=s, service_lane="features")
+    q1.submit("a", np.ones((8, 4), np.float32))
+    q2.submit("b", np.ones((4, 4), np.float32))
+    q1.coalesce({"a": 0, "b": 1}, max_groups=2)   # serves both a chunks
+    # b (on the OTHER queue) is still backlogged at vtime 0, so the shared
+    # clock must not have run ahead of it.
+    assert s.vnow == 0.0
+    q2.coalesce({"a": 0, "b": 1})
+    assert s._tenants["b"].vtime == 4.0
+    # Everything drained; a new tenant enters at the global clock.
+    q1.submit("c", np.ones((2, 4), np.float32))
+    assert s._tenants["c"].vtime == s.vnow
+
+
+def test_set_weight_validates_and_persists_across_prune():
+    s = FairScheduler()
+    with pytest.raises(ValueError, match="weight must be positive"):
+        s.set_weight("t", 0.0)
+    with pytest.raises(ValueError, match="decode_step_units"):
+        FairScheduler(decode_step_units=0.0)
+
+
+# ---------------------------------------------------------------------------
+# the cross-lane weight-inflation bug (tentpole regression)
+# ---------------------------------------------------------------------------
+
+def _cross_lane_goodput_ratio(seed, rounds=8, shuffle=False):
+    """The exact scenario the per-lane clocks got wrong: 'heavy' (weight 2)
+    splits a saturating backlog across the vision AND token lanes while
+    'light' (weight 1) rides vision only.  Returns (ratio, trace_delta):
+    heavy's engine-wide service units over light's, and the number of new
+    jit traces after the warm-up round (must be 0 — only chunk *selection*
+    changed, never shapes).
+
+    Before the shared clock, heavy's two independent lanes each granted a
+    full 2x share => engine-wide ~4-5x.  With one clock the ratio converges
+    to ~2x (weights are engine-wide shares).
+    """
+    rng = np.random.default_rng(seed)
+    vreg = _vision_registry(rng, {"heavy": 2.0, "light": 1.0}, capacity=2)
+    lreg = _lm_registry(rng, {"heavy": 2.0}, capacity=1)
+    eng = MoLeDeliveryEngine(
+        vreg, lm_registry=lreg, max_rows=8, row_buckets=(1, 2, 4, 8),
+        group_buckets=(1, 2), seq_buckets=(8,), max_flush_microbatches=2,
+    )
+    subs = []
+    for _ in range(12):
+        subs.append(("heavy", "rows"))
+        subs.append(("heavy", "tokens"))
+        subs.append(("light", "rows"))
+        subs.append(("light", "rows"))
+    if shuffle:
+        rng.shuffle(subs)
+    for tenant, lane in subs:
+        if lane == "rows":
+            eng.submit(DeliveryRequest(tenant, _rows(rng)))
+        else:
+            eng.submit(DeliveryRequest(tenant, _toks(rng), lane="tokens"))
+
+    def round_():
+        work = eng.begin_flush()
+        if work is None:
+            return False
+        eng.execute_flush(work)
+        eng.publish_flush(work)
+        return True
+
+    round_()                       # warm-up round compiles the (G, B) shapes
+    n0 = delivery_trace_count()
+    for _ in range(rounds - 1):
+        if not round_():
+            break
+    served = eng.scheduler.service_by_tenant
+    ratio = served["heavy"] / served["light"]
+    return ratio, delivery_trace_count() - n0
+
+
+@pytest.mark.parametrize("seed,shuffle", [(0, False), (1, True)])
+def test_cross_lane_weight2_tenant_gets_2x_engine_wide(seed, shuffle):
+    ratio, trace_delta = _cross_lane_goodput_ratio(seed, shuffle=shuffle)
+    assert 1.6 <= ratio <= 2.6, (
+        f"weight-2 tenant splitting across lanes got {ratio:.2f}x a "
+        f"single-lane weight-1 tenant (want ~2x: per-lane clock inflation "
+        f"is back)"
+    )
+    assert trace_delta == 0, "cross-lane WFQ churn retraced a delivery step"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_cross_lane_goodput_property(seed):
+    """Property sweep: the ~2x engine-wide convergence holds for random
+    submission interleavings (wider bounds — interleaving flips vtime
+    tie-breaks by a chunk or two over the 8-round window)."""
+    ratio, trace_delta = _cross_lane_goodput_ratio(seed, shuffle=True)
+    assert 1.4 <= ratio <= 2.8, f"engine-wide ratio {ratio:.2f} not ~2x"
+    assert trace_delta == 0
+
+
+# ---------------------------------------------------------------------------
+# admission queue: debt-carrying prune (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_carries_debt_across_drain():
+    """submit -> take -> immediate resubmit must NOT reset the tenant's
+    virtual time (the old FairAdmissionQueue deleted an emptied lane on
+    take, so a drain-and-resubmit tenant re-entered at vnow and under-paid
+    vs the debt-carrying RequestQueue rule)."""
+    q = FairAdmissionQueue()
+    q.submit("a", np.zeros(4, np.int32), 8)
+    for _ in range(4):
+        q.submit("b", np.zeros(4, np.int32), 8)
+    assert q.take().tenant_id == "a"
+    # a drained but its 8-unit debt survives (vtime 8 > vnow 0)...
+    assert q._lanes["a"].vtime == 8.0
+    q.submit("a", np.zeros(4, np.int32), 8)
+    # ...and re-entry keeps it (old bug: fresh lane at vnow=0).
+    assert q._lanes["a"].vtime == 8.0
+    # So b catches up its 8 units before a is served again.
+    assert [q.take().tenant_id for _ in range(3)] == ["b", "b", "a"]
+
+
+def test_admission_queue_charges_decode_step_exchange_rate():
+    """max_new_tokens x decode_step_units is the admission charge: at rate
+    0.5, a 16-step sequence costs the clock what 8 morph rows would."""
+    s = FairScheduler(decode_step_units=0.5)
+    q = FairAdmissionQueue(s)
+    q.submit("a", np.zeros(2, np.int32), 16)
+    q.take()
+    assert s._tenants["a"].vtime == 8.0
+    assert s.service_by_lane["decode"] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# front-door rejections (satellites: empty payloads, over-bucket sequences)
+# ---------------------------------------------------------------------------
+
+def test_empty_payload_rejected_at_front_door(rng):
+    vreg = _vision_registry(rng, {"t0": 1.0})
+    lreg = _lm_registry(rng, {"t0": 1.0})
+    lreg2 = LMSessionRegistry(VOCAB, DMODEL, d_in=6, d_out=4)
+    lreg2.register("t0", rng.standard_normal((VOCAB, DMODEL)).astype(np.float32),
+                   rng.standard_normal((6, 4)).astype(np.float32), seed=7)
+    eng = MoLeDeliveryEngine(vreg, lm_registry=lreg)
+    feng = MoLeDeliveryEngine(lm_registry=lreg2)
+    with pytest.raises(ValueError, match="empty payload for tenant 't0'"):
+        eng.submit(DeliveryRequest("t0", np.zeros((0, F_IN), np.float32)))
+    with pytest.raises(ValueError, match="empty payload for tenant 't0'"):
+        eng.submit(DeliveryRequest(
+            "t0", np.zeros((0, GEOM.alpha, GEOM.m, GEOM.m), np.float32)
+        ))
+    with pytest.raises(ValueError, match="empty payload"):
+        eng.submit(DeliveryRequest(
+            "t0", np.zeros((0, 5), np.int64), lane="tokens"
+        ))
+    with pytest.raises(ValueError, match="empty payload"):
+        eng.submit(DeliveryRequest(
+            "t0", np.zeros((2, 0), np.int64), lane="tokens"
+        ))
+    with pytest.raises(ValueError, match="empty payload"):
+        feng.submit(DeliveryRequest(
+            "t0", np.zeros((0, 6), np.float32), lane="features"
+        ))
+    assert eng.stats.requests == 0 and eng.pending_rows == 0
+
+
+def test_zero_row_submission_rejected_by_queue():
+    """Stand-alone queue users hit the same guard: a (0, F) submission
+    would otherwise coalesce into a phantom all-padding 'real' group."""
+    q = RequestQueue(4, max_rows=4, row_buckets=(1, 2, 4), group_buckets=(1,))
+    with pytest.raises(ValueError, match="empty submission for tenant 'a'"):
+        q.submit("a", np.zeros((0, 4), np.float32))
+    assert len(q) == 0 and q.pending_rows == 0
+
+
+def test_over_bucket_sequence_error_names_request(rng):
+    lreg = _lm_registry(rng, {"t0": 1.0})
+    eng = MoLeDeliveryEngine(lm_registry=lreg, seq_buckets=(8, 16))
+    with pytest.raises(ValueError) as ei:
+        eng.submit(DeliveryRequest("t0", _toks(rng, b=2, L=17), lane="tokens"))
+    msg = str(ei.value)
+    assert "'t0'" in msg and "17" in msg and "16" in msg
+    assert "split the request" in msg and "seq_buckets" in msg
+
+
+def test_token_queue_over_bucket_error_is_not_bucketize_internals():
+    q = TokenQueue(seq_buckets=(8,))
+    with pytest.raises(ValueError, match="tenant 'a'.*split the request"):
+        q.submit("a", np.zeros((1, 9), np.int64))
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore of the unified scheduler state
+# ---------------------------------------------------------------------------
+
+def test_engine_snapshot_restores_scheduler_state_exactly(rng):
+    """Fairness positions survive a crash: after restore the global clock,
+    per-tenant vtimes/weights, and service counters are bit-equal, so a
+    heavy pre-crash consumer cannot double-dip by crashing the engine."""
+    vreg = _vision_registry(rng, {"heavy": 2.0, "light": 1.0})
+    eng = MoLeDeliveryEngine(vreg, max_rows=8, row_buckets=(1, 2, 4, 8),
+                             group_buckets=(1, 2))
+    for _ in range(3):
+        eng.submit(DeliveryRequest("heavy", _rows(rng)))
+        eng.submit(DeliveryRequest("light", _rows(rng)))
+    eng.flush()                                   # advance the clock
+    p1 = eng.submit(DeliveryRequest("heavy", _rows(rng, 4)))   # pending
+    state = eng.scheduler.snapshot_state()
+    assert state["vnow"] > 0 and state["tenants"]["heavy"]["weight"] == 2.0
+    snap = eng.snapshot()
+
+    vreg2 = _vision_registry(
+        np.random.default_rng(1), {"heavy": 2.0, "light": 1.0}
+    )
+    eng2 = MoLeDeliveryEngine(vreg2, max_rows=8, row_buckets=(1, 2, 4, 8),
+                              group_buckets=(1, 2))
+    assert eng2.restore(snap) == [p1]
+    # Replaying the pending submit re-entered heavy's backlog WITHOUT
+    # moving its restored vtime (vtime >= vnow makes re-entry a no-op).
+    assert eng2.scheduler.snapshot_state() == state
+    eng2.flush()
+    eng2.take(p1)
+
+
+def test_decode_lane_restore_keeps_scheduler_positions():
+    """FairAdmissionQueue positions round-trip through the decode snapshot
+    meta: a drained-but-indebted tenant stays indebted after restore."""
+    q = FairAdmissionQueue()
+    q.submit("a", np.zeros(4, np.int32), 8)
+    q.submit("b", np.zeros(4, np.int32), 8)
+    q.take()                                      # a pays 8 units
+    state = q.scheduler.snapshot_state()
+    q2 = FairAdmissionQueue()
+    q2.scheduler.restore_state(state)
+    q2.submit("a", np.zeros(4, np.int32), 8)
+    q2.submit("b", np.zeros(4, np.int32), 8)
+    assert q2._lanes["a"].vtime == 8.0            # debt survived
+    assert q2.take().tenant_id == "b"             # so b is served first
+
+
+def test_release_returns_backlog_refs_to_shared_scheduler(rng):
+    """reset_pending on an engine with queued traffic must hand every
+    backlog reference back — a leaked ref would hold the engine-wide clock
+    at the dead queue's vtime forever."""
+    vreg = _vision_registry(rng, {"t0": 1.0, "t1": 1.0})
+    lreg = _lm_registry(rng, {"t0": 1.0})
+    eng = MoLeDeliveryEngine(vreg, lm_registry=lreg, max_rows=8,
+                             row_buckets=(1, 2, 4, 8), group_buckets=(1, 2),
+                             seq_buckets=(8,))
+    eng.submit(DeliveryRequest("t0", _rows(rng)))
+    eng.submit(DeliveryRequest("t0", _toks(rng), lane="tokens"))
+    eng.submit(DeliveryRequest("t1", _rows(rng)))
+    assert eng.scheduler._tenants["t0"].backlogged == 2
+    eng.reset_pending()
+    assert all(r.backlogged == 0 for r in eng.scheduler._tenants.values())
+    assert eng.scheduler.min_backlogged_vtime() is None
+
+
+# ---------------------------------------------------------------------------
+# zero retraces under mixed-lane churn
+# ---------------------------------------------------------------------------
+
+def test_zero_retrace_under_mixed_lane_churn(rng):
+    """Tenant churn ACROSS lanes on the shared scheduler: after the warm-up
+    rounds compile each lane's (G, B) bucket, rounds that rotate which
+    tenants ride which lane add zero jit traces — the unified clock changes
+    only which chunks are picked, never the shapes."""
+    vreg = _vision_registry(
+        rng, {f"v{i}": 1.0 + (i % 2) for i in range(4)}, capacity=2
+    )
+    lreg = _lm_registry(
+        rng, {f"v{i}": 1.0 for i in range(4)}, capacity=2
+    )
+    eng = MoLeDeliveryEngine(
+        vreg, lm_registry=lreg, max_rows=8, row_buckets=(1, 2, 4, 8),
+        group_buckets=(1, 2), seq_buckets=(8,),
+    )
+
+    def burst(i):
+        a, b = f"v{i % 4}", f"v{(i + 1) % 4}"
+        eng.submit(DeliveryRequest(a, _rows(rng)))
+        eng.submit(DeliveryRequest(b, _rows(rng)))
+        eng.submit(DeliveryRequest(a, _toks(rng), lane="tokens"))
+        eng.submit(DeliveryRequest(b, _toks(rng), lane="tokens"))
+        eng.flush()
+
+    burst(0)
+    burst(1)                       # warm both rotation phases' shapes
+    n0 = delivery_trace_count()
+    for i in range(2, 8):          # churn: every tenant pair, both lanes
+        burst(i)
+    assert delivery_trace_count() == n0, (
+        "mixed-lane tenant churn retraced a delivery step"
+    )
+
+
+# ---------------------------------------------------------------------------
+# predictive prefetch (ROADMAP carry-over (a))
+# ---------------------------------------------------------------------------
+
+def test_arrival_predictor_periodicity_and_ewma():
+    p = ArrivalPredictor()
+    assert p.interval("t") is None
+    p.observe("t", 0.0)
+    assert p.interval("t") is None                # one arrival: no gap yet
+    for i in range(1, 6):
+        p.observe("t", 10.0 * i)
+    assert p.interval("t") == pytest.approx(10.0)  # periodic: median gap
+    assert p.predicted_next("t") == pytest.approx(60.0)
+    assert p.due(5.0, 56.0) == ["t"]
+    assert p.due(5.0, 40.0) == []                 # not due yet
+    assert p.due(5.0, 90.0) == []                 # > one interval overdue
+    # A bursty tenant (high gap variance) falls back to the EWMA.
+    for i, t in enumerate([0.0, 1.0, 30.0, 31.0, 70.0, 71.0]):
+        p.observe("u", t)
+    iv = p.interval("u")
+    assert iv is not None and iv != pytest.approx(np.median([1, 29, 1, 39, 1]))
+
+
+def test_arrival_predictor_bounds_tenant_map():
+    p = ArrivalPredictor(max_tenants=3)
+    for i in range(5):
+        p.observe(f"t{i}", float(i))
+    assert len(p._tenants) == 3 and "t0" not in p and "t4" in p
+
+
+def test_predictive_prefetch_scores_hits_and_misses(rng):
+    """Injected clock: a periodic tenant is staged before its tick (hit =
+    next submit finds it resident); a staged window that lapses without an
+    arrival scores a miss."""
+    vreg = _vision_registry(
+        rng, {"t0": 1.0, "t1": 1.0, "t2": 1.0}, capacity=2
+    )
+    now = [0.0]
+    eng = MoLeDeliveryEngine(vreg, max_rows=8, row_buckets=(1, 2, 4, 8),
+                             group_buckets=(1, 2), clock=lambda: now[0])
+    # t0 ticks every 10s; flush each tick so it holds a slot...
+    for tick in range(4):
+        now[0] = 10.0 * tick
+        eng.submit(DeliveryRequest("t0", _rows(rng, 2)))
+        eng.flush()
+    # ...until other tenants evict it (capacity 2).
+    eng.prefetch(["t1", "t2"])
+    assert not vreg.is_resident("t0")
+
+    now[0] = 38.0                  # next t0 tick predicted at t=40
+    staged = eng.predictive_prefetch(horizon_ms=5_000.0)
+    assert staged == ["t0"] and vreg.is_resident("t0")
+    assert eng.predictive_prefetch(horizon_ms=5_000.0) == []   # idempotent
+    now[0] = 40.0
+    eng.submit(DeliveryRequest("t0", _rows(rng, 2)))           # the burst
+    eng.flush()
+    assert (eng.stats.prefetch_hits, eng.stats.prefetch_misses) == (1, 0)
+
+    # Stage again, then let the window lapse: a miss.
+    eng.prefetch(["t1", "t2"])
+    now[0] = 48.0
+    assert eng.predictive_prefetch(horizon_ms=5_000.0) == ["t0"]
+    now[0] = 200.0
+    assert eng.predictive_prefetch(horizon_ms=5_000.0) == []
+    assert (eng.stats.prefetch_hits, eng.stats.prefetch_misses) == (1, 1)
+    summary = eng.stats.summary()
+    assert "predictive prefetch" in summary and "hit_rate=50%" in summary
+
+
+def test_crash_replay_does_not_feed_predictor(rng):
+    """Restore replays requests with count_stats=False: they are
+    re-deliveries, not arrivals — the inter-arrival history must not see
+    them (a crash would otherwise corrupt every tenant's period)."""
+    vreg = _vision_registry(rng, {"t0": 1.0})
+    now = [0.0]
+    eng = MoLeDeliveryEngine(vreg, clock=lambda: now[0])
+    now[0] = 5.0
+    eng.submit(DeliveryRequest("t0", _rows(rng, 2)))
+    snap = eng.snapshot()
+    gaps_before = list(eng.predictor._tenants["t0"].gaps)
+    now[0] = 123.0
+    eng.restore(snap)
+    assert list(eng.predictor._tenants["t0"].gaps) == gaps_before
