@@ -817,6 +817,93 @@ def _recovery_point(
     )
 
 
+def _served_chaos_point(
+    chaos_requests: int = 24, overload_requests: int = 24
+) -> None:
+    """End-to-end front-door trajectory point: spawn the real ``--mode serve``
+    subprocess with network chaos armed on both sides plus one injected
+    flusher crash, then drive it with the retrying client fleet.
+
+    Two runs share one server (amortizing jax startup):
+
+    * ``served_chaos`` — conn drops, truncated frames, stalled reads, and a
+      one-shot device failure mid-run; the exactly-once guarantee
+      (:meth:`FleetReport.assert_exactly_once`) is the correctness gate and
+      the emitted latency is the ok-p50 as the client observed it.
+    * ``served_overload`` — a single burst far above ``--max-pending-rows``;
+      the gate is that the server sheds with typed OVERLOADED rejections
+      while the p99 of *accepted* requests stays bounded (no collapse).
+    """
+    import asyncio
+
+    from repro.launch.client import (
+        FleetConfig, run_fleet, spawn_server, stop_server,
+    )
+    from repro.runtime.resilience import FailureInjector
+
+    proc, port = spawn_server([
+        "--channels", "2", "--out-channels", "4", "--image-size", "6",
+        "--kappa", "2", "--tenants", "3", "--warm-batch", "4",
+        "--max-pending-rows", "48", "--max-delay-ms", "5",
+        "--chaos", "--chaos-rate", "0.1", "--chaos-seed", "7",
+        "--inject-failure", "device",
+    ])
+    try:
+        chaos = FailureInjector(
+            network_phases={"write", "read", "stall"},
+            network_rate=0.1, stall_ms=50.0, seed=11,
+        )
+        t0 = time.perf_counter()
+        rep = asyncio.run(run_fleet(FleetConfig(
+            port=port, requests=chaos_requests, clients=4, tenants=3,
+            batch=2, channels=2, image_size=6, trace="uniform:300",
+            timeout_ms=30000.0, attempt_timeout_ms=1500.0, max_attempts=8,
+            seed=3, fleet_id="bench-chaos", chaos=chaos,
+        )))
+        dt = time.perf_counter() - t0
+        rep.assert_exactly_once()
+        ok = rep.counts().get("ok", 0)
+        assert ok >= chaos_requests // 2, (
+            f"chaos fleet: only {ok}/{chaos_requests} ok — the retry "
+            f"protocol is not riding out the injected faults"
+        )
+        emit(
+            f"served_chaos/n{chaos_requests}_r0.1/fleet",
+            rep.quantile_ms(0.50) * 1e3,
+            f"{chaos_requests / dt:.1f} req/s ok={ok}/{chaos_requests} "
+            f"hedges={rep.hedges} drops={rep.conn_drops} exactly_once",
+        )
+
+        rep2 = asyncio.run(run_fleet(FleetConfig(
+            port=port, requests=overload_requests, clients=8, tenants=3,
+            batch=4, channels=2, image_size=6,
+            trace=f"burst:{overload_requests}@1",
+            # The server still has --chaos armed: conn drops need retry
+            # headroom and lost responses need a quick hedge trigger, or
+            # accepted-request latency is dominated by the wait.  A shed
+            # still resolves on the first OVERLOADED frame regardless.
+            timeout_ms=30000.0, attempt_timeout_ms=2000.0, max_attempts=4,
+            seed=5, fleet_id="bench-over",
+        )))
+        rep2.assert_exactly_once()
+        shed = rep2.counts().get("rejected:OVERLOADED", 0)
+        ok2 = rep2.counts().get("ok", 0)
+        assert shed > 0, "overload burst produced no typed OVERLOADED sheds"
+        p99 = rep2.quantile_ms(0.99)
+        assert ok2 == 0 or p99 < 15000.0, (
+            f"accepted-request p99 {p99:.0f}ms under overload — shedding "
+            f"is not bounding the queue"
+        )
+        emit(
+            f"served_overload/n{overload_requests}_cap48/fleet",
+            (p99 if ok2 else 0.0) * 1e3,
+            f"ok={ok2} shed={shed} typed_rejections p99_bounded",
+        )
+    finally:
+        rc = stop_server(proc)
+        assert rc == 0, f"server exited {rc} after SIGTERM (drain lost rids?)"
+
+
 def run() -> None:
     for batch in (8, 64):
         for kappa in (1, 4):
@@ -835,6 +922,7 @@ def run() -> None:
                 _token_sweep_point(batch, seq, tenants)
     _decode_sweep_point(tenants=16, gen=16)
     _recovery_point(backlog=32, tenants=4)
+    _served_chaos_point()
     for n in (16, 64, 256):
         _latency_point(n)
 
@@ -863,6 +951,7 @@ def run_smoke() -> None:
         tenants=4, gen=4, prompt_len=8, min_speedup=None, iters=1
     )
     _recovery_point(backlog=8, tenants=2, iters=2)
+    _served_chaos_point(chaos_requests=12, overload_requests=16)
     _latency_point(16)
 
 

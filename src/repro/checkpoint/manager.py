@@ -45,6 +45,11 @@ class CheckpointManager:
     # ---------------------------------------------------------------- save
     def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
         self.wait()
+        # Sweep stale .tmp dirs on every save, not only at construction: a
+        # long-lived server that crashes mid-save (or has its writer killed)
+        # otherwise accumulates them forever.  Safe here — wait() above
+        # joined any in-flight writer, so no live .tmp exists.
+        self._gc_tmp()
         # fetch to host synchronously (cheap relative to serialization)
         host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
         paths, _, _ = _flatten_with_paths(tree)

@@ -1,6 +1,6 @@
 """Serving driver: MoLe-secured delivery and LM serving, one delivery plane.
 
-Two modes, both engine-backed:
+Three modes, all engine-backed:
 
 ``--mode delivery`` (default) — the batched multi-tenant delivery engine
 (paper's training/inference data-delivery stage): many tenants register
@@ -23,7 +23,19 @@ sampled tokens through the tenant's session.
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch deepseek_7b \
         --smoke --requests 8 --prompt-len 32 --gen 16 --mole token
 
-``--async`` works in **both** modes: traffic goes through the async front
+``--mode serve`` — the **network front door** (``repro.launch.server``):
+the async delivery engine behind a real TCP wire protocol
+(``repro.runtime.wire``), with load shedding, deadline propagation,
+exactly-once retry semantics, graceful drain on SIGTERM, and optional
+network chaos.  Drive it with the load-generating client fleet
+(``repro.launch.client``):
+
+    PYTHONPATH=src python -m repro.launch.serve --mode serve --port 0 \
+        --tenants 4 --kappa 2 --snapshot-dir /tmp/snap --stats
+    PYTHONPATH=src python -m repro.launch.client --spawn-server --chaos \
+        --requests 64 --report fleet-report.json
+
+``--async`` works in the two **local** modes: traffic goes through the async front
 door (``repro.runtime.async_engine``) — a background flusher with a
 ``--max-delay-ms`` latency SLO and per-tenant admission control
 (``--max-inflight-rows``, ``--admission block|reject``); additionally
@@ -415,48 +427,70 @@ def run_lm(args) -> np.ndarray:
     return final
 
 
-# Mode-specific flags: CLI spelling -> (argparse dest, default).  Giving one
-# of these with the other mode is an error — silently dropping flags hid
-# real misconfigurations (the old --mode lm ignored --async entirely).
-_DELIVERY_ONLY = {
-    "--batch": ("batch", 1),
-    "--kappa": ("kappa", 1),
-    "--channels": ("channels", 3),
-    "--out-channels": ("out_channels", 16),
-    "--image-size": ("image_size", 16),
+# Mode gating: CLI spelling -> (argparse dest, default, modes that accept
+# it).  Giving a flag outside its modes is an error, not a silent drop —
+# silently ignored flags hid real misconfigurations (the old --mode lm
+# ignored --async entirely).
+_MODES = ("delivery", "lm", "serve")
+_FLAGS = {
+    # vision geometry: the batched delivery lane (local run or served)
+    "--batch": ("batch", 1, ("delivery",)),
+    "--kappa": ("kappa", 1, ("delivery", "serve")),
+    "--channels": ("channels", 3, ("delivery", "serve")),
+    "--out-channels": ("out_channels", 16, ("delivery", "serve")),
+    "--image-size": ("image_size", 16, ("delivery", "serve")),
+    # lm-only
+    "--arch": ("arch", None, ("lm",)),
+    "--smoke": ("smoke", False, ("lm",)),
+    "--prompt-len": ("prompt_len", 32, ("lm",)),
+    "--gen": ("gen", 16, ("lm",)),
+    "--mole": ("mole", "token", ("lm",)),
+    # delivery engine / async front door (under --mode lm --mole off no
+    # engine runs at all, so these error there too — checked separately)
+    "--tenants": ("tenants", 4, _MODES),
+    "--backend": ("backend", None, _MODES),
+    "--async": ("use_async", False, ("delivery", "lm")),
+    "--max-delay-ms": ("max_delay_ms", 5.0, _MODES),
+    "--max-inflight-rows": ("max_inflight_rows", 4096, _MODES),
+    "--admission": ("admission", "block", ("delivery", "lm")),
+    "--capacity": ("capacity", None, _MODES),
+    "--stats": ("stats", False, _MODES),
+    "--weights": ("weights", "1", _MODES),
+    "--priority": ("priority", "0", ("delivery", "lm")),
+    "--deadline-ms": ("deadline_ms", None, ("delivery", "lm")),
+    "--snapshot-dir": ("snapshot_dir", None, _MODES),
+    "--inject-failure": ("inject_failure", None, _MODES),
+    "--prefetch-horizon-ms": ("prefetch_horizon_ms", None, _MODES),
+    # serve-only: the network front door (launch/server.py).  serve is
+    # always async (--async errors), always admission=reject (--admission
+    # errors: shedding must be a typed frame, not submitter backpressure),
+    # and per-request priority/deadline arrive on the wire (--priority /
+    # --deadline-ms error).
+    "--host": ("host", "127.0.0.1", ("serve",)),
+    "--port": ("port", 0, ("serve",)),
+    "--max-pending-rows": ("max_pending_rows", 4096, ("serve",)),
+    "--read-timeout-ms": ("read_timeout_ms", 30000.0, ("serve",)),
+    "--write-timeout-ms": ("write_timeout_ms", 10000.0, ("serve",)),
+    "--drain-timeout-ms": ("drain_timeout_ms", 30000.0, ("serve",)),
+    "--warm-batch": ("warm_batch", 8, ("serve",)),
+    "--chaos": ("chaos", False, ("serve",)),
+    "--chaos-rate": ("chaos_rate", 0.2, ("serve",)),
+    "--chaos-seed": ("chaos_seed", 0, ("serve",)),
 }
-_LM_ONLY = {
-    "--arch": ("arch", None),
-    "--smoke": ("smoke", False),
-    "--prompt-len": ("prompt_len", 32),
-    "--gen": ("gen", 16),
-    "--mole": ("mole", "token"),
-}
-# Flags that configure the delivery engine / its async front door.  Under
-# ``--mode lm --mole off`` no engine runs at all, so these would be silently
-# ignored — same policy: that is an error, not a no-op.
-_ENGINE_ONLY = {
-    "--tenants": ("tenants", 4),
-    "--backend": ("backend", None),
-    "--async": ("use_async", False),
-    "--max-delay-ms": ("max_delay_ms", 5.0),
-    "--max-inflight-rows": ("max_inflight_rows", 4096),
-    "--admission": ("admission", "block"),
-    "--capacity": ("capacity", None),
-    "--stats": ("stats", False),
-    "--weights": ("weights", "1"),
-    "--priority": ("priority", "0"),
-    "--deadline-ms": ("deadline_ms", None),
-    "--snapshot-dir": ("snapshot_dir", None),
-    "--inject-failure": ("inject_failure", None),
-    "--prefetch-horizon-ms": ("prefetch_horizon_ms", None),
-}
+# The engine/front-door subset, for the --mode lm --mole off check.
+_ENGINE_FLAGS = (
+    "--tenants", "--backend", "--async", "--max-delay-ms",
+    "--max-inflight-rows", "--admission", "--capacity", "--stats",
+    "--weights", "--priority", "--deadline-ms", "--snapshot-dir",
+    "--inject-failure", "--prefetch-horizon-ms",
+)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default=None, choices=["delivery", "lm"],
-                    help="default: lm when --arch is given, else delivery")
+    ap.add_argument("--mode", default=None, choices=list(_MODES),
+                    help="default: lm when --arch is given, else delivery; "
+                         "serve = network front door (launch/server.py)")
     ap.add_argument("--arch", default=None, choices=ARCHS)
     # delivery-engine options (both modes, but require the engine: error
     # under --mode lm --mole off)
@@ -518,60 +552,94 @@ def main(argv=None):
     ap.add_argument("--channels", type=int, default=None)
     ap.add_argument("--out-channels", type=int, default=None)
     ap.add_argument("--image-size", type=int, default=None)
-    # lm-only options (error under --mode delivery)
+    # lm-only options (error under --mode delivery / serve)
     ap.add_argument("--smoke", action="store_true", default=None)
     ap.add_argument("--prompt-len", type=int, default=None)
     ap.add_argument("--gen", type=int, default=None)
     ap.add_argument("--mole", default=None, choices=["off", "token"])
-    # Every None-default flag must belong to exactly one gating table —
-    # otherwise a future flag would silently stay None in every mode, the
+    # serve-only options (the network front door; error elsewhere)
+    ap.add_argument("--host", default=None,
+                    help="[serve] bind address (default 127.0.0.1)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="[serve] TCP port; 0 picks an ephemeral one, "
+                         "printed as 'serving on host:port'")
+    ap.add_argument("--max-pending-rows", type=int, default=None,
+                    help="[serve] global load-shed threshold: admitted-but-"
+                         "uncompleted rows beyond this get a typed "
+                         "OVERLOADED rejection (0 disables)")
+    ap.add_argument("--read-timeout-ms", type=float, default=None,
+                    help="[serve] per-connection read timeout: a client "
+                         "stalled mid-frame loses its connection")
+    ap.add_argument("--write-timeout-ms", type=float, default=None,
+                    help="[serve] per-connection write/drain timeout")
+    ap.add_argument("--drain-timeout-ms", type=float, default=None,
+                    help="[serve] graceful-drain budget on SIGTERM")
+    ap.add_argument("--warm-batch", type=int, default=None,
+                    help="[serve] rows per tenant in the warmup flush "
+                         "(pre-compiles the steady-state buckets)")
+    ap.add_argument("--chaos", action="store_true", default=None,
+                    help="[serve] arm server-side network chaos: dropped "
+                         "accepts, requests lost after read, truncated/"
+                         "stalled writes")
+    ap.add_argument("--chaos-rate", type=float, default=None,
+                    help="[serve] per-event probability for --chaos")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="[serve] RNG seed for --chaos")
+    # Every None-default flag must belong to the gating table — otherwise a
+    # future flag would silently stay None in every mode, the
     # misconfiguration class this validation exists to kill.
-    gated = {
-        dest
-        for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY)
-        for dest, _ in table.values()
-    }
+    gated = {dest for dest, _, _ in _FLAGS.values()}
     ungated = {
         a.dest for a in ap._actions
         if a.default is None and a.dest not in ("help", "mode")
     } - gated
-    assert not ungated, f"flags missing from a mode-gating table: {ungated}"
+    assert not ungated, f"flags missing from the mode-gating table: {ungated}"
     args = ap.parse_args(argv)
 
     mode = args.mode or ("lm" if args.arch else "delivery")
-    wrong = _LM_ONLY if mode == "delivery" else _DELIVERY_ONLY
-    for flag, (dest, _) in wrong.items():
-        if getattr(args, dest) is not None:
+    for flag, (dest, _, modes) in _FLAGS.items():
+        if mode not in modes and getattr(args, dest) is not None:
             ap.error(
-                f"{flag} only applies to --mode "
-                f"{'lm' if mode == 'delivery' else 'delivery'} "
+                f"{flag} only applies to --mode {'/'.join(modes)} "
                 f"(got --mode {mode})"
             )
     if mode == "lm" and args.mole == "off":
-        for flag, (dest, _) in _ENGINE_ONLY.items():
+        for flag in _ENGINE_FLAGS:
+            dest = _FLAGS[flag][0]
             if getattr(args, dest) is not None:
                 ap.error(
                     f"{flag} requires the delivery engine, which --mole off "
                     f"disables"
                 )
     # --deadline-ms arms the async flusher's per-request deadlines; without
-    # --async nothing ever reads it — error, not a silent no-op.
+    # --async nothing ever reads it — error, not a silent no-op.  (serve is
+    # always async: these checks apply to the local modes only.)
     if args.deadline_ms is not None and not args.use_async:
         ap.error("--deadline-ms requires --async (the deadline flusher)")
     # Snapshotting and failure injection live in the supervised background
     # flusher; the sync path has no flusher to crash or supervise.
-    if args.snapshot_dir is not None and not args.use_async:
-        ap.error("--snapshot-dir requires --async (the supervised flusher)")
-    if args.inject_failure is not None and not args.use_async:
-        ap.error("--inject-failure requires --async (the supervised flusher)")
-    if args.prefetch_horizon_ms is not None and not args.use_async:
-        ap.error("--prefetch-horizon-ms requires --async (predictive "
-                 "prefetch runs in the background flusher's slack)")
-    for table in (_DELIVERY_ONLY, _LM_ONLY, _ENGINE_ONLY):
-        for dest, default in table.values():
-            if getattr(args, dest) is None:
-                setattr(args, dest, default)
+    if mode != "serve":
+        if args.snapshot_dir is not None and not args.use_async:
+            ap.error("--snapshot-dir requires --async (the supervised "
+                     "flusher)")
+        if args.inject_failure is not None and not args.use_async:
+            ap.error("--inject-failure requires --async (the supervised "
+                     "flusher)")
+        if args.prefetch_horizon_ms is not None and not args.use_async:
+            ap.error("--prefetch-horizon-ms requires --async (predictive "
+                     "prefetch runs in the background flusher's slack)")
+    if args.chaos is None and (
+        args.chaos_rate is not None or args.chaos_seed is not None
+    ):
+        ap.error("--chaos-rate/--chaos-seed require --chaos")
+    for dest, default, _ in _FLAGS.values():
+        if getattr(args, dest) is None:
+            setattr(args, dest, default)
 
+    if mode == "serve":
+        from repro.launch.server import run_serve
+
+        return run_serve(args)
     if mode == "delivery":
         return run_delivery(args)
     if args.arch is None:

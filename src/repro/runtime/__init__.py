@@ -7,7 +7,10 @@
   queue         weighted-fair request queues + padded-microbatch coalescing
                 (FairScheduler: the one engine-wide WFQ virtual clock)
   prefetch      per-tenant arrival prediction for slot prefetch
-  resilience    resilient loop, failure injection, stragglers
+  resilience    resilient loop, failure injection (incl. network chaos),
+                stragglers
+  wire          length-prefixed frame codec for the network front door
+                (launch/server.py serves it, launch/client.py speaks it)
 """
 from .api import DeliveryRequest, DeliveryResult
 from .async_engine import AdmissionError, AsyncDeliveryEngine, EngineDeadError
@@ -22,6 +25,7 @@ from .resilience import (
     EngineSnapshot, FailureInjector, ResilientLoop, SimulatedFailure,
     StragglerMonitor,
 )
+from .wire import ProtocolError
 
 __all__ = [
     "AdmissionError",
@@ -42,6 +46,7 @@ __all__ = [
     "RequestQueue",
     "TokenQueue",
     "FailureInjector",
+    "ProtocolError",
     "ResilientLoop",
     "SimulatedFailure",
     "StragglerMonitor",

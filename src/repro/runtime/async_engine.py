@@ -57,6 +57,10 @@ import heapq
 import threading
 import time
 from concurrent.futures import Future
+# Python < 3.11 raises a concurrent.futures-specific TimeoutError from
+# Future.result(); 3.11+ aliases it to the builtin.  Catch the one that is
+# actually raised, whichever interpreter runs us.
+from concurrent.futures import TimeoutError as futures_timeout_error
 
 from repro.core.protocol import SlotRegistry
 
@@ -192,6 +196,11 @@ class AsyncDeliveryEngine:
         self._deadline_heap: list[tuple[float, int]] = []
         self._rid_tenant: dict[int, tuple[str, int]] = {}  # rid -> (tenant, rows)
         self._inflight_rows: dict[str, int] = {}
+        # Rids whose waiter gave up (cancel-on-timeout): their admission
+        # accounting is already released, but their rows may still be queued
+        # or mid-flush — the flusher discards the published result instead
+        # of leaving it stranded in the engine's buffers.
+        self._cancelled: set[int] = set()
         self._force_flush = False
         self._closed = False
         self._flusher = threading.Thread(
@@ -212,6 +221,12 @@ class AsyncDeliveryEngine:
         """Requests submitted but not yet completed."""
         with self._cv:
             return len(self._futures)
+
+    def inflight_rows(self) -> int:
+        """Rows admitted but not yet completed, summed over tenants — the
+        load-shedding observable the network front door thresholds on."""
+        with self._cv:
+            return sum(self._inflight_rows.values())
 
     def prefetch(self, tenant_ids) -> dict[str, int]:
         """Activate tenants' slots + stage their secrets now (see
@@ -319,8 +334,44 @@ class AsyncDeliveryEngine:
     def deliver(self, request: DeliveryRequest,
                 timeout: float | None = None):
         """Synchronous convenience: submit and wait for the
-        :class:`DeliveryResult`."""
-        return self.submit(request).result(timeout=timeout)
+        :class:`DeliveryResult`.
+
+        On ``timeout`` expiry the request is **cancelled** — its admission
+        accounting is released and its eventual result discarded — before
+        the ``TimeoutError`` propagates.  (It used to be left in flight: the
+        future resolved into nowhere while the tenant's quota stayed
+        charged for rows nobody would ever take.)  Timed-out-and-cancelled
+        requests count in ``EngineStats.timed_out_requests``.
+        """
+        fut = self.submit(request)
+        try:
+            return fut.result(timeout=timeout)
+        except futures_timeout_error:
+            if self.cancel(fut.request_id):
+                self.engine.stats.timed_out_requests += 1
+            raise
+
+    def cancel(self, rid: int) -> bool:
+        """Abandon an in-flight request: release its rid + admission
+        accounting now, and have the flusher discard its result when the
+        rows (possibly already coalesced into a flush) eventually publish.
+
+        Returns False when the request already completed (or was never
+        ours) — the caller lost the race and the result stands.
+        """
+        with self._cv:
+            fut = self._futures.pop(rid, None)
+            if fut is None:
+                return False
+            self._submitted_at.pop(rid, None)
+            tenant, n_rows = self._rid_tenant.pop(rid)
+            self._inflight_rows[tenant] -= n_rows
+            if not self._inflight_rows[tenant]:
+                del self._inflight_rows[tenant]
+            self._cancelled.add(rid)
+            self._cv.notify_all()       # quota freed: wake blocked admitters
+        fut.cancel()
+        return True
 
     def flush_now(self) -> None:
         """Ask the flusher to flush immediately (does not wait for results)."""
@@ -381,6 +432,7 @@ class AsyncDeliveryEngine:
             self._deadline_heap.clear()
             self._rid_tenant.clear()
             self._inflight_rows.clear()
+            self._cancelled.clear()
         err = TimeoutError(
             f"flusher did not stop within {timeout}s; "
             f"{in_flight} requests still in flight"
@@ -398,6 +450,23 @@ class AsyncDeliveryEngine:
         self.close()
 
     # -- crash safety ---------------------------------------------------------
+    def snapshot_now(self) -> int:
+        """Capture and durably persist an engine snapshot immediately,
+        outside the flusher's ``snapshot_every`` cadence; returns the
+        persisted step.  The network server's graceful drain calls this
+        after the backlog flushed, so a restart resumes the same id space
+        even when the last cadence snapshot is stale."""
+        if self._snapshotter is None:
+            raise ValueError("snapshot_now() requires snapshot_dir")
+        with self._cv:
+            self._check_alive()
+            snap = self.engine.snapshot()
+            self._snapshot_step += 1
+            step = self._snapshot_step
+        snap.save(self._snapshotter, step)
+        self._snapshotter.wait()          # durable before we report done
+        return step
+
     def restore(self, snapshot: EngineSnapshot | None = None,
                 step: int | None = None) -> dict[int, Future]:
         """Rebuild the wrapped engine from a snapshot and re-arm the front
@@ -464,6 +533,7 @@ class AsyncDeliveryEngine:
             self._deadline_heap.clear()
             self._rid_tenant.clear()
             self._inflight_rows.clear()
+            self._cancelled.clear()
             self._resolving = 0
             self.engine.reset_pending()
             self._cv.notify_all()
@@ -594,6 +664,7 @@ class AsyncDeliveryEngine:
                     self._deadline_heap.clear()
                     self._rid_tenant.clear()
                     self._inflight_rows.clear()
+                    self._cancelled.clear()  # their engine state resets too
                     self.engine.reset_pending()
                 else:
                     for rid in done:
@@ -602,6 +673,12 @@ class AsyncDeliveryEngine:
                         # resolve — leave its result for engine.take().
                         fut = self._futures.pop(rid, None)
                         if fut is None:
+                            if rid in self._cancelled:
+                                # The waiter gave up (cancel-on-timeout):
+                                # pop-and-drop the result so it doesn't
+                                # strand in the engine's buffers.
+                                self._cancelled.discard(rid)
+                                self.engine.take_result(rid)
                             continue
                         self._submitted_at.pop(rid)
                         tenant, n_rows = self._rid_tenant.pop(rid)

@@ -136,6 +136,24 @@ class EngineStats:
     # observable for "the flusher holds the lock across device execution".
     submit_stalls: int = 0
     stall_threshold_ms: float = 1.0
+    # Network front door (launch/server.py) counters: requests shed at the
+    # door with a typed OVERLOADED rejection (global pending cap or
+    # per-tenant admission quota), requests already past their deadline_ms
+    # on arrival (EXPIRED), front-door deliver(timeout=) expiries that
+    # cancelled their request, connections dropped/reset mid-stream (each
+    # one a client reconnect), and retries answered straight from the
+    # exactly-once result cache.
+    shed_requests: int = 0
+    expired_requests: int = 0
+    timed_out_requests: int = 0
+    reconnects: int = 0
+    duplicate_hits: int = 0
+    # Per-tenant security budget on the served path: tenant -> log2 of the
+    # brute-force attack-success upper bound for the secrets serving that
+    # tenant (core.security).  Filled by the network server at registration
+    # time; summary() renders it so an operator sees the privacy budget
+    # next to the latency budget.
+    security_budget_log2: dict = dataclasses.field(default_factory=dict)
     # Predictive prefetch scoreboard: a predicted tenant that next arrives
     # while resident is a hit; a lapsed prediction window (or arriving
     # evicted anyway) is a miss.  The hit rate is the gate on whether the
@@ -313,6 +331,24 @@ class EngineStats:
             f"resilience: degraded_flushes={self.degraded_flushes} "
             f"snapshots={self.snapshots} restores={self.restores}"
         )
+        served = (
+            self.shed_requests + self.expired_requests
+            + self.timed_out_requests + self.reconnects + self.duplicate_hits
+        )
+        if served:
+            lines.append(
+                f"front door: shed={self.shed_requests} "
+                f"expired={self.expired_requests} "
+                f"timed_out={self.timed_out_requests} "
+                f"reconnects={self.reconnects} "
+                f"duplicate_hits={self.duplicate_hits}"
+            )
+        if self.security_budget_log2:
+            worst = max(self.security_budget_log2.items(), key=lambda kv: kv[1])
+            lines.append(
+                f"security budget: {len(self.security_budget_log2)} tenants, "
+                f"weakest log2 P_bf = {worst[1]:.3g} ({worst[0]})"
+            )
         return "\n".join(lines)
 
 

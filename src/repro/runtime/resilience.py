@@ -17,6 +17,16 @@ phase boundary (``"coalesce"`` | ``"device"`` | ``"publish"``, or the decode
 lane's ``"retire"`` | ``"admit"``) — once per phase, so recovery replay runs
 clean.
 
+Network chaos (the served path): ``FailureInjector(network_phases={...},
+network_rate=0.2)`` arms *probabilistic, repeating* faults at the wire
+layer — unlike the one-shot phase injection above, a chaos run keeps
+misbehaving for its whole duration.  Phases (``NETWORK_PHASES``):
+``"accept"`` drop a connection right after accept, ``"read"`` drop a
+request after it was read (lost before processing), ``"write"`` truncate
+an outgoing frame mid-write and reset the connection, ``"stall"`` sleep
+``stall_ms`` before an I/O (a slow peer).  Decisions come from a seeded
+generator, so a chaos fleet run is reproducible.
+
 ``EngineSnapshot`` is the delivery-side counterpart of the train-loop
 checkpoint: the engine serializes its registries + in-flight request
 accounting into ``(arrays, meta)`` and persists them through the same atomic
@@ -36,11 +46,36 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+# Wire-layer chaos points understood by the server/client loops.
+NETWORK_PHASES = ("accept", "read", "write", "stall")
+
+
 @dataclasses.dataclass
 class FailureInjector:
     at_steps: set[int] = dataclasses.field(default_factory=set)
     at_phases: set[str] = dataclasses.field(default_factory=set)
     fired: set = dataclasses.field(default_factory=set)
+    # Network chaos: probabilistic and repeating (vs the one-shot step/phase
+    # injection above).  Each armed phase independently fires with
+    # ``network_rate`` per opportunity; "stall" sleeps ``stall_ms`` instead
+    # of failing.  Seeded -> a chaos run is reproducible.
+    network_phases: set[str] = dataclasses.field(default_factory=set)
+    network_rate: float = 0.2
+    stall_ms: float = 200.0
+    seed: int = 0
+    network_hits: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        unknown = set(self.network_phases) - set(NETWORK_PHASES)
+        if unknown:
+            raise ValueError(
+                f"unknown network phases {sorted(unknown)} "
+                f"(known: {NETWORK_PHASES})"
+            )
+        if not 0.0 <= self.network_rate <= 1.0:
+            raise ValueError(f"network_rate must be in [0, 1], "
+                             f"got {self.network_rate}")
+        self._net_rng = np.random.default_rng(self.seed)
 
     def maybe_fail(self, step: int) -> None:
         if step in self.at_steps and step not in self.fired:
@@ -51,6 +86,21 @@ class FailureInjector:
         if phase in self.at_phases and phase not in self.fired:
             self.fired.add(phase)
             raise SimulatedFailure(f"injected failure at phase {phase!r}")
+
+    def network_hit(self, phase: str) -> bool:
+        """Roll the dice for one wire-layer opportunity at ``phase``.
+
+        Returns True when the fault should fire (the caller drops the
+        connection / truncates the frame / sleeps ``stall_ms``); every hit
+        is tallied in ``network_hits`` so a chaos run can report what it
+        actually injected.
+        """
+        if phase not in self.network_phases:
+            return False
+        if self._net_rng.random() >= self.network_rate:
+            return False
+        self.network_hits[phase] = self.network_hits.get(phase, 0) + 1
+        return True
 
 
 @dataclasses.dataclass

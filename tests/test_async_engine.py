@@ -3,6 +3,7 @@ multi-tenant submission equals the sync path, the deadline flusher honours
 ``max_delay_ms``, and per-tenant admission control (block/reject) holds."""
 import threading
 import time
+from concurrent import futures
 
 import jax.numpy as jnp
 import numpy as np
@@ -495,3 +496,50 @@ def test_drain_waits_for_inflight(rng):
         assert fut.done() and front.pending() == 0
     finally:
         front.close()
+
+
+def test_deliver_timeout_cancels_and_releases_admission(rng):
+    """Regression: deliver(timeout=) used to leave the timed-out request in
+    flight — the future resolved into nowhere while the tenant's admission
+    quota stayed charged forever.  Now the timeout cancels the request:
+    quota is released immediately, the eventual result is discarded (not
+    stranded in the engine's buffers), and the timeout is counted."""
+    reg = _registry(rng, tenants=1)
+    # An SLO so long the flush can't fire before the deliver timeout.
+    front = AsyncDeliveryEngine(reg, max_delay_ms=60_000.0,
+                                max_inflight_rows=4)
+    try:
+        d = rng.standard_normal((3, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        with pytest.raises(futures.TimeoutError):
+            front.deliver(_rq("t0", d), timeout=0.05)
+        # Admission accounting released right away: a quota-sized follow-up
+        # admits without waiting for the stale rows.
+        assert front.inflight_rows() == 0
+        assert front.stats.timed_out_requests == 1
+        fut = front.submit(_rq("t0", d))          # 3 rows: fits only if freed
+        front.flush_now()
+        assert fut.result(timeout=60).payload.shape[0] == 3
+        # The cancelled rid's rows were flushed too — its result must have
+        # been discarded, not stranded in the engine's result buffers.
+        front.drain(timeout=60)
+        with front._cv:
+            assert not front.engine._results
+            assert not front._cancelled
+    finally:
+        front.close()
+
+
+def test_deliver_timeout_lost_race_keeps_result(rng):
+    """If the result lands between the timeout and the cancel, cancel()
+    returns False and nothing is counted or discarded."""
+    reg = _registry(rng, tenants=1)
+    with AsyncDeliveryEngine(reg, max_delay_ms=5.0) as front:
+        d = rng.standard_normal((1, GEOM.alpha, GEOM.m, GEOM.m)).astype(
+            np.float32
+        )
+        fut = front.submit(_rq("t0", d))
+        fut.result(timeout=60)                    # completed
+        assert front.cancel(fut.request_id) is False
+        assert front.stats.timed_out_requests == 0

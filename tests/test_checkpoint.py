@@ -74,3 +74,31 @@ def test_reshard_on_restore(tmp_path, rng):
     for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
     assert all(x.sharding.mesh.shape == mesh.shape for x in jax.tree.leaves(restored))
+
+
+def test_stale_tmp_swept_on_every_save(tmp_path, rng):
+    """Regression: _gc_tmp ran only at construction, so a long-lived manager
+    (the serving engine's snapshotter) accumulated crash-orphaned .tmp dirs
+    forever.  Every save() now sweeps them first."""
+    m = CheckpointManager(tmp_path, async_save=False)
+    t = _tree(rng)
+    m.save(1, t)
+    # A crash after construction leaves a stale tmp the old code never swept.
+    bad = tmp_path / "step_00000007.tmp"
+    bad.mkdir()
+    (bad / "garbage").write_text("x")
+    m.save(2, t)                 # same manager, no reconstruction
+    assert not bad.exists()
+    assert m.latest_step() == 2
+
+
+def test_tmp_sweep_does_not_race_async_writer(tmp_path, rng):
+    """The per-save sweep joins the in-flight async writer first: a live
+    .tmp mid-write is never the sweep's victim."""
+    m = CheckpointManager(tmp_path, async_save=True)
+    t = _tree(rng)
+    m.save(1, t)
+    m.save(2, t)                 # wait()s on save 1's writer, then sweeps
+    m.wait()
+    assert m.latest_step() == 2
+    assert not list(tmp_path.glob("*.tmp"))
