@@ -1,0 +1,19 @@
+"""Static-analysis passes guarding the MoLe security and engine
+invariants: secret-flow taint (``taint``), lock discipline (``locks``)
+and jit retrace stability (``retrace``).  See ``python -m repro.analysis``.
+"""
+
+from .base import Annotation, Finding, Module, iter_py_files, load_module
+from .driver import PASSES, exit_code, main, run_paths
+
+__all__ = [
+    "Annotation",
+    "Finding",
+    "Module",
+    "PASSES",
+    "exit_code",
+    "iter_py_files",
+    "load_module",
+    "main",
+    "run_paths",
+]

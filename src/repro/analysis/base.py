@@ -1,0 +1,227 @@
+"""Shared AST infrastructure for the ``repro.analysis`` passes.
+
+Every pass works on :class:`Module` objects — a parsed AST plus the
+annotation comments extracted from real COMMENT tokens (so the syntax
+shown inside strings or docstrings can never register as a live
+annotation).  Annotations look like::
+
+    # analysis: declassified(reason secrets may cross this sink)
+    # analysis: requires-lock(_cv)
+    # analysis: forbids-lock(_cv)
+    # analysis: jit-step(static: backend, kappa)
+
+A finding is suppressed by a ``declassified`` annotation on the finding
+line, on any line of the enclosing (possibly multi-line) statement, or
+on the line directly above it.  An empty reason does not suppress —
+the driver additionally reports it as a broken annotation.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Iterable, Iterator, Optional
+
+ANNOTATION_RE = re.compile(
+    r"#\s*analysis:\s*([a-z][a-z-]*)\s*(?:\(([^)]*)\))?"
+)
+
+KNOWN_KINDS = frozenset(
+    {"declassified", "requires-lock", "forbids-lock", "jit-step"}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Annotation:
+    """One ``# analysis: kind(arg)`` comment."""
+
+    kind: str
+    arg: str  # text inside the parens, '' when absent
+    line: int
+
+
+@dataclasses.dataclass
+class Finding:
+    """One diagnostic produced by a pass."""
+
+    pass_name: str
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    declassified: Optional[str] = None  # reason, when suppressed
+
+    @property
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def as_dict(self) -> dict:
+        d = {
+            "pass": self.pass_name,
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+        }
+        if self.declassified is not None:
+            d["declassified"] = self.declassified
+        return d
+
+    def render(self) -> str:
+        tag = " [declassified]" if self.declassified is not None else ""
+        return (
+            f"{self.path}:{self.line}:{self.col}: "
+            f"[{self.pass_name}] {self.rule}: {self.message}{tag}"
+        )
+
+
+@dataclasses.dataclass
+class Module:
+    """A parsed source file plus its analysis annotations."""
+
+    path: str
+    tree: ast.Module
+    lines: list
+    annotations: dict  # line -> list[Annotation]
+
+    def anns_at(self, line: int) -> list:
+        return self.annotations.get(line, [])
+
+    def ann_at(self, line: int, kind: str) -> Optional[Annotation]:
+        for a in self.anns_at(line):
+            if a.kind == kind:
+                return a
+        return None
+
+    def func_annotation(self, node, kind: str) -> Optional[Annotation]:
+        """Contract annotation for a def: on the ``def`` line, between the
+        decorators and the ``def``, or directly above the first decorator."""
+        start = node.lineno
+        for dec in getattr(node, "decorator_list", []):
+            start = min(start, dec.lineno)
+        for line in range(start - 1, node.lineno + 1):
+            a = self.ann_at(line, kind)
+            if a is not None:
+                return a
+        return None
+
+    def declassify_reason(self, node) -> Optional[str]:
+        """Reason string if the statement carrying ``node`` is declassified.
+
+        Returns '' when an annotation exists but has no reason (the
+        caller must not treat that as suppression)."""
+        first = getattr(node, "lineno", None)
+        if first is None:
+            return None
+        last = getattr(node, "end_lineno", first) or first
+        for line in range(first - 1, last + 1):
+            a = self.ann_at(line, "declassified")
+            if a is not None:
+                return a.arg.strip()
+        return None
+
+
+def extract_annotations(source: str) -> dict:
+    """Map line -> [Annotation], from genuine comment tokens only."""
+    out: dict = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = ANNOTATION_RE.search(tok.string)
+            if m is None:
+                continue
+            ann = Annotation(kind=m.group(1), arg=m.group(2) or "",
+                             line=tok.start[0])
+            out.setdefault(ann.line, []).append(ann)
+    except tokenize.TokenError:
+        pass  # unterminated constructs; the ast parse reports the error
+    return out
+
+
+def load_module(path) -> "Module | Finding":
+    """Parse one file; a syntax error comes back as a Finding, not a raise."""
+    p = str(path)
+    try:
+        source = Path(p).read_text()
+    except OSError as e:
+        return Finding("annotations", "unreadable", p, 0, 0,
+                       f"cannot read file ({type(e).__name__})")
+    try:
+        tree = ast.parse(source, filename=p)
+    except SyntaxError as e:
+        return Finding("annotations", "parse-error", p, e.lineno or 0,
+                       e.offset or 0, "file does not parse")
+    return Module(
+        path=p,
+        tree=tree,
+        lines=source.splitlines(),
+        annotations=extract_annotations(source),
+    )
+
+
+def iter_py_files(paths: Iterable) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def dotted_name(node) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def terminal_name(node) -> Optional[str]:
+    """Last attribute segment of a call target (``c`` for ``a.b.c()``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def walk_shallow(node) -> Iterator[ast.AST]:
+    """Like ast.walk but does not descend into nested function/class defs
+    (the root itself is yielded even if it is a def)."""
+    stack = [node]
+    first = True
+    while stack:
+        cur = stack.pop()
+        if not first and isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
+        ):
+            continue
+        first = False
+        yield cur
+        stack.extend(ast.iter_child_nodes(cur))
+
+
+def source_snippet(module: Module, node, limit: int = 60) -> str:
+    """Short code excerpt for a message (code text, never runtime values)."""
+    try:
+        seg = ast.get_source_segment("\n".join(module.lines), node)
+    except Exception:
+        seg = None
+    if not seg:
+        return ""
+    seg = " ".join(seg.split())
+    if len(seg) > limit:
+        seg = seg[: limit - 3] + "..."
+    return seg

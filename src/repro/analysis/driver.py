@@ -1,0 +1,140 @@
+"""Driver for the repro static-analysis passes.
+
+Run locally with::
+
+    PYTHONPATH=src python -m repro.analysis            # human output
+    PYTHONPATH=src python -m repro.analysis --json     # machine output
+
+With no paths it analyzes the installed ``repro`` package source.  The
+exit code is a bitmask of passes with live (non-declassified) findings:
+taint=1, locks=2, retrace=4, broken annotations=8.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import locks, retrace, taint
+from .base import Finding, KNOWN_KINDS, iter_py_files, load_module
+
+PASSES = (taint, locks, retrace)
+ANNOTATIONS_BIT = 8
+
+
+def _annotation_findings(modules) -> list:
+    """Broken annotations are findings too: an unknown kind is a typo'd
+    contract, an empty declassification reason is an unaudited leak."""
+    out = []
+    for module in modules:
+        for line in sorted(module.annotations):
+            for ann in module.annotations[line]:
+                if ann.kind not in KNOWN_KINDS:
+                    out.append(Finding(
+                        "annotations", "unknown-kind", module.path, line, 0,
+                        f"unknown analysis annotation kind '{ann.kind}'",
+                    ))
+                elif ann.kind == "declassified" and not ann.arg.strip():
+                    out.append(Finding(
+                        "annotations", "empty-reason", module.path, line, 0,
+                        "declassified() without a written reason does not "
+                        "suppress anything — state why the flow is safe",
+                    ))
+    return out
+
+
+def default_target() -> Path:
+    # parents[1] is the repro package dir; works even as a namespace pkg.
+    return Path(__file__).resolve().parents[1]
+
+
+def run_paths(paths=None, pass_names=None):
+    """Analyze files/dirs; returns (active_findings, declassified, errors).
+
+    ``errors`` are parse/annotation problems; ``declassified`` are
+    findings suppressed by an audited annotation.
+    """
+    if not paths:
+        paths = [default_target()]
+    modules = []
+    errors = []
+    for path in iter_py_files(paths):
+        loaded = load_module(path)
+        if isinstance(loaded, Finding):
+            errors.append(loaded)
+        else:
+            modules.append(loaded)
+    errors.extend(_annotation_findings(modules))
+
+    active, declassified = [], []
+    for p in PASSES:
+        if pass_names and p.NAME not in pass_names:
+            continue
+        for f in p.run(modules):
+            (declassified if f.declassified is not None else active).append(f)
+    key = lambda f: (f.path, f.line, f.col, f.rule)
+    return sorted(active, key=key), sorted(declassified, key=key), errors
+
+
+def exit_code(active, errors) -> int:
+    bits = {p.NAME: p.BIT for p in PASSES}
+    code = 0
+    for f in active:
+        code |= bits.get(f.pass_name, ANNOTATIONS_BIT)
+    if errors:
+        code |= ANNOTATIONS_BIT
+    return code
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Secret-flow, lock-discipline and jit-stability lints "
+        "for the repro codebase.",
+    )
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories (default: the repro package)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--output", metavar="FILE",
+                    help="also write the JSON report to FILE")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=[p.NAME for p in PASSES],
+                    help="run only this pass (repeatable)")
+    ns = ap.parse_args(argv)
+
+    active, declassified, errors = run_paths(ns.paths, ns.passes)
+    report = {
+        "target": [str(p) for p in (ns.paths or [default_target()])],
+        "passes": [p.NAME for p in PASSES
+                   if not ns.passes or p.NAME in ns.passes],
+        "counts": {
+            "active": len(active),
+            "declassified": len(declassified),
+            "errors": len(errors),
+        },
+        "findings": [f.as_dict() for f in active],
+        "declassified": [f.as_dict() for f in declassified],
+        "errors": [f.as_dict() for f in errors],
+    }
+    if ns.output:
+        Path(ns.output).write_text(json.dumps(report, indent=2) + "\n")
+    if ns.as_json:
+        print(json.dumps(report, indent=2))
+    else:
+        for f in errors + active:
+            print(f.render())
+        for f in declassified:
+            print(f.render())
+        n_pass = len(report["passes"])
+        print(
+            f"{n_pass} pass(es): {len(active)} finding(s), "
+            f"{len(declassified)} declassified, {len(errors)} error(s)"
+        )
+    return exit_code(active, errors)
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

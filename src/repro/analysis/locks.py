@@ -1,0 +1,225 @@
+"""Lock-discipline checker.
+
+Functions declare contracts next to their ``def``::
+
+    # analysis: forbids-lock(_cv)     — must never run with _cv held
+    # analysis: requires-lock(_cv)    — caller must hold _cv
+
+The pass finds every ``with <expr ending in _cv>:`` region, builds a
+name-based call graph across all analyzed modules, and propagates
+"may run with lock L held" from lock regions through call edges until a
+fixpoint.  A call that can reach a ``forbids-lock`` function while the
+lock is held is the PR-4 regression class (device step under the submit
+lock); a call to a ``requires-lock`` function from a context that cannot
+be holding the lock is the dual.
+
+Matching is by terminal name (``self.engine.execute_flush`` → edges to
+every function *named* ``execute_flush``), which is conservative in the
+right direction for annotated functions with unique names.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from .base import Finding, Module, terminal_name
+
+NAME = "locks"
+BIT = 2
+
+
+@dataclasses.dataclass
+class _CallSite:
+    callee: str
+    held: frozenset  # lock names held lexically at the call
+    line: int
+    col: int
+
+
+@dataclasses.dataclass
+class _Func:
+    key: str          # "path::Class.name" (diagnostics only)
+    name: str         # terminal name used for call-graph matching
+    module: Module
+    requires: frozenset
+    forbids: frozenset
+    calls: list       # [_CallSite]
+    holds: set = dataclasses.field(default_factory=set)
+    line: int = 0
+
+
+def _contract_locks(module: Module, node, kind: str) -> frozenset:
+    ann = module.func_annotation(node, kind)
+    if ann is None:
+        return frozenset()
+    return frozenset(s.strip() for s in ann.arg.split(",") if s.strip())
+
+
+class _CallCollector(ast.NodeVisitor):
+    """Collect call sites inside one function body, tracking which known
+    lock names are held via ``with`` at each site.  Does not descend into
+    nested defs (they are separate graph nodes)."""
+
+    def __init__(self, lock_names):
+        self.lock_names = lock_names
+        self.held: list = []
+        self.calls: list = []
+
+    def _lock_of(self, expr) -> Optional[str]:
+        t = terminal_name(expr)
+        return t if t in self.lock_names else None
+
+    def visit_With(self, node):
+        self._visit_with(node)
+
+    def visit_AsyncWith(self, node):
+        self._visit_with(node)
+
+    def _visit_with(self, node):
+        acquired = []
+        for item in node.items:
+            lock = self._lock_of(item.context_expr)
+            if lock is not None:
+                acquired.append(lock)
+            if item.context_expr is not None:
+                self.visit(item.context_expr)
+        self.held.extend(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in acquired:
+            self.held.pop()
+
+    def visit_Call(self, node):
+        callee = terminal_name(node.func)
+        if callee is not None:
+            self.calls.append(
+                _CallSite(callee, frozenset(self.held),
+                          node.lineno, node.col_offset)
+            )
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        pass
+
+    def visit_AsyncFunctionDef(self, node):
+        pass
+
+    def visit_ClassDef(self, node):
+        pass
+
+    def visit_Lambda(self, node):
+        pass
+
+
+def _collect_funcs(module: Module, lock_names) -> list:
+    funcs = []
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                col = _CallCollector(lock_names)
+                for stmt in child.body:
+                    col.visit(stmt)
+                funcs.append(
+                    _Func(
+                        key=f"{module.path}::{qual}",
+                        name=child.name,
+                        module=module,
+                        requires=_contract_locks(module, child,
+                                                 "requires-lock"),
+                        forbids=_contract_locks(module, child,
+                                                "forbids-lock"),
+                        calls=col.calls,
+                        line=child.lineno,
+                    )
+                )
+                walk(child, f"{qual}.")
+            elif isinstance(child, ast.ClassDef):
+                walk(child, f"{prefix}{child.name}.")
+            else:
+                walk(child, prefix)
+
+    walk(module.tree, "")
+    return funcs
+
+
+def run(modules) -> list:
+    # Only lock names that appear in some contract are tracked; an
+    # un-annotated codebase produces zero graph work and zero findings.
+    lock_names = set()
+    pre = []
+    for module in modules:
+        for anns in module.annotations.values():
+            for a in anns:
+                if a.kind in ("requires-lock", "forbids-lock"):
+                    for s in a.arg.split(","):
+                        if s.strip():
+                            lock_names.add(s.strip())
+    if not lock_names:
+        return []
+
+    funcs: list = []
+    for module in modules:
+        funcs.extend(_collect_funcs(module, lock_names))
+
+    by_name: dict = {}
+    for f in funcs:
+        by_name.setdefault(f.name, []).append(f)
+        f.holds = set(f.requires)
+
+    findings: list = []
+    emitted = set()
+
+    def emit(rule, module, site, message):
+        key = (rule, module.path, site.line, site.col, message)
+        if key in emitted:
+            return
+        emitted.add(key)
+        findings.append(
+            Finding(NAME, rule, module.path, site.line, site.col, message)
+        )
+
+    # Fixpoint: propagate held locks through call edges.
+    changed = True
+    while changed:
+        changed = False
+        for f in funcs:
+            for site in f.calls:
+                effective = set(site.held) | f.holds
+                if not effective:
+                    continue
+                for callee in by_name.get(site.callee, []):
+                    hit = effective & callee.forbids
+                    if hit:
+                        continue  # reported below; do not propagate past it
+                    new = effective - callee.holds
+                    if new:
+                        callee.holds |= new
+                        changed = True
+
+    for f in funcs:
+        for site in f.calls:
+            effective = set(site.held) | f.holds
+            for callee in by_name.get(site.callee, []):
+                hit = effective & callee.forbids
+                for lock in sorted(hit):
+                    via = "" if lock in site.held else f" (via {f.name})"
+                    emit(
+                        "held-forbidden", f.module, site,
+                        f"{site.callee}() forbids lock '{lock}' but may "
+                        f"run with it held{via}",
+                    )
+                for lock in sorted(callee.requires):
+                    if lock not in effective:
+                        emit(
+                            "requires-lock", f.module, site,
+                            f"{site.callee}() requires lock '{lock}' but "
+                            f"{f.name}() does not hold it here",
+                        )
+
+    # requires-lock functions called from nowhere-in-graph are fine;
+    # ones never called under the lock were reported above per-site.
+    return findings

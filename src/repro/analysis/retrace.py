@@ -1,0 +1,315 @@
+"""Jit-stability lint for step functions.
+
+The engine's zero-retrace guarantee holds only if jitted step functions
+never leak Python-value dependence into trace-time decisions.  This pass
+finds step functions three ways:
+
+* decorated with ``@jax.jit`` / ``@partial(jax.jit, static_argnames=…)``
+  (the static names are honored — branching on a static is fine),
+* wrapped via ``jax.jit(fn, …)`` where ``fn`` is a local ``def``
+  (the decode lane's ``counted_decode`` pattern), or
+* marked ``# analysis: jit-step`` / ``# analysis: jit-step(static: a, b)``
+  (builder inner functions that are jitted by their callers).
+
+Inside a step it flags:
+
+* ``retrace/wall-clock`` — ``time.time()`` and friends at trace time,
+* ``retrace/host-rng`` — ``random.*`` / ``np.random.*`` draws,
+* ``retrace/value-dependent-branch`` — ``if``/``while`` on a traced value
+  (``.shape``/``.dtype``/``.ndim``/``.size`` reads are static and exempt),
+* ``retrace/concretization`` — ``int()``/``float()``/``bool()``/
+  ``.item()``/``.tolist()`` on a traced value,
+* ``retrace/value-dependent-shape`` — traced values in shape-taking
+  constructors (``reshape``/``zeros``/``arange``/…),
+* ``retrace/unordered-iteration`` — iterating a set (or ``vars()`` /
+  ``globals()`` / ``locals()``), whose order can differ between traces.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .base import Finding, Module, dotted_name, source_snippet, terminal_name
+
+NAME = "retrace"
+BIT = 4
+
+WALL_CLOCK = frozenset({
+    "time.time", "time.monotonic", "time.perf_counter",
+    "time.process_time", "time.time_ns", "time.monotonic_ns",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+})
+
+RNG_PREFIXES = ("random.", "np.random.", "numpy.random.")
+RNG_CALLS = frozenset({"default_rng", "RandomState"})
+
+SHAPE_CTORS = frozenset({
+    "reshape", "zeros", "ones", "full", "empty", "arange", "broadcast_to",
+    "tile",
+})
+
+STATIC_ATTRS = frozenset({"shape", "dtype", "ndim", "size"})
+
+CONCRETIZERS = frozenset({"int", "float", "bool"})
+CONCRETIZING_METHODS = frozenset({"item", "tolist"})
+
+UNORDERED_SOURCES = frozenset({"set", "frozenset", "vars", "globals",
+                               "locals", "dir"})
+
+
+def _is_jax_jit(node) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def _static_names_from_call(call: ast.Call):
+    names = set()
+    for kw in call.keywords:
+        if kw.arg not in ("static_argnames", "static_argnums"):
+            continue
+        if kw.arg == "static_argnums":
+            # positions resolved by the caller against the param list
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                names.update(
+                    ("#%d" % e.value)
+                    for e in kw.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                )
+            elif isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, int
+            ):
+                names.add("#%d" % kw.value.value)
+        else:
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                names.update(
+                    e.value for e in kw.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                )
+            elif isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, str
+            ):
+                names.add(kw.value.value)
+    return names
+
+
+def _jit_statics(node) -> Optional[set]:
+    """None when not a jit-decorated def; else its static param names."""
+    for dec in node.decorator_list:
+        if _is_jax_jit(dec):
+            return set()
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return _static_names_from_call(dec)
+            if (
+                terminal_name(dec.func) == "partial"
+                and dec.args
+                and _is_jax_jit(dec.args[0])
+            ):
+                return _static_names_from_call(dec)
+    return None
+
+
+def _annotation_statics(module: Module, node) -> Optional[set]:
+    ann = module.func_annotation(node, "jit-step")
+    if ann is None:
+        return None
+    arg = ann.arg.strip()
+    if arg.startswith("static:"):
+        return {s.strip() for s in arg[len("static:"):].split(",") if s.strip()}
+    return set()
+
+
+def _wrapped_names(module: Module) -> set:
+    """Local defs passed by name to a jax.jit(...) call anywhere."""
+    out = set()
+    for node in ast.walk(module.tree):
+        if (
+            isinstance(node, ast.Call)
+            and _is_jax_jit(node.func)
+            and node.args
+            and isinstance(node.args[0], ast.Name)
+        ):
+            out.add(node.args[0].id)
+    return out
+
+
+def _resolve_statics(node, raw: set) -> set:
+    """Turn '#<pos>' static_argnums markers into parameter names."""
+    params = [p.arg for p in node.args.posonlyargs + node.args.args]
+    resolved = set()
+    for s in raw:
+        if s.startswith("#"):
+            idx = int(s[1:])
+            if 0 <= idx < len(params):
+                resolved.add(params[idx])
+        else:
+            resolved.add(s)
+    return resolved
+
+
+class _StepChecker:
+    def __init__(self, module: Module, node, statics: set):
+        self.module = module
+        self.node = node
+        a = node.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        self.traced = (params - statics) - {"self", "cls"}
+        self.findings: list = []
+
+    # -- traced-value tracking ------------------------------------------
+
+    def _refs_traced(self, node) -> bool:
+        """True when the expression reads a traced value by value —
+        attribute reads of .shape/.dtype/… are static and ignored."""
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if self._refs_traced(child):
+                return True
+        return False
+
+    def propagate(self) -> None:
+        for _ in range(2):
+            for stmt in ast.walk(self.node):
+                if isinstance(stmt, ast.Assign) and self._refs_traced(
+                    stmt.value
+                ):
+                    for t in stmt.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                self.traced.add(n.id)
+                elif isinstance(stmt, (ast.For,)) and self._refs_traced(
+                    stmt.iter
+                ):
+                    for n in ast.walk(stmt.target):
+                        if isinstance(n, ast.Name):
+                            self.traced.add(n.id)
+                elif isinstance(stmt, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    if stmt is not self.node:
+                        # nested defs (vmapped rows etc.) trace their params
+                        a = stmt.args
+                        for p in a.posonlyargs + a.args + a.kwonlyargs:
+                            self.traced.add(p.arg)
+
+    # -- checks ----------------------------------------------------------
+
+    def check(self) -> None:
+        self.propagate()
+        for node in ast.walk(self.node):
+            if isinstance(node, ast.Call):
+                self._check_call(node)
+            elif isinstance(node, (ast.If, ast.While)):
+                if self._refs_traced(node.test):
+                    self._emit(
+                        "value-dependent-branch", node.test,
+                        "branch condition depends on a traced value "
+                        "(forces a retrace per distinct value)",
+                    )
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                self._check_iteration(node)
+
+    def _check_call(self, node: ast.Call) -> None:
+        dname = dotted_name(node.func) or ""
+        tname = terminal_name(node.func)
+        if dname in WALL_CLOCK:
+            self._emit("wall-clock", node,
+                       f"{dname}() is evaluated at trace time")
+            return
+        if dname.startswith(RNG_PREFIXES) or tname in RNG_CALLS:
+            self._emit("host-rng", node,
+                       f"host RNG {dname or tname}() inside a jit step")
+            return
+        if tname in CONCRETIZERS and node.args and self._refs_traced(
+            node.args[0]
+        ):
+            self._emit("concretization", node,
+                       f"{tname}() forces a traced value to a Python scalar")
+            return
+        if (
+            tname in CONCRETIZING_METHODS
+            and isinstance(node.func, ast.Attribute)
+            and self._refs_traced(node.func.value)
+        ):
+            self._emit("concretization", node,
+                       f".{tname}() forces a traced value to host")
+            return
+        if tname in SHAPE_CTORS:
+            for arg in self._shape_args(node, tname):
+                if self._refs_traced(arg):
+                    self._emit(
+                        "value-dependent-shape", node,
+                        f"{tname}() shape depends on a traced value",
+                    )
+                    break
+
+    def _shape_args(self, node: ast.Call, tname: str) -> list:
+        """The arguments of a shape-taking ctor that actually carry shape.
+
+        ``jnp.reshape(x, s)`` / ``broadcast_to(x, s)`` / ``tile(x, reps)``
+        take the (traced) array first — only the tail is shape;
+        ``x.reshape(s)`` method form is all-shape; ``full(shape, v)``'s
+        fill value may legitimately be traced."""
+        args = list(node.args)
+        kws = [kw.value for kw in node.keywords if kw.arg == "shape"]
+        method = isinstance(node.func, ast.Attribute) and self._refs_traced(
+            node.func.value
+        )
+        if tname in ("reshape", "broadcast_to", "tile"):
+            pos = args if method else args[1:]
+        elif tname == "full":
+            pos = args[:1]
+        else:
+            pos = args
+        return pos + kws
+
+    def _check_iteration(self, node) -> None:
+        it = node.iter
+        if isinstance(it, ast.Set):
+            self._emit("unordered-iteration", it,
+                       "iterating a set literal inside a jit step")
+        elif isinstance(it, ast.Call) and terminal_name(
+            it.func
+        ) in UNORDERED_SOURCES:
+            self._emit("unordered-iteration", it,
+                       f"iteration order of {terminal_name(it.func)}() is "
+                       "not trace-stable")
+
+    def _emit(self, rule: str, node, message: str) -> None:
+        snippet = source_snippet(self.module, node)
+        if snippet:
+            message = f"{message}: `{snippet}`"
+        f = Finding(NAME, rule, self.module.path,
+                    getattr(node, "lineno", 0), getattr(node, "col_offset", 0),
+                    message)
+        reason = self.module.declassify_reason(node)
+        if reason:
+            f.declassified = reason
+        self.findings.append(f)
+
+
+def run(modules) -> list:
+    findings: list = []
+    for module in modules:
+        wrapped = _wrapped_names(module)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            statics = _jit_statics(node)
+            if statics is None:
+                statics = _annotation_statics(module, node)
+            if statics is None and node.name in wrapped:
+                statics = set()
+            if statics is None:
+                continue
+            checker = _StepChecker(module, node, _resolve_statics(node,
+                                                                  statics))
+            checker.check()
+            findings.extend(checker.findings)
+    return findings

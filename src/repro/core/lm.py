@@ -31,6 +31,7 @@ import numpy as np
 
 from .morphing import MorphCore, make_core, morph
 from .protocol import SlotRegistry
+from .redact import describe_array
 
 __all__ = [
     "TokenMorpher",
@@ -61,6 +62,13 @@ class TokenMorpher:
     @property
     def vocab(self) -> int:
         return self.perm.shape[0]
+
+    def __repr__(self) -> str:
+        # Redacted: the permutation IS the tenant's key.
+        return (
+            f"TokenMorpher(perm={describe_array(self.perm)}, "
+            f"inv_perm={describe_array(self.inv_perm)})"
+        )
 
     def morph_tokens(self, tokens: jax.Array) -> jax.Array:
         """Apply pi elementwise (tokens and labels alike)."""
@@ -113,6 +121,13 @@ class EmbeddingMorpher:
     def morph_features(self, x: jax.Array) -> jax.Array:
         """(..., d_in) -> morphed (..., d_in); eq. 2 with m^2=1, alpha=d_in."""
         return morph(x, self.core)
+
+    def __repr__(self) -> str:
+        # Redacted: MorphCore repr is itself redacted; out_perm is secret.
+        return (
+            f"EmbeddingMorpher(core={self.core!r}, "
+            f"out_perm={describe_array(self.out_perm)})"
+        )
 
 
 def fuse_aug_projection(w_in: jax.Array, morpher: EmbeddingMorpher) -> jax.Array:
@@ -204,6 +219,17 @@ class LMSession:
             raise ValueError("session has no continuous (embedding) lane")
         return self.embed_morpher.morph_features(x) @ jnp.asarray(
             self.aug_projection
+        )
+
+    def __repr__(self) -> str:
+        # Redacted: every array here is either a tenant secret or fused
+        # from one — shapes/dtypes + digests only.
+        return (
+            f"LMSession(morpher={self.morpher!r}, "
+            f"embedding={describe_array(self.embedding)}, "
+            f"embed_morpher={self.embed_morpher!r}, "
+            f"aug_projection={describe_array(self.aug_projection)}, "
+            f"head={describe_array(self.head)})"
         )
 
 
@@ -358,6 +384,7 @@ class LMSessionRegistry(SlotRegistry):
             arrays["aug_projection"] = np.asarray(sess.aug_projection)
             if sess.embed_morpher.out_perm is not None:
                 arrays["embed_out_perm"] = np.asarray(sess.embed_morpher.out_perm)
+        # analysis: declassified(per-session crash state: packed into the registry snapshot, never serialized elsewhere)
         return {"has_head": sess.head is not None}, arrays
 
     def _session_from_state(

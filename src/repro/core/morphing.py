@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .redact import describe_array
+
 __all__ = ["MorphCore", "make_core", "morph", "unmorph", "materialize_M"]
 
 
@@ -47,6 +49,14 @@ class MorphCore:
     @property
     def n_features(self) -> int:
         return self.q * self.kappa
+
+    def __repr__(self) -> str:
+        # Redacted: shapes + digest only — core contents are the secret.
+        return (
+            f"MorphCore(matrix={describe_array(self.matrix)}, "
+            f"inverse={describe_array(self.inverse)}, "
+            f"kappa={self.kappa}, mode={self.mode!r})"
+        )
 
 
 def make_core(

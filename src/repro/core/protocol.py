@@ -173,6 +173,14 @@ class SlotRegistry:
     def __len__(self) -> int:
         return len(self._order)
 
+    def __repr__(self) -> str:
+        # Redacted: slot bookkeeping only — never session/secret contents.
+        return (
+            f"<{type(self).__name__} capacity={len(self._slot_tenant)} "
+            f"tenants={len(self._order)} resident={len(self._slot_of)} "
+            f"version={self.version} evictions={self.evictions}>"
+        )
+
     def __contains__(self, tenant_id: str) -> bool:
         return tenant_id in self._sessions
 
@@ -363,6 +371,7 @@ class SlotRegistry:
             "slot_log": [list(e) for e in self._slot_log],
             "sessions": sessions,
         }
+        # analysis: declassified(registry crash image: consumed by restore_state via CheckpointManager only)
         return meta, arrays
 
     def restore_state(self, meta: dict, arrays: dict[str, np.ndarray]) -> None:
@@ -469,6 +478,7 @@ class SessionRegistry(SlotRegistry):
 
     def _session_state(self, sess: MoLeSession) -> tuple[dict, dict[str, np.ndarray]]:
         prov = sess.provider
+        # analysis: declassified(per-session crash state: packed into the registry snapshot, never serialized elsewhere)
         return {}, {
             "core": np.asarray(prov._core.matrix),
             "core_inv": np.asarray(prov._core.inverse),

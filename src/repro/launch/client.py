@@ -99,6 +99,13 @@ class FleetReport:
     conn_drops: int = 0       # connections lost (chaos, resets, timeouts)
     dup_responses: int = 0    # frames for an already-resolved rid (dropped)
     mismatched_dups: int = 0  # ... whose payload disagreed (must stay 0)
+    close_errors: dict = dataclasses.field(default_factory=dict)
+    # ^ error class -> count from connection teardown; teardown failures
+    #   are expected under chaos but never silently swallowed.
+
+    def record_close_error(self, e: BaseException) -> None:
+        cls = type(e).__name__
+        self.close_errors[cls] = self.close_errors.get(cls, 0) + 1
 
     def counts(self) -> dict:
         out: dict[str, int] = {}
@@ -137,6 +144,7 @@ class FleetReport:
             "conn_drops": self.conn_drops,
             "dup_responses": self.dup_responses,
             "mismatched_dups": self.mismatched_dups,
+            "close_errors": dict(self.close_errors),
         }
 
 
@@ -180,8 +188,11 @@ class _Chan:
             self.fleet.report.conn_drops += 1
             try:
                 self.writer.close()
-            except Exception:
-                pass
+            except Exception as e:
+                # Teardown of an already-broken transport is non-fatal,
+                # but the error class lands on the report instead of
+                # vanishing — assert_exactly_once stays the real gate.
+                self.fleet.report.record_close_error(e)
         self.reader = self.writer = None
 
     async def send(self, frame: bytes) -> bool:
@@ -256,15 +267,17 @@ class _Chan:
                     pass
                 try:
                     self.writer.close()
-                except Exception:
-                    pass
+                except Exception as e:
+                    self.fleet.report.record_close_error(e)
             self.reader = self.writer = None
         if self._rtask is not None:
             self._rtask.cancel()
             try:
                 await self._rtask
-            except (asyncio.CancelledError, Exception):
-                pass
+            except asyncio.CancelledError:
+                pass  # our own cancel — the expected path
+            except Exception as e:
+                self.fleet.report.record_close_error(e)
 
 
 def _arrival_gaps(cfg: FleetConfig, rng: np.random.Generator) -> list[float]:

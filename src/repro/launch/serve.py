@@ -412,6 +412,7 @@ def run_lm(args) -> np.ndarray:
                 f", p50={stats.p50_ms:.2f}ms p95={stats.p95_ms:.2f}ms"
             )
         engine_line += ")\n"
+    # analysis: declassified(demo CLI prints the provider-view generation - unmorphed output data, not key material)
     print(
         f"arch={cfg.name} requests={args.requests} tenants={tenants} "
         f"gen={args.gen} mole={'token' if use_mole else 'off'}  "

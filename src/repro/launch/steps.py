@@ -43,6 +43,7 @@ def make_train_step(model: Model, hp: TrainHParams):
     def loss_fn(params, mb):
         return model.loss(params, mb, remat=hp.remat)
 
+    # analysis: jit-step
     def train_step(params, opt_state, batch):
         n_micro = hp.microbatch or 1
         if n_micro > 1:
@@ -77,6 +78,7 @@ def make_train_step(model: Model, hp: TrainHParams):
 def make_prefill_step(model: Model):
     """(params, batch, caches) -> (last-token logits, caches)."""
 
+    # analysis: jit-step
     def prefill_step(params, batch, caches):
         return model.prefill_with_cache(params, batch, caches)
 
@@ -86,6 +88,7 @@ def make_prefill_step(model: Model):
 def make_decode_step(model: Model):
     """(params, token (B,1), t scalar, caches) -> (logits (B,1,V), caches)."""
 
+    # analysis: jit-step
     def decode_step(params, token, t, caches):
         return model.decode(params, token, t, caches)
 
@@ -118,6 +121,7 @@ def make_row_prefill_step(model: Model):
     _check_plain_lm(model, "make_row_prefill_step")
     cfg = model.cfg
 
+    # analysis: jit-step
     def row_prefill_step(params, aug_embed, aug_head, tokens, caches):
         rs = B.RunState(mode="full", write_cache=True)
         h = aug_embed[tokens].astype(cfg.adtype)
@@ -154,6 +158,7 @@ def make_batched_decode_step(model: Model, backend: str | None = None):
     _check_plain_lm(model, "make_batched_decode_step")
     cfg = model.cfg
 
+    # analysis: jit-step
     def batched_decode_step(params, aug_embeds, aug_heads, sidx, tokens, t,
                             caches):
         h0 = aug_embed_rows_grouped(tokens, sidx, aug_embeds, backend=backend)

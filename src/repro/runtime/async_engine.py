@@ -54,6 +54,7 @@ plan snapshots.  Request normalization (payload validation/conversion) runs
 from __future__ import annotations
 
 import heapq
+import logging
 import threading
 import time
 from concurrent.futures import Future
@@ -68,6 +69,8 @@ from . import api
 from .api import DeliveryRequest
 from .engine import MoLeDeliveryEngine
 from .resilience import EngineSnapshot, SimulatedFailure
+
+_log = logging.getLogger(__name__)
 
 __all__ = ["AdmissionError", "AsyncDeliveryEngine", "EngineDeadError"]
 
@@ -514,6 +517,7 @@ class AsyncDeliveryEngine:
             self._cv.notify_all()   # wake the flusher: replayed deadlines
             return out
 
+    # analysis: requires-lock(_cv)
     def _check_alive(self) -> None:
         """Caller holds ``self._cv``.  Raise instead of letting a caller
         wait on a flusher that will never run again."""
@@ -659,6 +663,15 @@ class AsyncDeliveryEngine:
                     # phase 2 fail too: their rows may already be coalesced
                     # into the failed work items.)
                     failed = [(f, error) for f in self._futures.values()]
+                    # Every caught error is re-surfaced into the waiters'
+                    # futures below (or an EngineDeadError on the next
+                    # submit); the log carries the error *class* only —
+                    # `str(error)` may embed repr'd request payloads.
+                    _log.error(
+                        "flush round failed with %s: failing %d waiter(s)",
+                        type(error).__name__, len(failed),
+                    )
+                    self.engine.stats.flush_failures += 1
                     self._futures.clear()
                     self._submitted_at.clear()
                     self._deadline_heap.clear()

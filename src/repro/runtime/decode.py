@@ -355,6 +355,7 @@ class ContinuousDecodeLane:
             arrays[f"seq/{sid:08d}/prompt"] = np.asarray(entry.prompt)
         for sid in meta["finished"]:
             arrays[f"res/{sid:08d}/tokens"] = self._results[sid]
+        # analysis: declassified(crash image: leaves the process only via the atomic CheckpointManager path)
         return EngineSnapshot(arrays=arrays, meta=meta)
 
     def restore(self, snap: EngineSnapshot) -> list[int]:

@@ -128,8 +128,10 @@ class EngineStats:
     # sliced away) but signal a sparse-table layout CPU serving pays for.
     padding_clamp_count: int = 0
     # Resilience counters: flushes whose device phase the straggler monitor
-    # flagged as slow, engine snapshots taken, and restores performed.
+    # flagged as slow, flush rounds that failed all their waiters, engine
+    # snapshots taken, and restores performed.
     degraded_flushes: int = 0
+    flush_failures: int = 0
     snapshots: int = 0
     restores: int = 0
     # Submits whose front-door lock wait exceeded stall_threshold_ms: the
@@ -329,6 +331,7 @@ class EngineStats:
             )
         lines.append(
             f"resilience: degraded_flushes={self.degraded_flushes} "
+            f"flush_failures={self.flush_failures} "
             f"snapshots={self.snapshots} restores={self.restores}"
         )
         served = (
@@ -1009,6 +1012,7 @@ class MoLeDeliveryEngine:
             self.injector.maybe_fail_phase("coalesce")
         return work
 
+    # analysis: forbids-lock(_cv)
     def execute_flush(self, work: _FlushWork) -> None:
         """Phase 2 (device compute, no engine-state mutation): run the jitted
         delivery steps over the work items' microbatches against the plan
@@ -1322,6 +1326,7 @@ class MoLeDeliveryEngine:
             else:
                 arrays[f"req/{rid:08d}/payload"] = np.asarray(req.payload)
         self.stats.snapshots += 1
+        # analysis: declassified(crash image: leaves the process only via the atomic CheckpointManager path)
         return EngineSnapshot(arrays=arrays, meta=meta)
 
     def restore(self, snap: EngineSnapshot) -> list[int]:
@@ -1423,6 +1428,7 @@ class MoLeDeliveryEngine:
         return pending
 
 
+# analysis: forbids-lock(_cv)
 @partial(jax.jit, static_argnames=("kappa", "backend"))
 def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str):
     """morph + Aug forward for one padded microbatch, single compiled graph.
@@ -1446,6 +1452,7 @@ def _delivery_step(x, gidx, cores, augs, kappa: int, backend: str):
     return hint(feats, "dp")
 
 
+# analysis: forbids-lock(_cv)
 @partial(jax.jit, static_argnames=("backend", "want_embed"))
 def _lm_delivery_step(tokens, gidx, perms, aug_embeds, backend: str,
                       want_embed: bool):
@@ -1472,6 +1479,7 @@ def _lm_delivery_step(tokens, gidx, perms, aug_embeds, backend: str,
     return morphed, hint(feats, "dp")
 
 
+# analysis: forbids-lock(_cv)
 @partial(jax.jit, static_argnames=("kappa",))
 def _delivery_step_small(x, cores: tuple, augs: tuple, kappa: int):
     """Small-batch sibling of :func:`_delivery_step`: per-group secrets as

@@ -64,7 +64,12 @@ __all__ = [
 class ProtocolError(RuntimeError):
     """The byte stream violated the frame protocol (garbage, truncation,
     oversize, malformed header/payload).  The connection that produced it
-    cannot be resynchronized and must be closed."""
+    cannot be resynchronized and must be closed.
+
+    Decode-side messages describe violations by type/length/offset only —
+    never by echoing the malformed frame's bytes or header strings, which
+    are attacker-controlled and may be reflected to other parties via
+    reject frames or logs."""
 
 
 MAGIC = b"ML"
@@ -121,7 +126,7 @@ def encode_frame(kind: int, header: Mapping[str, Any],
 def _parse_head(head: bytes, max_frame_bytes: int) -> tuple[int, int, int]:
     magic, kind, hlen, plen = _HEAD.unpack(head)
     if magic != MAGIC:
-        raise ProtocolError(f"bad magic {magic!r} (not a delivery frame)")
+        raise ProtocolError("bad magic (2-byte prefix is not a delivery frame)")
     if kind not in _KINDS:
         raise ProtocolError(f"unknown frame kind {kind}")
     if hlen + plen + _HEAD.size > max_frame_bytes:
@@ -136,7 +141,9 @@ def _parse_body(kind: int, hdr: bytes, payload: bytes) -> tuple[int, dict, bytes
     try:
         header = json.loads(hdr.decode("utf-8"))
     except (UnicodeDecodeError, json.JSONDecodeError) as e:
-        raise ProtocolError(f"frame header is not JSON: {e}") from e
+        raise ProtocolError(
+            f"frame header is not JSON ({type(e).__name__})"
+        ) from e
     if not isinstance(header, dict):
         raise ProtocolError(
             f"frame header must be a JSON object, got {type(header).__name__}"
@@ -212,12 +219,18 @@ def _decode_array(header: Mapping[str, Any], payload: bytes) -> np.ndarray:
     dtype = header.get("dtype")
     shape = header.get("shape")
     if dtype not in _WIRE_DTYPES:
-        raise ProtocolError(f"dtype {dtype!r} is not wire-transportable")
+        raise ProtocolError(
+            f"header dtype is not wire-transportable "
+            f"(allowed: {_WIRE_DTYPES})"
+        )
     if (
         not isinstance(shape, list)
         or not all(isinstance(d, int) and d >= 0 for d in shape)
     ):
-        raise ProtocolError(f"bad payload shape {shape!r}")
+        raise ProtocolError(
+            f"bad payload shape (want a list of non-negative ints, "
+            f"got {type(shape).__name__})"
+        )
     dt = np.dtype(dtype)
     want = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
     if want != len(payload):
@@ -268,13 +281,18 @@ def decode_request(header: Mapping[str, Any],
     """
     rid = header.get("rid")
     if not isinstance(rid, str) or not rid:
-        raise ProtocolError(f"request frame without a rid (got {rid!r})")
+        raise ProtocolError(
+            f"request frame without a rid (want str, got {type(rid).__name__})"
+        )
     tenant = header.get("tenant")
     if not isinstance(tenant, str):
-        raise ProtocolError(f"request frame without a tenant (got {tenant!r})")
+        raise ProtocolError(
+            f"request frame without a tenant "
+            f"(want str, got {type(tenant).__name__})"
+        )
     age = header.get("age_ms", 0.0)
     if not isinstance(age, (int, float)) or isinstance(age, bool) or age < 0:
-        raise ProtocolError(f"bad age_ms {age!r}")
+        raise ProtocolError(f"bad age_ms (got {type(age).__name__})")
     metadata = header.get("metadata", {})
     if not isinstance(metadata, dict):
         raise ProtocolError(f"bad metadata {type(metadata).__name__}")
@@ -320,10 +338,14 @@ def encode_result(rid: str, result: DeliveryResult) -> bytes:
 def decode_result(header: Mapping[str, Any], payload: bytes) -> WireResult:
     rid = header.get("rid")
     if not isinstance(rid, str) or not rid:
-        raise ProtocolError(f"result frame without a rid (got {rid!r})")
+        raise ProtocolError(
+            f"result frame without a rid (want str, got {type(rid).__name__})"
+        )
     engine_rid = header.get("engine_rid")
     if not isinstance(engine_rid, int) or isinstance(engine_rid, bool):
-        raise ProtocolError(f"bad engine_rid {engine_rid!r}")
+        raise ProtocolError(
+            f"bad engine_rid (got {type(engine_rid).__name__})"
+        )
     return WireResult(
         rid=rid,
         engine_rid=engine_rid,
@@ -356,9 +378,14 @@ def decode_reject(header: Mapping[str, Any]) -> WireReject:
     rid = header.get("rid")
     code = header.get("code")
     if not isinstance(rid, str) or not rid:
-        raise ProtocolError(f"reject frame without a rid (got {rid!r})")
+        raise ProtocolError(
+            f"reject frame without a rid (want str, got {type(rid).__name__})"
+        )
     if code not in REJECT_CODES:
-        raise ProtocolError(f"unknown reject code {code!r}")
+        raise ProtocolError(
+            f"unknown reject code (got {type(code).__name__} "
+            f"of length {len(str(code))})"
+        )
     return WireReject(rid=rid, code=code, message=str(header.get("message", "")))
 
 

@@ -1,0 +1,14 @@
+# Fixture: a legitimate snapshot serializer with an audited
+# declassification (suppressed) and one without (reported).  Parsed by
+# repro.analysis in tests — never imported or executed.
+
+
+class Registry:
+    def _session_state(self, sess):
+        arrays = {"perm": sess.morpher.perm}
+        # analysis: declassified(fixture: persisted via the trusted checkpoint path only)
+        return {}, arrays
+
+    def snapshot_state(self):
+        arrays = {"perm": self.sessions[0].morpher.perm}
+        return {}, arrays

@@ -1,0 +1,19 @@
+# Fixture: secret flows into log/print sinks.  Parsed by repro.analysis
+# in tests — never imported or executed.
+import logging
+
+log = logging.getLogger(__name__)
+
+
+def announce(sess):
+    key = sess.morpher.perm
+    log.info(f"registered tenant with perm {key}")
+
+
+def shout(registry, slot):
+    core = registry.slot_core(slot)
+    print("core for slot", slot, core)
+
+
+def fine(sess):
+    log.info("tenant registered, vocab=%d", len(sess.morpher.perm))

@@ -1,0 +1,33 @@
+# Fixture: the PR-4 regression class — a device step reintroduced under
+# the submit lock, directly and via a transitive call chain — plus a
+# requires-lock contract violated.  Parsed by repro.analysis in tests —
+# never imported or executed.
+
+
+class Engine:
+    # analysis: forbids-lock(_cv)
+    def execute_flush(self, work):
+        return work
+
+    # analysis: requires-lock(_cv)
+    def _check_alive(self):
+        pass
+
+    def helper(self):
+        self.execute_flush(None)
+
+    def bad_direct(self):
+        with self._cv:
+            self.execute_flush(None)
+
+    def bad_transitive(self):
+        with self._cv:
+            self.helper()
+
+    def bad_requires(self):
+        self._check_alive()
+
+    def fine(self):
+        with self._cv:
+            self._check_alive()
+        self.execute_flush(None)

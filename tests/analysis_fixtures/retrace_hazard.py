@@ -1,0 +1,36 @@
+# Fixture: every retrace-hazard class inside jit-marked steps, plus a
+# clean step whose branches are on statics and shapes only.  Parsed by
+# repro.analysis in tests — never imported or executed.
+import time
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+@jax.jit
+def bad_step(x, n):
+    t = time.time()
+    if n > 0:
+        x = x + t
+    return jnp.zeros(int(x[0]))
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def mode_step(x, mode):
+    if mode == "fast":  # static: fine
+        return x * 2
+    for k in {"a", "b"}:
+        x = x + len(k)
+    return x
+
+
+def make_step():
+    # analysis: jit-step(static: backend)
+    def inner_step(x, backend):
+        if backend == "jnp":  # static by annotation: fine
+            return x
+        r = jnp.arange(x.sum())
+        return r
+
+    return jax.jit(inner_step, static_argnames=("backend",))

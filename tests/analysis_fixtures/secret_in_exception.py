@@ -1,0 +1,18 @@
+# Fixture: secret flows into exception text / assert messages.  Parsed by
+# repro.analysis in tests — never imported or executed.
+
+
+def check(registry, slot):
+    core = registry.slot_core(slot)
+    if core.sum() == 0:
+        raise ValueError(f"slot {slot} has a degenerate core: {core!r}")
+    return core
+
+
+def guard(sess):
+    assert sess.morpher.perm is not None, f"missing perm {sess.morpher.perm}"
+
+
+def fine(sess):
+    if sess.morpher.perm.shape[0] == 0:
+        raise ValueError(f"empty perm of shape {sess.morpher.perm.shape}")

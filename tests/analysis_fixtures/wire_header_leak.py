@@ -1,0 +1,16 @@
+# Fixture: secret flows into a wire frame (the secret -> wire-header
+# injected violation from the acceptance criteria).  Parsed by
+# repro.analysis in tests — never imported or executed.
+from repro.runtime import wire
+
+
+def reply(sess, rid):
+    return wire.encode_reject(rid, "INVALID", f"perm was {sess.morpher.perm}")
+
+
+def result_meta(sess, rid, arr):
+    return wire.encode_frame(2, {"rid": rid, "perm": list(sess.morpher.perm)})
+
+
+def fine(rid):
+    return wire.encode_reject(rid, "INVALID", "bad shape")

@@ -254,3 +254,55 @@ def test_encode_frame_rejects_bad_producer_input():
         wire.encode_frame(99, {})
     with pytest.raises(ProtocolError, match="not JSON-able"):
         wire.encode_frame(wire.KIND_BYE, {"x": object()})
+
+
+def test_protocol_errors_never_echo_frame_bytes():
+    """Decode-side ProtocolError text must describe violations by
+    type/length only — a crafted garbage frame's bytes and header strings
+    are attacker-controlled and must never be reflected (they reach other
+    parties via reject frames and logs)."""
+    marker = "SECRETPAYLOADBYTES"
+    bmarker = marker.encode()
+
+    # 1. bad magic: the two garbage prefix bytes stay out of the message
+    with pytest.raises(ProtocolError) as ei:
+        wire.decode_frame(b"XY" + bytes(9))
+    assert "XY" not in str(ei.value)
+
+    # 2. non-JSON header carrying the marker bytes
+    garbage = struct.pack(">2sBII", b"ML", wire.KIND_REQ, len(bmarker), 0)
+    with pytest.raises(ProtocolError) as ei:
+        wire.decode_frame(garbage + bmarker)
+    assert marker not in str(ei.value)
+
+    # 3. undecodable (non-UTF8) header: no byte values in the message
+    bad = b"\xff\xfe" + bmarker
+    frame = struct.pack(">2sBII", b"ML", wire.KIND_REQ, len(bad), 0) + bad
+    with pytest.raises(ProtocolError) as ei:
+        wire.decode_frame(frame)
+    assert marker not in str(ei.value) and "0xff" not in str(ei.value)
+
+    # 4. attacker-chosen dtype / shape / rid / tenant strings
+    hdr = {"rid": marker, "tenant": "t", "age_ms": 0,
+           "dtype": marker, "shape": [1]}
+    with pytest.raises(ProtocolError) as ei:
+        wire.decode_request(hdr, b"\x00")
+    assert marker not in str(ei.value)
+    for broken in (
+        {"rid": None, "tenant": marker},
+        {"rid": "r", "tenant": None, "age_ms": marker},
+    ):
+        with pytest.raises(ProtocolError) as ei:
+            wire.decode_request({"dtype": "float32", "shape": [1], **broken},
+                                b"\x00" * 4)
+        assert marker not in str(ei.value)
+
+    # 5. reject-frame code echo
+    with pytest.raises(ProtocolError) as ei:
+        wire.decode_reject({"rid": "r", "code": marker})
+    assert marker not in str(ei.value)
+
+    # 6. result-frame engine_rid echo
+    with pytest.raises(ProtocolError) as ei:
+        wire.decode_result({"rid": "r", "engine_rid": marker}, b"")
+    assert marker not in str(ei.value)
